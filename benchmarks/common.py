@@ -1,0 +1,104 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Default ("fast") settings are CPU-budget-reduced versions of the paper's
+setups (documented per benchmark); pass --full for closer-to-paper scale.
+All benchmarks report *relative* policy behaviour — the paper's actual
+claims — on the synthetic datasets (DESIGN.md §7 data gate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.oac import ChannelConfig
+from repro.data import partition, synthetic
+from repro.fl import FLConfig, train
+from repro.models import cnn
+
+
+@dataclasses.dataclass
+class FLTask:
+    params0: object
+    loss_fn: Callable
+    eval_fn: Callable
+    sample_round: Callable
+    n_clients: int
+    d: int
+
+
+def make_task(fast: bool = True, seed: int = 0, model: str = "mlp",
+              sparsity: float = 0.08, n_classes: int = 10,
+              dir_alpha: float = 0.3) -> FLTask:
+    """Synthetic CIFAR-stand-in classification task (paper Sec. V-A setup,
+    reduced: the paper uses ResNet-18/CIFAR on GPU; we use an MLP/CNN on
+    16x16 synthetic images, N=20 (fast) / 50 (full) clients, Dir(0.3))."""
+    n_clients = 20 if fast else 50
+    img = (16, 16, 1) if fast else (24, 24, 3)
+    spec = synthetic.DatasetSpec("bench", img, n_classes,
+                                 8_000 if fast else 24_000, 1_000,
+                                 noise_std=1.0, sparsity=sparsity)
+    (xtr, ytr), (xte, yte) = synthetic.make_dataset(spec, seed=seed)
+    parts = partition.dirichlet_partition(ytr, n_clients, dir_alpha,
+                                          seed=seed)
+    key = jax.random.PRNGKey(seed)
+    dim = int(np.prod(img))
+    if model == "cnn":
+        params0 = cnn.init_prototype_cnn(key, img, n_classes,
+                                         widths=(12, 16, 24), fc_width=48)
+        apply_fn = cnn.prototype_cnn
+    else:
+        params0 = cnn.init_mlp_classifier(key, dim, n_classes, hidden=(64,))
+        apply_fn = cnn.mlp_classifier
+
+    def loss_fn(p, x, y):
+        return cnn.softmax_xent(apply_fn(p, x), y)
+
+    xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
+
+    @jax.jit
+    def eval_fn(p):
+        return {"acc": cnn.accuracy(apply_fn(p, xte_j), yte_j)}
+
+    def sample_round(t, steps=5):
+        return partition.client_batches(xtr, ytr, parts, 20, steps,
+                                        seed=seed * 7919 + t)
+
+    return FLTask(params0, loss_fn, eval_fn, sample_round, n_clients,
+                  cnn.param_count(params0))
+
+
+PAPER_CHANNEL = ChannelConfig(fading="rayleigh", mean=1.0, noise_std=0.1)
+
+
+def run_policy(task: FLTask, policy: str, rounds: int, *, rho: float = 0.1,
+               k_m_frac: float = 0.75, local_steps: int = 5,
+               lr: float = 0.05, one_bit: bool = False,
+               channel: ChannelConfig = PAPER_CHANNEL,
+               eval_every: int = 0) -> Dict:
+    fl = FLConfig(n_clients=task.n_clients, local_steps=local_steps,
+                  batch_size=20, local_lr=lr, global_lr=lr, rounds=rounds,
+                  policy=policy, compression_ratio=rho, k_m_frac=k_m_frac,
+                  channel=channel, one_bit=one_bit)
+    return train(fl, task.params0, task.loss_fn,
+                 lambda t: task.sample_round(t, steps=local_steps),
+                 eval_fn=task.eval_fn,
+                 eval_every=eval_every or rounds)
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw) -> Tuple[float, object]:
+    out = fn(*args, **kw)            # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6, out
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

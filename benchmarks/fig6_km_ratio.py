@@ -1,0 +1,24 @@
+"""Fig. 6 — FAIR-k test accuracy vs the magnitude share k_M/k.
+
+k_M/k = 1 is Top-k, k_M/k = 0 is Round-Robin; the paper's claim is a wide
+stable plateau (no delicate tuning needed)."""
+
+import time
+
+from benchmarks.common import make_task, run_policy
+
+RATIOS = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+
+def run(fast: bool = True):
+    rounds = 120 if fast else 600
+    task = make_task(fast=fast)
+    rows, detail = [], {}
+    for r in RATIOS:
+        t0 = time.perf_counter()
+        h = run_policy(task, "fairk", rounds, k_m_frac=r)
+        us = (time.perf_counter() - t0) / rounds * 1e6
+        detail[str(r)] = h["acc"][-1]
+        rows.append((f"fig6/km_ratio_{r:.2f}", us,
+                     f"acc={h['acc'][-1]:.3f}"))
+    return rows, detail

@@ -1,0 +1,23 @@
+"""Fig. 7 — effect of the local-iteration count H: training still converges
+at large H (the paper's fine-grained L_g/L_h analysis predicts tolerance to
+long local periods), and FAIR-k stays ahead of Top-k throughout."""
+
+import time
+
+from benchmarks.common import make_task, run_policy
+
+
+def run(fast: bool = True):
+    rounds = 80 if fast else 400
+    hs = (1, 5, 10) if fast else (1, 5, 20)
+    task = make_task(fast=fast)
+    rows, detail = [], {}
+    for h_steps in hs:
+        for policy in ("fairk", "topk"):
+            t0 = time.perf_counter()
+            h = run_policy(task, policy, rounds, local_steps=h_steps)
+            us = (time.perf_counter() - t0) / rounds * 1e6
+            detail[f"H{h_steps}/{policy}"] = h["acc"][-1]
+            rows.append((f"fig7/H{h_steps}/{policy}", us,
+                         f"acc={h['acc'][-1]:.3f}"))
+    return rows, detail

@@ -1,0 +1,25 @@
+"""Fig. 9 — prototype path: one-bit (sign + FSK majority vote) transport at
+rho = 20%, FAIR-k vs baselines, on the EMNIST-like task (the paper's
+prototype trains a 109k-param CNN on EMNIST letters; we reduce image size
+and rounds for the CPU budget — see DESIGN.md §7)."""
+
+import time
+
+from benchmarks.common import make_task, run_policy
+from repro.core.oac import ChannelConfig
+
+
+def run(fast: bool = True):
+    rounds = 80 if fast else 300
+    task = make_task(fast=fast, n_classes=26, model="mlp")
+    channel = ChannelConfig(fading="none", mean=1.0, noise_std=2.0)
+    rows, detail = [], {}
+    for policy in ("fairk", "topk", "toprand"):
+        t0 = time.perf_counter()
+        h = run_policy(task, policy, rounds, rho=0.2, one_bit=True,
+                       lr=0.003, channel=channel)
+        us = (time.perf_counter() - t0) / rounds * 1e6
+        detail[policy] = h["acc"][-1]
+        rows.append((f"fig9/onebit/{policy}", us,
+                     f"acc={h['acc'][-1]:.3f}"))
+    return rows, detail

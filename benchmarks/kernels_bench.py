@@ -1,0 +1,44 @@
+"""Kernel micro-benchmarks: XLA-ref wall time on CPU (the deployable perf
+numbers are TPU-side; interpret-mode timings are correctness-path only)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.kernels import ops
+
+
+def run(fast: bool = True):
+    d = 1 << 20 if fast else 1 << 24
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=d).astype("f4"))
+    g_old = jnp.asarray(rng.normal(size=d).astype("f4"))
+    age = jnp.asarray(rng.integers(0, 40, d).astype("f4"))
+    mask = jnp.asarray((rng.random(d) < 0.1).astype("f4"))
+    votes = jnp.asarray(np.sign(rng.normal(size=(50, 1 << 14))).astype("f4"))
+
+    rows = []
+    us, _ = timed(lambda: jax.block_until_ready(
+        ops.block_topk(x, 4096, 16, mode="ref")))
+    rows.append(("kernels/block_topk_ref", us, f"d={d}"))
+    us, _ = timed(lambda: jax.block_until_ready(
+        ops.two_stage_topk(x, k=d // 100, mode="ref")))
+    rows.append(("kernels/two_stage_topk_ref", us, f"k={d//100}"))
+    us, _ = timed(lambda: jax.block_until_ready(
+        ops.aou_merge(x, g_old, age, mask, mode="ref")))
+    rows.append(("kernels/aou_merge_ref", us,
+                 f"bytes={4*4*d}"))
+    us, _ = timed(lambda: jax.block_until_ready(
+        ops.sign_mv(votes, mode="ref")))
+    rows.append(("kernels/sign_mv_ref", us, f"votes={votes.shape}"))
+    tm = jnp.float32(1.2)
+    ta = jnp.float32(30.0)
+    us, _ = timed(lambda: jax.block_until_ready(
+        ops.fairk_update(x, g_old, age, tm, ta, mode="ref")))
+    rows.append(("kernels/fairk_update_ref", us, f"d={d}"))
+    # exact top-k baseline for context
+    us, _ = timed(lambda: jax.block_until_ready(
+        jax.lax.top_k(jnp.abs(x), d // 100)))
+    rows.append(("kernels/exact_topk_baseline", us, f"k={d//100}"))
+    return rows, {}

@@ -1,0 +1,45 @@
+"""Roofline table — reads the dry-run artifacts produced by
+``repro.launch.dryrun`` and summarizes the three-term roofline per
+(arch x shape x mesh).  Run the dry-run sweep first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_artifacts():
+    out = {}
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            out[os.path.basename(path)[:-5]] = json.load(f)
+    return out
+
+
+def run(fast: bool = True):
+    arts = load_artifacts()
+    rows, detail = [], {}
+    for tag, art in arts.items():
+        r = art.get("roofline", {})
+        if not r:
+            continue
+        dom = r["dominant"]
+        rows.append((
+            f"roofline/{tag}",
+            art.get("compile_s", 0.0) * 1e6,
+            f"dom={dom};step_ms={r['step_time_s']*1e3:.2f};"
+            f"comp_ms={r['compute_s']*1e3:.2f};mem_ms={r['memory_s']*1e3:.2f};"
+            f"coll_ms={r['collective_s']*1e3:.2f};"
+            f"useful={r['usefulness']:.2f};"
+            f"hbm_gb={art['memory']['per_device_total']/2**30:.1f}",
+        ))
+        detail[tag] = r
+    if not rows:
+        rows.append(("roofline/no_artifacts", 0.0,
+                     "run repro.launch.dryrun first"))
+    return rows, detail

@@ -1,0 +1,70 @@
+"""Benchmark orchestrator — one module per paper table/figure plus the
+kernel micro-benchmarks and the dry-run roofline table.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes the full
+detail payload to benchmarks/artifacts/results.json.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig4,fig5]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import (ext_error_feedback, ext_fairk_auto, fig3_aou,
+                        fig4_convergence, fig5_staleness, fig6_km_ratio,
+                        fig7_local_epochs, fig9_prototype, kernels_bench,
+                        roofline_table, table1_lipschitz)
+
+MODULES = {
+    "fig3": fig3_aou, "fig4": fig4_convergence, "fig5": fig5_staleness,
+    "fig6": fig6_km_ratio, "fig7": fig7_local_epochs,
+    "table1": table1_lipschitz, "fig9": fig9_prototype,
+    "kernels": kernels_bench, "roofline": roofline_table,
+    "ext_ef": ext_error_feedback, "ext_auto": ext_fairk_auto,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow on CPU)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of " + ",".join(MODULES))
+    args = ap.parse_args()
+    selected = ([m.strip() for m in args.only.split(",") if m.strip()]
+                or list(MODULES))
+
+    print("name,us_per_call,derived")
+    details, failures = {}, []
+    for name in selected:
+        mod = MODULES[name]
+        t0 = time.time()
+        try:
+            rows, detail = mod.run(fast=not args.full)
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+            continue
+        details[name] = detail
+        for row in rows:
+            print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+    out = os.path.join(os.path.dirname(__file__), "artifacts")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "results.json"), "w") as f:
+        json.dump(details, f, indent=1)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

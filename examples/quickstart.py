@@ -1,0 +1,64 @@
+"""Quickstart: OAC-FL with FAIR-k in ~2 minutes on CPU.
+
+Trains a small classifier federated across 16 clients over a simulated
+Rayleigh-fading multiple-access channel, comparing FAIR-k with Top-k —
+reproducing the paper's headline effect (Fig. 4): magnitude-only selection
+starves coordinates and stalls; FAIR-k's age stage keeps every coordinate
+fresh and converges.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.oac import ChannelConfig
+from repro.data import partition, synthetic
+from repro.fl import FLConfig, train
+from repro.models import cnn
+
+
+def main():
+    spec = synthetic.DatasetSpec("quickstart", (16, 16, 1), 10, 8000, 1000,
+                                 noise_std=1.0, sparsity=0.08)
+    (xtr, ytr), (xte, yte) = synthetic.make_dataset(spec, seed=0)
+    parts = partition.dirichlet_partition(ytr, 16, alpha=0.3, seed=0)
+    params0 = cnn.init_mlp_classifier(jax.random.PRNGKey(0), 256, 10,
+                                      hidden=(64,))
+    print(f"model d={cnn.param_count(params0)} parameters, "
+          f"16 clients, Dir(0.3), rho=10% waveform budget\n")
+
+    def loss_fn(p, x, y):
+        return cnn.softmax_xent(cnn.mlp_classifier(p, x), y)
+
+    xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
+
+    @jax.jit
+    def eval_fn(p):
+        return {"acc": cnn.accuracy(cnn.mlp_classifier(p, xte_j), yte_j)}
+
+    def sample_round(t):
+        return partition.client_batches(xtr, ytr, parts, 20, 5, seed=t)
+
+    for policy in ("fairk", "topk"):
+        fl = FLConfig(n_clients=16, local_steps=5, batch_size=20,
+                      local_lr=0.05, global_lr=0.05, rounds=100,
+                      policy=policy, compression_ratio=0.1,
+                      channel=ChannelConfig(fading="rayleigh", mean=1.0,
+                                            noise_std=0.2))
+        print(f"=== policy: {policy}")
+        h = train(fl, params0, loss_fn, sample_round, eval_fn=eval_fn,
+                  eval_every=25, verbose=True)
+        print(f"    final acc {h['acc'][-1]:.3f}, "
+              f"mean AoU {h['mean_aou'][-1]:.1f}, "
+              f"entries never updated: "
+              f"{(h['sel_count'] == 0).mean()*100:.0f}%\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Checkpointing: pytrees <-> .npz files with structure-preserving keys.
+
+Arrays are stored flat under path-encoded keys; structure (dict/list/tuple
+nesting and scalar leaves) round-trips exactly.  Atomic via tmp+rename.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any, prefix: str = ""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}{_SEP}d:{k}")
+    elif isinstance(tree, (list, tuple)):
+        tag = "l" if isinstance(tree, list) else "t"
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}{_SEP}{tag}:{i}")
+    elif tree is None:
+        yield prefix + f"{_SEP}none", np.zeros((0,))
+    else:
+        yield prefix + f"{_SEP}a", np.asarray(tree)
+
+
+def _insert(root, parts, value):
+    key = parts[0]
+    kind, _, name = key.partition(":")
+    if kind == "a":
+        return value
+    if kind == "none":
+        return None
+    if kind == "d":
+        node = root if isinstance(root, dict) else {}
+        node[name] = _insert(node.get(name), parts[1:], value)
+        return node
+    if kind in ("l", "t"):
+        node = root if isinstance(root, list) else []
+        i = int(name)
+        while len(node) <= i:
+            node.append(None)
+        node[i] = _insert(node[i], parts[1:], value)
+        return node
+    raise ValueError(f"bad checkpoint key part {key!r}")
+
+
+def _fix_tuples(tree, spec):
+    if isinstance(spec, dict):
+        return {k: _fix_tuples(tree[k], spec[k]) for k in spec}
+    if isinstance(spec, list):
+        return [_fix_tuples(t, s) for t, s in zip(tree, spec)]
+    if isinstance(spec, tuple):
+        return tuple(_fix_tuples(t, s) for t, s in zip(tree, spec))
+    return tree
+
+
+def save(path: str, tree: Any, step: Optional[int] = None) -> str:
+    """Save a pytree; if ``step`` given, writes ``<path>/step_<step>.npz``."""
+    if step is not None:
+        os.makedirs(path, exist_ok=True)
+        path = os.path.join(path, f"step_{step:08d}.npz")
+    tree = jax.device_get(tree)
+    flat = dict(_flatten(tree))
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)) or ".",
+                               suffix=".npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)  # tmp already ends in .npz -> no suffix append
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return path
+
+
+def restore(path: str, like: Any = None) -> Any:
+    """Load a pytree; ``like`` (optional) restores tuple-vs-list distinction."""
+    data = np.load(path)
+    root: Any = None
+    for key in data.files:
+        parts = key.split(_SEP)[1:]
+        root = _insert(root, parts, data[key])
+    if like is not None:
+        root = _fix_tuples(root, like)
+    return root
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)\.npz", f))]
+    return max(steps) if steps else None

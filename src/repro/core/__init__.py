@@ -1,0 +1,23 @@
+"""Core library: the paper's contribution (FAIR-k + OAC aggregation) and its
+analysis toolkit (Markov staleness model, smoothness-constant estimation)."""
+
+from repro.core import aou, lipschitz, markov, oac, quantize, selection
+from repro.core.aou import init_age, max_staleness, update_age, update_age_by_indices
+from repro.core.markov import (FairKChain, aou_distribution, expected_staleness,
+                               simulate_aou, steady_state, transition_matrix)
+from repro.core.oac import NOISELESS, PAPER_DEFAULT, ChannelConfig, oac_round
+from repro.core.selection import (POLICIES, age_top_k_indices, fair_k_indices,
+                                  fair_k_mask, mask_from_indices, rand_k_indices,
+                                  round_robin_indices, select_indices,
+                                  top_k_indices, top_rand_indices)
+
+__all__ = [
+    "aou", "lipschitz", "markov", "oac", "quantize", "selection",
+    "init_age", "max_staleness", "update_age", "update_age_by_indices",
+    "FairKChain", "aou_distribution", "expected_staleness", "simulate_aou",
+    "steady_state", "transition_matrix",
+    "NOISELESS", "PAPER_DEFAULT", "ChannelConfig", "oac_round",
+    "POLICIES", "age_top_k_indices", "fair_k_indices", "fair_k_mask",
+    "mask_from_indices", "rand_k_indices", "round_robin_indices",
+    "select_indices", "top_k_indices", "top_rand_indices",
+]

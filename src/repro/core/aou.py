@@ -1,0 +1,43 @@
+"""Age-of-Update (AoU) bookkeeping — paper Eq. (10) and Fig. 5 statistics."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init_age(d: int) -> Array:
+    """A_0 = 0 (paper Alg. 1 input)."""
+    return jnp.zeros((d,), jnp.float32)
+
+
+def update_age(age: Array, mask: Array) -> Array:
+    """Eq. (10):  A_{t+1} = (A_t + 1) ∘ (1 − S_t)."""
+    return (age + 1.0) * (1.0 - mask)
+
+
+def update_age_by_indices(age: Array, idx: Array) -> Array:
+    """Index-form of Eq. (10): increment everywhere, zero the selected."""
+    return (age + 1.0).at[idx].set(0.0)
+
+
+def max_staleness(d: int, k: int, k_m: int) -> int:
+    """Lemma 1's support bound  T = (d − k_M) / k_A  (ceil for non-divisible)."""
+    k_a = k - k_m
+    if k_a <= 0:
+        raise ValueError("max staleness is unbounded when k_a = 0 (pure Top-k)")
+    return -(-(d - k_m) // k_a)
+
+
+def age_stats(age: Array) -> Dict[str, Array]:
+    """Summary statistics used for the Fig. 5a comparison."""
+    return {
+        "mean": jnp.mean(age),
+        "max": jnp.max(age),
+        "p50": jnp.percentile(age, 50.0),
+        "p99": jnp.percentile(age, 99.0),
+    }

@@ -1,0 +1,71 @@
+"""Empirical estimation of the smoothness constants of paper Table I.
+
+Three quantities, estimated by sampling perturbation pairs around a model:
+
+* ``L_tilde^2`` — the *conventional* per-client smoothness
+  ``max_n ||∇f_n(w) − ∇f_n(v)||² / ||w − v||²`` (Assumption of [39], [40]).
+* ``L_g^2``     — global smoothness, Assumption 1:
+  ``||∇f(w) − ∇f(v)||² / ||w − v||²``.
+* ``L_h^2``     — heterogeneity-driven pseudo-Lipschitz constant,
+  Assumption 2: ``||(1/N)Σ_n ∇f_n(w_n) − ∇f(w̄)||² / ((1/N)Σ_n ||w_n − w̄||²)``.
+
+Estimates are suprema over sampled pairs, as in the paper's empirical table.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+Array = jax.Array
+Params = object  # pytree
+GradFn = Callable[[Params, int], Params]  # (params, client_id) -> grad pytree
+
+
+def _flat(tree) -> Array:
+    return ravel_pytree(tree)[0]
+
+
+def estimate_constants(key: Array, params: Params, grad_fn: GradFn,
+                       n_clients: int, n_pairs: int = 8,
+                       perturb_scale: float = 0.05) -> Dict[str, float]:
+    """Estimate (L_tilde^2, L_g^2, L_h^2) around ``params``.
+
+    ``grad_fn(params, n)`` must return client ``n``'s full-batch local
+    gradient; the global gradient is the client average (Eq. 1).
+    """
+    flat0, unravel = ravel_pytree(params)
+    d = flat0.shape[0]
+
+    def grads_all(flat_w: Array) -> Array:
+        w = unravel(flat_w)
+        return jnp.stack([_flat(grad_fn(w, n)) for n in range(n_clients)])
+
+    l_tilde2 = 0.0
+    l_g2 = 0.0
+    l_h2 = 0.0
+    for i in range(n_pairs):
+        key, k1, k2 = jax.random.split(key, 3)
+        delta = perturb_scale * jax.random.normal(k1, (d,))
+        w_a, w_b = flat0, flat0 + delta
+        ga, gb = grads_all(w_a), grads_all(w_b)               # (N, d)
+        dn2 = float(jnp.sum(delta**2))
+        # conventional per-client constant
+        per_client = jnp.sum((ga - gb) ** 2, axis=1) / dn2
+        l_tilde2 = max(l_tilde2, float(per_client.max()))
+        # global constant (Assumption 1)
+        l_g2 = max(l_g2, float(jnp.sum((ga.mean(0) - gb.mean(0)) ** 2) / dn2))
+        # heterogeneity constant (Assumption 2): per-client models w_n
+        noise = perturb_scale * jax.random.normal(k2, (n_clients, d))
+        w_n = flat0[None, :] + noise
+        w_bar = w_n.mean(axis=0)
+        g_mix = jnp.stack([_flat(grad_fn(unravel(w_n[n]), n))
+                           for n in range(n_clients)]).mean(axis=0)
+        g_bar = jnp.stack([_flat(grad_fn(unravel(w_bar), n))
+                           for n in range(n_clients)]).mean(axis=0)
+        denom = float(jnp.mean(jnp.sum((w_n - w_bar[None, :]) ** 2, axis=1)))
+        l_h2 = max(l_h2, float(jnp.sum((g_mix - g_bar) ** 2)) / max(denom, 1e-12))
+    return {"L_tilde2": l_tilde2, "L_g2": l_g2, "L_h2": l_h2}

@@ -1,0 +1,217 @@
+"""Markov-chain staleness analysis of FAIR-k (paper Sec. IV-B, Lemma 1).
+
+States are the positions of a coordinate in the ascending-AoU order,
+0-indexed here (paper uses 1-indexed): state 0..k_a-1 = the AoU-refreshed
+set I_A, state k_a..k-1 = the magnitude-refreshed set I_M, state k..d-1 =
+unselected coordinates ordered by age.  Per the paper, the two "fresh"
+blocks are collapsed onto their first positions (state 0 and state k_a).
+
+The exchange model: each round, k_0 coordinates swap between I_M and its
+complement; p1 = k0/k_M is the leave-probability, p2 = k0/(d − k_M) the
+join-probability (Eq. 15).  Transitions of a generic coordinate follow the
+three cases of Sec. IV-B; step lengths are capped at ell <= min(k0, n_older)
+(footnote 2) and rows are re-normalized.
+
+Everything here is plain numpy float64 — it is analysis code, not a
+training-path component.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+# scipy is not installed in this container; implement the binomial pmf
+# directly (log-space, numerically stable).
+
+
+def _binom_pmf(n: int, p: float, ells: np.ndarray) -> np.ndarray:
+    """Binomial(n, p) pmf evaluated at integer array ``ells`` (log-space)."""
+    ells = np.asarray(ells, dtype=np.int64)
+    if n == 0:
+        return (ells == 0).astype(np.float64)
+    from math import lgamma, log
+    logc = (lgamma(n + 1)
+            - np.array([lgamma(e + 1) for e in ells])
+            - np.array([lgamma(n - e + 1) for e in ells]))
+    if p <= 0.0:
+        return (ells == 0).astype(np.float64)
+    if p >= 1.0:
+        return (ells == n).astype(np.float64)
+    logp = logc + ells * log(p) + (n - ells) * log(1.0 - p)
+    return np.exp(logp)
+
+
+@dataclasses.dataclass(frozen=True)
+class FairKChain:
+    d: int
+    k: int
+    k_m: int
+    k0: int
+
+    @property
+    def k_a(self) -> int:
+        return self.k - self.k_m
+
+    @property
+    def p1(self) -> float:
+        return self.k0 / self.k_m
+
+    @property
+    def p2(self) -> float:
+        return self.k0 / (self.d - self.k_m)
+
+    @property
+    def max_staleness(self) -> int:
+        return -(-(self.d - self.k_m) // self.k_a)
+
+    def __post_init__(self):
+        if not (0 < self.k_m < self.k <= self.d // 2):
+            raise ValueError(
+                "need 0 < k_m < k <= d/2 (paper restricts rho <= 50% and the "
+                f"chain needs both stages), got d={self.d} k={self.k} k_m={self.k_m}")
+        if not 0 < self.k0 < self.k_m:
+            raise ValueError(f"need 0 < k0 < k_m, got k0={self.k0} k_m={self.k_m}")
+
+
+def transition_matrix(chain: FairKChain) -> np.ndarray:
+    """The d x d position-transition matrix P of Sec. IV-B (0-indexed)."""
+    d, k, k_m, k_a = chain.d, chain.k, chain.k_m, chain.k_a
+    p1, p2, k0 = chain.p1, chain.p2, chain.k0
+    P = np.zeros((d, d), np.float64)
+
+    # case 1: freshly AoU-selected block (paper i <= k_a)
+    for i in range(k_a):
+        P[i, k_a] = p2          # pulled into Top-k_M next round
+        P[i, k] = 1.0 - p2      # otherwise starts ageing at the bottom
+
+    # case 2: freshly magnitude-selected block (paper k_a+1 <= i <= k)
+    for i in range(k_a, k):
+        P[i, k_a] = 1.0 - p1    # sticky: stays in I_M
+        P[i, k] = p1            # leaves I_M, starts ageing
+
+    # case 3: ageing coordinates (paper i >= k+1)
+    for i in range(k, d):
+        n_older = d - 1 - i                      # coordinates older than i
+        P[i, k_a] = p2                           # magnitude-selected
+        ell_cap = min(k0, n_older)               # footnote 2
+        ells = np.arange(0, ell_cap + 1)
+        pmf = _binom_pmf(n_older, p2, ells)
+        # ell of the older coordinates get magnitude-selected
+        for ell, q in zip(ells, pmf):
+            stays_prob = (1.0 - p2) * q
+            remaining_older = n_older - ell
+            if remaining_older < k_a:
+                # fewer than k_a coordinates remain older -> i is among the
+                # k_a oldest -> AoU stage resets it (paper transition i -> 1)
+                P[i, 0] += stays_prob
+            else:
+                j = i + k_a + ell                # paper: i -> i + k_a + ell
+                j = min(j, d - 1)                # clamp (paper normalizes)
+                P[i, j] += stays_prob
+
+    # footnote 2: normalize each row over its (truncated) support
+    P /= P.sum(axis=1, keepdims=True)
+    return P
+
+
+def steady_state(P: np.ndarray, tol: float = 1e-12, iters: int = 200000
+                 ) -> np.ndarray:
+    """Solve pi = pi P (Eq. 16) by power iteration."""
+    d = P.shape[0]
+    pi = np.full(d, 1.0 / d)
+    for _ in range(iters):
+        nxt = pi @ P
+        if np.abs(nxt - pi).sum() < tol:
+            pi = nxt
+            break
+        pi = nxt
+    return pi / pi.sum()
+
+
+def aou_distribution(chain: FairKChain) -> Tuple[np.ndarray, np.ndarray]:
+    """Lemma 1: the pmf of the staleness tau.
+
+    Returns (support, pmf) where support = [0, 1, ..., T].  tau = l means the
+    coordinate waits l rounds between consecutive refreshes, i.e. from state
+    i it first re-enters state 0 or state k_a after l+1 transitions.
+    """
+    P = transition_matrix(chain)
+    pi = steady_state(P)
+    d, k_a = chain.d, chain.k_a
+    T = chain.max_staleness
+
+    # P with the two absorbing columns zeroed (paper: P_(1, k_a+1))
+    P0 = P.copy()
+    P0[:, 0] = 0.0
+    P0[:, k_a] = 0.0
+
+    pmf = np.zeros(T + 1)
+    M = np.eye(d)                  # P0^l, starting at l = 0
+    for l in range(T + 1):
+        hit = M @ P                # reach a fresh state on the (l+1)-th step
+        pmf[l] = float(pi @ (hit[:, 0] + hit[:, k_a]))
+        M = M @ P0
+    # numerical truncation: renormalize over the finite support
+    pmf = np.clip(pmf, 0.0, None)
+    pmf /= pmf.sum()
+    return np.arange(T + 1), pmf
+
+
+def expected_staleness(chain: FairKChain) -> float:
+    support, pmf = aou_distribution(chain)
+    return float((support * pmf).sum())
+
+
+def simulate_aou(chain: FairKChain, rounds: int, seed: int = 0,
+                 mode: str = "exchange", momentum: float = 0.9,
+                 burn_in: int = 200) -> np.ndarray:
+    """Empirical AoU distribution under FAIR-k selection (Fig. 3 check).
+
+    Lemma 1 characterizes the *time-averaged* distribution of A_{t,i} over a
+    typical coordinate at a typical (stationary) round, so we histogram the
+    full post-update age vector every round after a burn-in.
+
+    Modes for the magnitude dynamics:
+      * ``"exchange"`` — the Sec. IV-B exchange model itself: each round k0
+        uniformly chosen members of the Top-k_M set swap with k0 uniformly
+        chosen outsiders.  Matches the analytic assumptions exactly.
+      * ``"ar"`` — AR(1) gradient magnitudes (persistence ~= ``momentum``);
+        the actual Top-k_M of |g| is used.  Shows robustness of the analysis
+        to the simplifying exchange assumption.
+    """
+    rng = np.random.default_rng(seed)
+    d, k, k_m, k_a, k0 = chain.d, chain.k, chain.k_m, chain.k_a, chain.k0
+    age = np.zeros(d, dtype=np.int64)
+    counts = np.zeros(chain.max_staleness + 2)
+    if mode == "exchange":
+        in_m = np.zeros(d, dtype=bool)
+        in_m[rng.choice(d, k_m, replace=False)] = True
+    else:
+        mag = np.abs(rng.normal(size=d))
+    for t in range(rounds + burn_in):
+        if mode == "exchange":
+            leave = rng.choice(np.flatnonzero(in_m), k0, replace=False)
+            join = rng.choice(np.flatnonzero(~in_m), k0, replace=False)
+            in_m[leave] = False
+            in_m[join] = True
+            idx_m = np.flatnonzero(in_m)
+        elif mode == "ar":
+            mag = momentum * mag + (1 - momentum) * np.abs(rng.normal(size=d))
+            idx_m = np.argpartition(-mag, k_m)[:k_m]
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        masked_age = age.astype(np.float64)
+        masked_age[idx_m] = -1.0
+        idx_a = np.argpartition(-masked_age, k_a)[:k_a]
+        sel = np.concatenate([idx_m, idx_a])
+        age += 1
+        age[sel] = 0
+        if t >= burn_in:
+            clipped = np.clip(age, 0, len(counts) - 1)
+            counts += np.bincount(clipped, minlength=len(counts))
+    pmf = counts[: chain.max_staleness + 1]
+    s = pmf.sum()
+    return pmf / s if s > 0 else pmf

@@ -1,0 +1,114 @@
+"""Over-the-air computation channel model and gradient aggregation.
+
+Implements the analog multiple-access channel of paper Sec. III-A:
+
+    ǧ_t = (1/N) ( Σ_n h_{n,t} ǧ_{n,t} + ξ_t )                     (Eq. 7)
+    g_t = (1/N) Σ_n h_{n,t} S_t ∘ g_{n,t} + (1 − S_t) ∘ g_{t−1} + ξ̃_t   (Eq. 8)
+
+Fading ``h_{n,t}`` is i.i.d. across clients and rounds with mean ``mu_c`` and
+variance ``sigma_c**2`` (default: Rayleigh with mean 1, the paper's setting).
+Noise ``ξ_t`` has i.i.d. zero-mean entries with variance ``sigma_z**2``.
+
+Only the ``k`` *selected* coordinates ride the channel — the vector that is
+actually transmitted/aggregated is the compacted ``(k,)`` vector, matching
+the physical waveform budget.  This is also what the sharded trainer
+all-reduces, so the collective volume is ``k`` not ``d``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_RAYLEIGH_MEAN = math.sqrt(math.pi / 2.0)  # mean of Rayleigh(sigma=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Wireless channel parameters (paper Sec. III-A / V-A)."""
+
+    fading: str = "rayleigh"          # "rayleigh" | "gaussian" | "none"
+    mean: float = 1.0                 # mu_c
+    std: float = 0.0                  # sigma_c; for rayleigh derived from mean
+    noise_std: float = 0.0            # sigma_z   (paper sims use 1.0)
+
+    @property
+    def mu_c(self) -> float:
+        return self.mean
+
+    @property
+    def sigma_c2(self) -> float:
+        if self.fading == "rayleigh":
+            # Rayleigh scaled to mean mu_c: sigma = mu_c / sqrt(pi/2),
+            # var = (4 - pi)/2 * sigma^2 = mu_c^2 (4 - pi) / pi.
+            return self.mean**2 * (4.0 - math.pi) / math.pi
+        if self.fading == "gaussian":
+            return self.std**2
+        return 0.0
+
+
+NOISELESS = ChannelConfig(fading="none", mean=1.0, noise_std=0.0)
+PAPER_DEFAULT = ChannelConfig(fading="rayleigh", mean=1.0, noise_std=1.0)
+
+
+def sample_fading(key: Array, n_clients: int, cfg: ChannelConfig) -> Array:
+    """Draw h_{n,t} for all clients for one round, shape (n_clients,)."""
+    if cfg.fading == "none":
+        return jnp.full((n_clients,), cfg.mean, jnp.float32)
+    if cfg.fading == "rayleigh":
+        scale = cfg.mean / _RAYLEIGH_MEAN
+        return jax.random.rayleigh(key, scale, shape=(n_clients,),
+                                   dtype=jnp.float32)
+    if cfg.fading == "gaussian":
+        return cfg.mean + cfg.std * jax.random.normal(key, (n_clients,), jnp.float32)
+    raise ValueError(f"unknown fading model {cfg.fading!r}")
+
+
+def oac_aggregate(key: Array, client_values: Array, cfg: ChannelConfig,
+                  fading: Optional[Array] = None) -> Array:
+    """Eq. (7): superpose N compacted client vectors through the channel.
+
+    Args:
+      key: PRNG key for fading + noise.
+      client_values: (N, k) — each client's compacted selected gradient.
+      cfg: channel parameters.
+      fading: optional pre-drawn (N,) fading (e.g. shared across tensors of
+        the same round, as a single radio frame carries all of them).
+    Returns:
+      (k,) aggregated, distorted mean gradient.
+    """
+    n, k = client_values.shape
+    key_h, key_z = jax.random.split(key)
+    h = sample_fading(key_h, n, cfg) if fading is None else fading
+    superposed = jnp.einsum("n,nk->k", h, client_values)
+    if cfg.noise_std > 0.0:
+        superposed = superposed + cfg.noise_std * jax.random.normal(
+            key_z, (k,), client_values.dtype)
+    return superposed / n
+
+
+def reconstruct(g_prev: Array, idx: Array, agg_values: Array) -> Array:
+    """Eq. (8): refresh the selected coordinates, keep the stale rest."""
+    return g_prev.at[idx].set(agg_values)
+
+
+def oac_round(key: Array, g_prev: Array, idx: Array, client_grads: Array,
+              cfg: ChannelConfig) -> Tuple[Array, Array]:
+    """One full uplink round over dense client gradients.
+
+    Args:
+      g_prev: (d,) last reconstructed global gradient.
+      idx: (k,) selected coordinates (shared mask S_t in index form).
+      client_grads: (N, d) dense accumulated local gradients.
+    Returns:
+      (g_t, agg_k): the reconstructed (d,) gradient and the raw (k,) OAC sum.
+    """
+    compacted = client_grads[:, idx]                       # (N, k) — ǧ_{n,t}
+    agg = oac_aggregate(key, compacted, cfg)               # Eq. (7)
+    return reconstruct(g_prev, idx, agg), agg              # Eq. (8)

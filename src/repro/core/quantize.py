@@ -1,0 +1,42 @@
+"""One-bit gradient transport for the SDR prototype path (paper Sec. V-B).
+
+The hardware prototype sends Sign(ǧ_{n,t}) via frequency-shift keying and the
+server recovers each coordinate with a non-coherent majority vote (FSK-MV,
+ref. [50]).  We model the digital essence of that pipeline:
+
+    vote_n  = sign(ǧ_{n,t})                        (client, 1 bit/coordinate)
+    energy  = Σ_n vote_n + noise                   (superposed FSK energies)
+    ǧ_t     = sign(energy)                         (majority vote)
+
+and the server applies a fixed-magnitude update on the selected entries.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def one_bit(x: Array) -> Array:
+    """Client-side quantizer; sign with 0 mapped to +1 (a carrier is always sent)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def fsk_majority_vote(key: Array, votes: Array, noise_std: float = 0.0) -> Array:
+    """Server-side non-coherent majority vote over (N, k) one-bit votes."""
+    energy = votes.sum(axis=0)
+    if noise_std > 0.0:
+        energy = energy + noise_std * jax.random.normal(key, energy.shape,
+                                                        energy.dtype)
+    return jnp.where(energy >= 0, 1.0, -1.0).astype(votes.dtype)
+
+
+def one_bit_round(key: Array, g_prev: Array, idx: Array, client_grads: Array,
+                  noise_std: float = 0.0) -> Array:
+    """One-bit variant of core.oac.oac_round: majority-vote signs on the
+    selected coordinates, stale values elsewhere (used by Fig. 9 benchmark)."""
+    votes = one_bit(client_grads[:, idx])            # (N, k)
+    agg_sign = fsk_majority_vote(key, votes, noise_std)
+    return g_prev.at[idx].set(agg_sign)

@@ -1,0 +1,183 @@
+"""Parameter-selection policies for OAC-FL (paper Sec. III-B).
+
+Every policy consumes the *server-side* state — the last reconstructed
+global gradient ``g`` and the Age-of-Update vector ``age`` — and returns
+either a dense 0/1 mask of shape ``(d,)`` or an index vector of exactly
+``k`` coordinates.  Both forms are jit-compatible with static ``k``/``k_m``.
+
+Policies implemented (paper Sec. V-A baselines):
+
+* ``fair_k``      — the paper's contribution, Eq. (11).
+* ``top_k``       — magnitude-only (``fair_k`` with ``k_m = k``).
+* ``round_robin`` — age-only (``fair_k`` with ``k_m = 0``).
+* ``top_rand``    — Top-``k_M`` + uniform random among the rest [17].
+* ``age_top_k``   — AgeTop-k [47]: top ``r ≥ k`` by magnitude, then the
+  ``k`` oldest among those candidates.
+* ``rand_k``      — uniform random ``k`` (sanity baseline).
+
+Note on Eq. (11): we use the *post-update* age in the age stage (see
+DESIGN.md §1 "Algorithm-fidelity note"); pass the pre-update age explicitly
+if the literal variant is wanted — the functions are pure in their inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EXCLUDED_AGE = jnp.float32(-1.0)  # ages are >= 0; -1 can never win a top-k
+
+
+# ---------------------------------------------------------------------------
+# mask/index helpers
+# ---------------------------------------------------------------------------
+
+def mask_from_indices(idx: Array, d: int) -> Array:
+    """Dense float32 0/1 mask from an index vector."""
+    return jnp.zeros((d,), jnp.float32).at[idx].set(1.0)
+
+
+def _top_indices(score: Array, k: int) -> Array:
+    """Indices of the ``k`` largest entries of ``score`` (deterministic)."""
+    _, idx = jax.lax.top_k(score, k)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# policies — index form (exactly k indices, order: [magnitude stage, age stage])
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "k_m"))
+def fair_k_indices(g: Array, age: Array, *, k: int, k_m: int) -> Array:
+    """FAIR-k, Eq. (11):  Top(g, k_M)  ∪  Top(age ∘ (1 − Top(g, k_M)), k_A).
+
+    Args:
+      g:   last reconstructed global gradient, shape (d,).
+      age: AoU vector, shape (d,), entries >= 0.
+      k:   total selection budget (number of orthogonal waveforms).
+      k_m: magnitude-stage budget, 0 <= k_m <= k.
+    Returns:
+      int32 index vector of shape (k,); the first ``k_m`` entries are the
+      magnitude picks, the remaining ``k − k_m`` the age picks.
+    """
+    d = g.shape[0]
+    if not 0 <= k_m <= k <= d:
+        raise ValueError(f"need 0 <= k_m <= k <= d, got k_m={k_m} k={k} d={d}")
+    k_a = k - k_m
+    if k_m == 0:
+        return _top_indices(age.astype(jnp.float32), k)
+    idx_m = _top_indices(jnp.abs(g), k_m)
+    if k_a == 0:
+        return idx_m
+    # exclude the magnitude picks from the age stage
+    age_f = age.astype(jnp.float32).at[idx_m].set(_EXCLUDED_AGE)
+    idx_a = _top_indices(age_f, k_a)
+    return jnp.concatenate([idx_m, idx_a])
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def top_k_indices(g: Array, *, k: int) -> Array:
+    return _top_indices(jnp.abs(g), k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def round_robin_indices(age: Array, *, k: int) -> Array:
+    """Pure age-priority selection (FAIR-k with k_m = 0).
+
+    ``lax.top_k`` breaks ties toward lower indices, so with all-equal initial
+    ages the schedule cycles deterministically through the coordinates —
+    i.e. classic round robin.
+    """
+    return _top_indices(age.astype(jnp.float32), k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "k_m"))
+def top_rand_indices(key: Array, g: Array, *, k: int, k_m: int) -> Array:
+    """TopRand [17]: Top-``k_M`` by magnitude + uniform random k_A of the rest."""
+    d = g.shape[0]
+    k_a = k - k_m
+    idx_m = _top_indices(jnp.abs(g), k_m) if k_m > 0 else jnp.zeros((0,), jnp.int32)
+    if k_a == 0:
+        return idx_m
+    # random scores; exclude magnitude picks by forcing their score below all
+    score = jax.random.uniform(key, (d,), jnp.float32, minval=0.0, maxval=1.0)
+    if k_m > 0:
+        score = score.at[idx_m].set(-1.0)
+    idx_a = _top_indices(score, k_a)
+    return jnp.concatenate([idx_m, idx_a]) if k_m > 0 else idx_a
+
+
+@functools.partial(jax.jit, static_argnames=("k", "r"))
+def age_top_k_indices(g: Array, age: Array, *, k: int, r: int) -> Array:
+    """AgeTop-k [47]: restrict to the top-``r`` magnitudes (r >= k), then pick
+    the ``k`` oldest among them (magnitude as tie-break via index order)."""
+    if r < k:
+        raise ValueError(f"AgeTop-k needs r >= k, got r={r} k={k}")
+    idx_r = _top_indices(jnp.abs(g), r)                  # candidates
+    cand_age = age.astype(jnp.float32)[idx_r]
+    _, pos = jax.lax.top_k(cand_age, k)                  # oldest k among them
+    return idx_r[pos]
+
+
+@functools.partial(jax.jit, static_argnames=("d", "k"))
+def rand_k_indices(key: Array, d: int, *, k: int) -> Array:
+    score = jax.random.uniform(key, (d,), jnp.float32)
+    return _top_indices(score, k)
+
+
+# ---------------------------------------------------------------------------
+# policies — dense mask form
+# ---------------------------------------------------------------------------
+
+def fair_k_mask(g: Array, age: Array, *, k: int, k_m: int) -> Array:
+    return mask_from_indices(fair_k_indices(g, age, k=k, k_m=k_m), g.shape[0])
+
+
+def top_k_mask(g: Array, *, k: int) -> Array:
+    return mask_from_indices(top_k_indices(g, k=k), g.shape[0])
+
+
+def round_robin_mask(age: Array, *, k: int) -> Array:
+    return mask_from_indices(round_robin_indices(age, k=k), age.shape[0])
+
+
+def top_rand_mask(key: Array, g: Array, *, k: int, k_m: int) -> Array:
+    return mask_from_indices(top_rand_indices(key, g, k=k, k_m=k_m), g.shape[0])
+
+
+def age_top_k_mask(g: Array, age: Array, *, k: int, r: int) -> Array:
+    return mask_from_indices(age_top_k_indices(g, age, k=k, r=r), g.shape[0])
+
+
+def rand_k_mask(key: Array, d: int, *, k: int) -> Array:
+    return mask_from_indices(rand_k_indices(key, d, k=k), d)
+
+
+# ---------------------------------------------------------------------------
+# policy registry (string-driven, used by the FL trainer and launch CLI)
+# ---------------------------------------------------------------------------
+
+POLICIES = ("fairk", "topk", "roundrobin", "toprand", "agetopk", "randk")
+
+
+def select_indices(policy: str, key: Array, g: Array, age: Array, *,
+                   k: int, k_m: int, r: int) -> Array:
+    """Uniform entry point: returns exactly ``k`` selected indices."""
+    if policy == "fairk":
+        return fair_k_indices(g, age, k=k, k_m=k_m)
+    if policy == "topk":
+        return top_k_indices(g, k=k)
+    if policy == "roundrobin":
+        return round_robin_indices(age, k=k)
+    if policy == "toprand":
+        return top_rand_indices(key, g, k=k, k_m=k_m)
+    if policy == "agetopk":
+        return age_top_k_indices(g, age, k=k, r=r)
+    if policy == "randk":
+        return rand_k_indices(key, g.shape[0], k=k)
+    raise ValueError(f"unknown policy {policy!r}; choose from {POLICIES}")

@@ -1,0 +1,14 @@
+"""Data pipeline: synthetic datasets, federated partitioning, token streams."""
+
+from repro.data import partition, synthetic, tokens
+from repro.data.partition import client_batches, dirichlet_partition, iid_partition
+from repro.data.synthetic import (CIFAR10_LIKE, CIFAR100_LIKE, EMNIST_LIKE,
+                                  DatasetSpec, make_dataset)
+from repro.data.tokens import lm_batch, markov_token_batch
+
+__all__ = [
+    "partition", "synthetic", "tokens",
+    "client_batches", "dirichlet_partition", "iid_partition",
+    "CIFAR10_LIKE", "CIFAR100_LIKE", "EMNIST_LIKE", "DatasetSpec",
+    "make_dataset", "lm_batch", "markov_token_batch",
+]

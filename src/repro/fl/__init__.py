@@ -1,0 +1,5 @@
+"""Federated-learning substrate: the OAC-FL trainer (paper Alg. 1)."""
+
+from repro.fl.trainer import FLConfig, ServerState, init_server, make_fl_step, train
+
+__all__ = ["FLConfig", "ServerState", "init_server", "make_fl_step", "train"]

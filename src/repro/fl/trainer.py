@@ -1,0 +1,210 @@
+"""OAC-FL training loop (paper Algorithm 1), vectorized over clients.
+
+The entire client population runs as one ``vmap``'d computation: every
+client performs ``H`` local SGD steps (Eq. 4), the accumulated local
+gradient (Eq. 5) is sparsified by the shared selection vector (Eq. 6),
+superposed through the fading channel (Eq. 7), reconstructed with the stale
+entries (Eq. 8), and applied to the global model (Eq. 9).  The AoU vector
+evolves by Eq. (10) and the next selection vector by Eq. (11) — or by one of
+the baseline policies.
+
+Selection timing: ``S_{t+1} = SparseSelection(g_t, A_{t+1})`` — the
+post-update age (DESIGN.md §1, algorithm-fidelity note).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+import numpy as np
+
+from repro.core import oac, quantize, selection
+from repro.core.aou import update_age_by_indices
+from repro.core.oac import ChannelConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    n_clients: int = 50
+    local_steps: int = 5            # H
+    batch_size: int = 50            # B
+    local_lr: float = 0.01          # eta_l
+    global_lr: float = 0.01         # eta
+    rounds: int = 200
+    policy: str = "fairk"           # see core.selection.POLICIES
+    compression_ratio: float = 0.1  # rho = k / d
+    k_m_frac: float = 0.75          # k_M / k (paper Sec. V-A)
+    r_frac: float = 1.5             # AgeTop-k candidate ratio r / k
+    channel: ChannelConfig = oac.PAPER_DEFAULT
+    one_bit: bool = False           # prototype mode (FSK majority vote)
+    error_feedback: bool = False    # beyond-paper: clients accumulate the
+                                    # unsent gradient mass and add it back
+                                    # next round (Stich et al. EF-SGD)
+    seed: int = 0
+
+    def budgets(self, d: int, k_m_frac: Optional[float] = None
+                ) -> Tuple[int, int, int]:
+        k = max(2, int(round(self.compression_ratio * d)))
+        k_m = int(round((self.k_m_frac if k_m_frac is None else k_m_frac) * k))
+        if self.policy == "topk":
+            k_m = k
+        if self.policy == "roundrobin":
+            k_m = 0
+        r = max(k, int(round(self.r_frac * k)))
+        return k, k_m, r
+
+
+@dataclasses.dataclass
+class ServerState:
+    w: Array                        # flat global model (d,)
+    g: Array                        # last reconstructed gradient (d,)
+    age: Array                      # AoU vector (d,)
+    sel_count: Array                # per-entry participation counter (Fig. 5b)
+    round: int = 0
+
+
+def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
+                 d: int, k_m_frac: Optional[float] = None):
+    """Build the jitted one-round function.
+
+    ``loss_fn(params, x, y) -> scalar`` is the per-client loss; client data
+    arrives as stacked arrays (N, H, B, ...)."""
+    k, k_m, r = fl.budgets(d, k_m_frac)
+    grad_fn = jax.grad(loss_fn)
+
+    def client_update(w_flat: Array, xs: Array, ys: Array) -> Array:
+        """H local SGD steps; returns the accumulated gradient (Eq. 5)."""
+        def step(w, batch):
+            x, y = batch
+            g_tree = grad_fn(unravel(w), x, y)
+            g_flat = ravel_pytree(g_tree)[0]
+            return w - fl.local_lr * g_flat, None
+        w_final, _ = jax.lax.scan(step, w_flat, (xs, ys))
+        return (w_flat - w_final) / fl.local_lr   # = sum of local gradients
+
+    clients = jax.vmap(client_update, in_axes=(None, 0, 0))
+    policy_name = "fairk" if fl.policy == "fairk_auto" else fl.policy
+
+    @jax.jit
+    def fl_round(key: Array, w: Array, g_prev: Array, age: Array,
+                 sel_count: Array, xs: Array, ys: Array, residual: Array):
+        key_sel, key_ch = jax.random.split(key)
+        idx = selection.select_indices(policy_name, key_sel, g_prev, age,
+                                       k=k, k_m=k_m, r=r)
+        grads = clients(w, xs, ys)                       # (N, d)
+        if fl.error_feedback:
+            # add back last round's unsent mass; shared mask => the residual
+            # is identical across clients and can live on the server side
+            grads = grads + residual[None, :]
+            sent_mask = jnp.zeros_like(residual).at[idx].set(1.0)
+            residual = grads.mean(0) * (1.0 - sent_mask)
+        if fl.one_bit:
+            g_t = quantize.one_bit_round(key_ch, g_prev, idx, grads,
+                                         noise_std=fl.channel.noise_std)
+        else:
+            g_t, _ = oac.oac_round(key_ch, g_prev, idx, grads, fl.channel)
+        w_next = w - fl.global_lr * g_t                  # Eq. (9)
+        age_next = update_age_by_indices(age, idx)       # Eq. (10)
+        sel_count = sel_count.at[idx].add(1.0)
+        return w_next, g_t, age_next, sel_count, residual, idx
+
+    return fl_round
+
+
+def init_server(init_params: Any) -> Tuple[ServerState, Callable]:
+    flat, unravel = ravel_pytree(init_params)
+    d = flat.shape[0]
+    state = ServerState(
+        w=flat,
+        g=jnp.zeros((d,), flat.dtype),
+        age=jnp.zeros((d,), jnp.float32),
+        sel_count=jnp.zeros((d,), jnp.float32),
+    )
+    return state, unravel
+
+
+def gradient_gini(g: np.ndarray) -> float:
+    """Concentration of |g| (0 = uniform, 1 = one coordinate has all mass)."""
+    mags = np.sort(np.abs(np.asarray(g, np.float64)))
+    total = mags.sum()
+    if total <= 0:
+        return 0.0
+    lorenz = np.cumsum(mags) / total
+    return float(1.0 - 2.0 * lorenz.mean())
+
+
+AUTO_KM_LEVELS = (0.25, 0.5, 0.75)
+
+
+def _auto_km_level(gini: float) -> float:
+    """Beyond-paper FAIR-k-auto: heavy-tailed gradients (high Gini) reward
+    magnitude selection; flat spectra reward freshness."""
+    if gini > 0.75:
+        return 0.75
+    if gini > 0.55:
+        return 0.5
+    return 0.25
+
+
+def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
+          sample_round: Callable[[int], Tuple[np.ndarray, np.ndarray]],
+          eval_fn: Optional[Callable] = None, eval_every: int = 20,
+          verbose: bool = False) -> Dict[str, Any]:
+    """Run ``fl.rounds`` communication rounds.
+
+    Args:
+      loss_fn(params, x, y) -> scalar loss.
+      sample_round(t) -> (xs, ys) stacked client batches (N, H, B, ...).
+      eval_fn(params) -> dict of metrics (e.g. test accuracy).
+    Returns a history dict (accuracy curve, mean AoU, selection counts...).
+    """
+    state, unravel = init_server(init_params)
+    d = state.w.shape[0]
+    auto = fl.policy == "fairk_auto"
+    steps = {}
+
+    def get_step(frac):
+        if frac not in steps:
+            steps[frac] = make_fl_step(fl, unravel, loss_fn, d,
+                                       k_m_frac=frac)
+        return steps[frac]
+
+    fl_step = get_step(fl.k_m_frac)
+    key = jax.random.PRNGKey(fl.seed)
+
+    history: Dict[str, Any] = {"round": [], "acc": [], "mean_aou": [],
+                               "max_aou": [], "k": fl.budgets(d)[0], "d": d}
+    w, g, age, sel_count = state.w, state.g, state.age, state.sel_count
+    residual = jnp.zeros_like(state.g)
+    history["km_frac"] = []
+    for t in range(fl.rounds):
+        key, sub = jax.random.split(key)
+        xs, ys = sample_round(t)
+        if auto and t > 0 and t % 10 == 0:
+            fl_step = get_step(_auto_km_level(gradient_gini(g)))
+        history["km_frac"].append(
+            [f for f, st in steps.items() if st is fl_step][0])
+        w, g, age, sel_count, residual, _ = fl_step(
+            sub, w, g, age, sel_count, jnp.asarray(xs), jnp.asarray(ys),
+            residual)
+        history["mean_aou"].append(float(age.mean()))
+        history["max_aou"].append(float(age.max()))
+        if eval_fn is not None and ((t + 1) % eval_every == 0 or t == 0
+                                    or t == fl.rounds - 1):
+            metrics = eval_fn(unravel(w))
+            history["round"].append(t + 1)
+            history["acc"].append(float(metrics.get("acc", np.nan)))
+            if verbose:
+                print(f"  round {t+1:4d}  acc={history['acc'][-1]:.4f}  "
+                      f"meanAoU={history['mean_aou'][-1]:.2f}", flush=True)
+    history["sel_count"] = np.asarray(sel_count)
+    history["final_age"] = np.asarray(age)
+    history["params"] = unravel(w)
+    return history

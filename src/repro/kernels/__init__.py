@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the OAC-FL hot spots (see DESIGN.md §3):
+
+* ``block_topk``  — streaming per-block magnitude candidates (stage 1 of
+  scalable FAIR-k selection over ~1e8-coordinate gradients).
+* ``aou_merge``   — fused Eq. (8) gradient merge + Eq. (10) AoU update
+  (single HBM pass over the server's d-length state).
+* ``sign_mv``     — FSK majority-vote aggregation (one-bit prototype path).
+* ``fairk_update`` — fused threshold-FAIR-k server phase (mask + Eq. 8 merge
+  + Eq. 10 age update in one HBM pass; the sharded trainer's hot loop).
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a dispatching wrapper in
+``ops.py`` (pallas on TPU / interpret in kernel tests / XLA ref elsewhere).
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import (aou_merge, block_topk, fairk_update, sign_mv,
+                               two_stage_topk, global_topk_from_candidates)
+
+__all__ = ["ops", "ref", "aou_merge", "block_topk", "fairk_update",
+           "sign_mv", "two_stage_topk", "global_topk_from_candidates"]

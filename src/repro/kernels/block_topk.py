@@ -1,0 +1,69 @@
+"""Pallas kernel: per-VMEM-block top-m magnitude candidates.
+
+This is the TPU-scalable first stage of FAIR-k's magnitude selection for
+models whose gradient does not fit a single ``lax.top_k`` (d ~ 1e8+): each
+grid step streams one block of the flat gradient HBM->VMEM, computes its
+top-m |.| entries with an iterative max-and-mask loop (m is small and
+static), and writes the (value, global index) candidates.  The host-side
+second stage (ops.global_topk_from_candidates) thresholds the candidate
+pool — exact whenever no block holds more than m of the global top-k, a
+standard two-stage selection guarantee.
+
+Grid: 1-D over blocks.  VMEM working set per step = block_size * 4 B
+(+ m * 8 B outputs), hardware-aligned to the 8x128 VPU lanes when
+block_size is a multiple of 1024.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+NEG = -1.0  # |x| >= 0, so -1 can never be selected
+
+
+def _block_topk_kernel(x_ref, vals_ref, idxs_ref, *, m: int,
+                       block_size: int):
+    bid = pl.program_id(0)
+    x = jnp.abs(x_ref[...])                       # (block_size,)
+    base = bid * block_size
+    local_iota = jax.lax.iota(jnp.int32, block_size)
+
+    def body(i, carry):
+        x_masked, = carry
+        top = jnp.max(x_masked)
+        arg = jnp.argmax(x_masked).astype(jnp.int32)
+        vals_ref[i] = top
+        idxs_ref[i] = base + arg
+        x_masked = jnp.where(local_iota == arg, NEG, x_masked)
+        return (x_masked,)
+
+    jax.lax.fori_loop(0, m, body, (x,))
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "m", "interpret"))
+def block_topk_pallas(x: Array, block_size: int, m: int,
+                      interpret: bool = False) -> Tuple[Array, Array]:
+    """x: (d,), d % block_size == 0 -> (vals, idxs) each (nblocks, m)."""
+    d = x.shape[0]
+    if d % block_size:
+        raise ValueError(f"d={d} not divisible by block_size={block_size}")
+    nb = d // block_size
+    kernel = functools.partial(_block_topk_kernel, m=m, block_size=block_size)
+    vals, idxs = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_size,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((m,), lambda i: (i,)),
+                   pl.BlockSpec((m,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nb * m,), jnp.float32),
+                   jax.ShapeDtypeStruct((nb * m,), jnp.int32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+    return vals.reshape(nb, m), idxs.reshape(nb, m)

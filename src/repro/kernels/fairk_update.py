@@ -1,0 +1,71 @@
+"""Pallas kernel: fused threshold-FAIR-k server update (production path).
+
+The sharded trainer's per-shard server phase (launch.steps._leaf_server_update)
+is a chain of d-length elementwise ops: magnitude mask (>= theta_M), age+
+jitter mask (>= theta_A), Eq. (8) stale merge, Eq. (10) AoU update.  Left to
+XLA that is ~6 HBM passes over the shard; fused it is one pass reading
+(g, g_prev, age) and writing (g_t, age') — the bandwidth-bound server hot
+loop at d/256 ~ 10^9 coordinates per device.
+
+Thresholds are scalars estimated outside (sampled quantiles); the index
+jitter for integer-age tie-breaking is regenerated inside the kernel from
+the global coordinate index (identical to launch.steps._index_jitter).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _fairk_update_kernel(g_ref, gp_ref, age_ref, thetas_ref,
+                         gt_ref, age_out_ref, *, block_size: int):
+    bid = pl.program_id(0)
+    theta_m = thetas_ref[0]
+    theta_a = thetas_ref[1]
+    g = g_ref[...].astype(jnp.float32)
+    age = age_ref[...].astype(jnp.float32)
+    # deterministic per-coordinate jitter in [0, 1) (Knuth hash of index)
+    idx = (bid * block_size + jax.lax.iota(jnp.uint32, block_size))
+    jitter = (idx * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
+              ).astype(jnp.float32) / float(1 << 24)
+    mask_m = jnp.abs(g) >= theta_m
+    mask = mask_m | ((age + jitter >= theta_a) & (~mask_m))
+    keep = 1.0 - mask.astype(jnp.float32)
+    gt_ref[...] = (mask.astype(jnp.float32) * g
+                   + keep * gp_ref[...].astype(jnp.float32))
+    age_out_ref[...] = jnp.minimum((age + 1.0) * keep, 120.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def fairk_update_pallas(g: Array, g_prev: Array, age: Array, theta_m: Array,
+                        theta_a: Array, block_size: int = 65536,
+                        interpret: bool = False) -> Tuple[Array, Array]:
+    """g/g_prev/age: (d,) -> (g_t (d,), age' (d,)), single fused pass."""
+    d = g.shape[0]
+    block_size = min(block_size, d)
+    if d % block_size:
+        raise ValueError(f"d={d} not divisible by block_size={block_size}")
+    nb = d // block_size
+    thetas = jnp.stack([theta_m.astype(jnp.float32),
+                        theta_a.astype(jnp.float32)])
+    spec = pl.BlockSpec((block_size,), lambda i: (i,))
+    kernel = functools.partial(_fairk_update_kernel, block_size=block_size)
+    g_t, age_out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[spec, spec, spec,
+                  pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((d,), jnp.float32),
+                   jax.ShapeDtypeStruct((d,), jnp.float32)],
+        interpret=interpret,
+    )(g.astype(jnp.float32), g_prev.astype(jnp.float32),
+      age.astype(jnp.float32), thetas)
+    return g_t, age_out

@@ -1,0 +1,93 @@
+"""Dispatching wrappers for the Pallas kernels.
+
+On TPU the real ``pl.pallas_call`` kernels run; elsewhere (this CPU
+container) the kernels execute in ``interpret=True`` mode when explicitly
+requested (tests) or fall through to the pure-jnp oracles in ``ref.py``
+(fast XLA path, used by benchmarks and the dry-run)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.aou_merge import aou_merge_pallas
+from repro.kernels.block_topk import block_topk_pallas
+from repro.kernels.fairk_update import fairk_update_pallas
+from repro.kernels.sign_mv import sign_mv_pallas
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def block_topk(x: Array, block_size: int = 4096, m: int = 16,
+               mode: Optional[str] = None) -> Tuple[Array, Array]:
+    """mode: None (auto) | "pallas" | "interpret" | "ref"."""
+    mode = mode or ("pallas" if _on_tpu() else "ref")
+    if mode == "ref":
+        return ref.block_topk_ref(x, block_size, m)
+    return block_topk_pallas(x, block_size, m, interpret=(mode == "interpret"))
+
+
+def aou_merge(g_new: Array, g_old: Array, age: Array, mask: Array,
+              mode: Optional[str] = None) -> Tuple[Array, Array]:
+    mode = mode or ("pallas" if _on_tpu() else "ref")
+    if mode == "ref":
+        return ref.aou_merge_ref(g_new, g_old, age, mask)
+    return aou_merge_pallas(g_new, g_old, age, mask,
+                            interpret=(mode == "interpret"))
+
+
+def sign_mv(votes: Array, mode: Optional[str] = None) -> Array:
+    mode = mode or ("pallas" if _on_tpu() else "ref")
+    if mode == "ref":
+        return ref.sign_mv_ref(votes)
+    # pad k to a lane-aligned block if needed
+    n, k = votes.shape
+    block = 2048 if k % 2048 == 0 else k
+    return sign_mv_pallas(votes, block_k=block,
+                          interpret=(mode == "interpret"))
+
+
+def global_topk_from_candidates(vals: Array, idxs: Array, k: int
+                                ) -> Tuple[Array, Array]:
+    """Second stage of two-stage top-k: global top-k over the (nb, m)
+    candidate pool produced by ``block_topk``.  Exact whenever every block
+    contributes <= m of the true top-k."""
+    flat_vals = vals.reshape(-1)
+    flat_idxs = idxs.reshape(-1)
+    top_vals, pos = jax.lax.top_k(flat_vals, k)
+    return top_vals, flat_idxs[pos]
+
+
+def two_stage_topk(x: Array, k: int, block_size: int = 4096,
+                   m: Optional[int] = None, mode: Optional[str] = None
+                   ) -> Tuple[Array, Array]:
+    """Scalable |x| top-k: per-block candidates -> global threshold.
+
+    ``m`` defaults to a pool ~4x oversampled relative to a uniform spread
+    of the top-k across blocks (keeps the approximation error negligible;
+    exactness is guaranteed when no block holds more than m winners)."""
+    nb = x.shape[0] // block_size
+    if m is None:
+        m = min(block_size, max(4, (4 * k + nb - 1) // nb))
+    vals, idxs = block_topk(x, block_size, m, mode=mode)
+    return global_topk_from_candidates(vals, idxs, k)
+
+
+def fairk_update(g: Array, g_prev: Array, age: Array, theta_m, theta_a,
+                 mode: Optional[str] = None) -> Tuple[Array, Array]:
+    """Fused threshold-FAIR-k server update (see kernels.fairk_update)."""
+    mode = mode or ("pallas" if _on_tpu() else "ref")
+    tm = jnp.asarray(theta_m, jnp.float32)
+    ta = jnp.asarray(theta_a, jnp.float32)
+    if mode == "ref":
+        return ref.fairk_update_ref(g, g_prev, age, tm, ta)
+    return fairk_update_pallas(g, g_prev, age, tm, ta,
+                               interpret=(mode == "interpret"))

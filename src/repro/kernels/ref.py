@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference and
+the XLA-native fallback used when not running on TPU)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def block_topk_ref(x: Array, block_size: int, m: int) -> Tuple[Array, Array]:
+    """Per-block top-m magnitudes.
+
+    x: (d,) with d % block_size == 0.  Returns (vals, idxs) of shape
+    (d // block_size, m): the m largest |x| per contiguous block and their
+    *global* indices."""
+    d = x.shape[0]
+    nb = d // block_size
+    xb = jnp.abs(x).reshape(nb, block_size)
+    vals, local_idx = jax.lax.top_k(xb, m)
+    idxs = local_idx + (jnp.arange(nb) * block_size)[:, None]
+    return vals, idxs.astype(jnp.int32)
+
+
+def aou_merge_ref(g_new: Array, g_old: Array, age: Array, mask: Array
+                  ) -> Tuple[Array, Array]:
+    """Fused Eq. (8) merge + Eq. (10) AoU update (one pass over 4 vectors).
+
+    g = mask*g_new + (1-mask)*g_old;  age' = (age+1)*(1-mask)."""
+    g = mask * g_new + (1.0 - mask) * g_old
+    age_next = (age + 1.0) * (1.0 - mask)
+    return g, age_next
+
+
+def sign_mv_ref(votes: Array) -> Array:
+    """FSK majority vote: votes (N, k) one-bit values -> (k,) signs."""
+    s = jnp.where(votes >= 0, 1.0, -1.0).sum(axis=0)
+    return jnp.where(s >= 0, 1.0, -1.0).astype(votes.dtype)
+
+
+def fairk_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
+                     theta_a: Array) -> Tuple[Array, Array]:
+    """Oracle for the fused threshold-FAIR-k server update (one shard)."""
+    d = g.shape[0]
+    g32 = g.astype(jnp.float32)
+    age32 = age.astype(jnp.float32)
+    idx = jnp.arange(d, dtype=jnp.uint32)
+    jitter = (idx * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
+              ).astype(jnp.float32) / float(1 << 24)
+    mask_m = jnp.abs(g32) >= theta_m
+    mask = (mask_m | ((age32 + jitter >= theta_a) & (~mask_m))
+            ).astype(jnp.float32)
+    keep = 1.0 - mask
+    g_t = mask * g32 + keep * g_prev.astype(jnp.float32)
+    age_next = jnp.minimum((age32 + 1.0) * keep, 120.0)
+    return g_t, age_next

@@ -1,0 +1,42 @@
+"""Pallas kernel: FSK majority-vote aggregation (prototype path, Sec. V-B).
+
+votes (N, k) one-bit client values -> (k,) majority signs.  Each grid step
+loads a (N, block_k) tile into VMEM, reduces over the client axis on the
+VPU and writes the sign.  N is small (clients), so the tile is tall-thin;
+block_k a multiple of 128 keeps lanes full.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _sign_mv_kernel(votes_ref, out_ref):
+    v = votes_ref[...]                            # (N, block_k)
+    s = jnp.where(v >= 0, 1.0, -1.0).sum(axis=0)
+    out_ref[...] = jnp.where(s >= 0, 1.0, -1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def sign_mv_pallas(votes: Array, block_k: int = 2048,
+                   interpret: bool = False) -> Array:
+    n, k = votes.shape
+    block_k = min(block_k, k)
+    if k % block_k:
+        raise ValueError(f"k={k} not divisible by block_k={block_k}")
+    nb = k // block_k
+    out = pl.pallas_call(
+        _sign_mv_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((n, block_k), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block_k,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=interpret,
+    )(votes.astype(jnp.float32))
+    return out

@@ -1,0 +1,18 @@
+"""Distributed launch layer: production mesh, sharding specs, step builders,
+multi-pod dry-run and training CLI.
+
+NOTE: ``repro.launch.dryrun`` must be the process entry point when the
+512-device placeholder mesh is wanted — it sets XLA_FLAGS before any jax
+import.  Do not import it from library code."""
+
+from repro.launch import mesh, sharding, steps
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.steps import (OacServerConfig, StepBundle,
+                                init_server_state, make_fl_oac_step,
+                                make_prefill_step, make_serve_step,
+                                make_train_step)
+
+__all__ = ["mesh", "sharding", "steps", "make_production_mesh",
+           "make_test_mesh", "OacServerConfig", "StepBundle",
+           "init_server_state", "make_fl_oac_step", "make_prefill_step",
+           "make_serve_step", "make_train_step"]

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import; everything else sees the real (single-CPU) device."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e target: 16x16 = 256 chips per pod; 2 pods = 512 chips.
+
+    Axes: ``data`` (+ ``pod``) carry the batch / FL-client dimension,
+    ``model`` carries tensor/expert parallelism."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 4):
+    """Small host-device mesh for unit tests (subprocess with 8 devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes across which the global batch (= FL clients) is sharded."""
+    names = mesh.axis_names
+    return tuple(a for a in names if a != "model")
+
+
+def fsdp_axes(mesh) -> tuple:
+    """Mesh axes used for fully-sharded parameter storage."""
+    return batch_axes(mesh)
+
+
+def axis_size(mesh, axes) -> int:
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s

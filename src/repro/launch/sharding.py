@@ -1,0 +1,192 @@
+"""Partition specs for parameters, optimizer state, caches and batches.
+
+Scheme (DESIGN.md §5): 2-D "FSDP x TP" —
+  * the TP dimension of every matmul weight lives on the ``model`` axis
+    (attention heads / FFN hidden / experts / SSM heads / vocab),
+  * the complementary major dimension is fully sharded across the
+    data-parallel axes (``data``, plus ``pod`` when multi-pod) — XLA inserts
+    the per-layer all-gather / reduce-scatter pairs of FSDP inside the layer
+    scan,
+  * dims that do not divide the axis size (odd vocabularies, kv-head counts
+    smaller than the model axis) are replicated — checked explicitly since
+    GSPMD rejects uneven shardings.
+
+Everything is derived from the parameter tree *paths* produced by
+``models.transformer.init_lm``, so new substrates inherit sharding by
+following the same naming conventions.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import axis_size, batch_axes, fsdp_axes
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def param_pspecs(params: Any, cfg: ModelConfig, mesh) -> Any:
+    """PartitionSpec pytree matching ``init_lm(params)``."""
+    fsdp = fsdp_axes(mesh)
+    fsdp_n = axis_size(mesh, fsdp)
+    model_n = mesh.shape["model"]
+
+    def spec_for(path, leaf) -> P:
+        s = _path_str(path)
+        shape = leaf.shape
+        stacked = s.startswith("blocks") or s.startswith("enc_blocks")
+        lead = (None,) if stacked else ()
+        body = shape[1:] if stacked else shape
+
+        def mk(*entries):
+            return P(*(lead + entries))
+
+        # --- embeddings / head -----------------------------------------
+        if s == "embed":
+            v, d = shape
+            return P("model" if _div(v, model_n) else None,
+                     fsdp if _div(d, fsdp_n) else None)
+        if s.startswith("head"):
+            if leaf.ndim == 2:
+                d, v = shape
+                return P(fsdp if _div(d, fsdp_n) else None,
+                         "model" if _div(v, model_n) else None)
+            return P()                                    # bias
+        # --- norms / small vectors --------------------------------------
+        if "norm" in s or leaf.ndim <= (2 if stacked else 1):
+            # includes a_log / d_skip / dt_bias / conv_b / all biases
+            if "conv_x_b" in s or any(t in s for t in ("a_log", "d_skip",
+                                                       "dt_bias")):
+                h = body[-1]
+                return mk(*([None] * (len(body) - 1)),
+                          "model" if _div(h, model_n) else None)
+            return P()
+        # --- MoE experts (stacked rank-4) --------------------------------
+        if "/ffn/" in s and leaf.ndim == 4 and "router" not in s:
+            e, d1, d2 = body
+            if _div(e, model_n):
+                return mk("model", fsdp if _div(d1, fsdp_n) else None, None)
+            # expert count not divisible (granite-moe 40e): TP on hidden dim
+            if s.endswith("wd/w"):                       # (E, F, D)
+                return mk(None, "model" if _div(d1, model_n) else None,
+                          fsdp if _div(d2, fsdp_n) else None)
+            return mk(None, fsdp if _div(d1, fsdp_n) else None,
+                      "model" if _div(d2, model_n) else None)
+        if "router" in s:
+            return mk(fsdp if _div(body[0], fsdp_n) else None, None)
+        # --- projections: TP on the "wide" side ---------------------------
+        if any(t in s for t in ("wk/w", "wv/w", "wbc/w")):
+            # kv-head counts (1-8) never divide the model axis: replicating
+            # the (small) kv projections avoids GSPMD mixed-tiling fallbacks;
+            # the KV *cache* is sharded along its capacity dim instead.
+            d_in, d_out = body
+            return mk(fsdp if _div(d_in, fsdp_n) else None, None)
+        if any(t in s for t in ("wq/w", "wg/w", "wu/w", "wz/w", "wx/w",
+                                "wdt/w")):
+            d_in, d_out = body
+            return mk(fsdp if _div(d_in, fsdp_n) else None,
+                      "model" if _div(d_out, model_n) else None)
+        if any(t in s for t in ("wo/w", "wd/w", "out_proj/w")):
+            d_in, d_out = body
+            return mk("model" if _div(d_in, model_n) else None,
+                      fsdp if _div(d_out, fsdp_n) else None)
+        if "conv_x_w" in s:                              # (K, d_inner)
+            return mk(None, "model" if _div(body[-1], model_n) else None)
+        if "conv_bc_w" in s:
+            return mk(None, None)
+        return P()                                       # fallback: replicate
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def opt_pspecs(opt_state: Any, p_specs: Any) -> Any:
+    """Optimizer-state specs: moment trees mirror the parameter specs."""
+    out = {}
+    for key, val in opt_state.items():
+        if key == "step" or val is None:
+            out[key] = P() if val is not None else None
+        else:
+            out[key] = p_specs
+    return out
+
+
+def server_pspecs(p_specs: Any) -> Any:
+    """OAC server state {g, age} mirrors parameter sharding."""
+    return {"g": p_specs, "age": p_specs}
+
+
+def cache_pspecs(caches: Any, cfg: ModelConfig, mesh,
+                 shard_capacity: bool = False) -> Any:
+    """KV/SSM cache specs.  Leading dim of every leaf is the scan-block dim.
+
+    Attention k/v (n_blocks, B, L, KV, hd): batch on the data axes; heads on
+    ``model`` when divisible, otherwise head_dim on ``model``; optionally the
+    capacity dim on ``data`` (long-context single-sample decode)."""
+    b_axes = batch_axes(mesh)
+    b_n = axis_size(mesh, b_axes)
+    model_n = mesh.shape["model"]
+
+    def spec_for(path, leaf) -> P:
+        s = _path_str(path)
+        shape = leaf.shape
+        if s.endswith("/k") or s.endswith("/v"):
+            # caches shard along the *capacity* dim (always divisible):
+            # scores/PV einsums then reduce over the sharded T dim with two
+            # tiny collectives instead of resharding heads (kv never
+            # divides the model axis).
+            _, b, cap, kv, hd = shape
+            bspec = b_axes if _div(b, b_n) else None
+            cap_axes = (("data", "model") if bspec is None else ("model",))
+            cap_axes = tuple(a for a in cap_axes
+                             if a == "model" or shard_capacity)
+            n_cap = axis_size(mesh, cap_axes)
+            cap_spec = cap_axes if (cap_axes and _div(cap, n_cap)) else None
+            return P(None, bspec, cap_spec, None, None)
+        if s.endswith("ssm"):
+            _, b, h, p_, n_ = shape
+            return P(None, b_axes if _div(b, b_n) else None,
+                     "model" if _div(h, model_n) else None, None, None)
+        if s.endswith("conv_x"):
+            _, b, k_, c = shape
+            return P(None, b_axes if _div(b, b_n) else None, None,
+                     "model" if _div(c, model_n) else None)
+        if s.endswith("conv_bc"):
+            _, b, k_, c = shape
+            return P(None, b_axes if _div(b, b_n) else None, None, None)
+        return P()                                       # pos / idx / ring
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches)
+
+
+def batch_pspec(global_batch: int, mesh, extra_dims: int = 1,
+                leading_micro: bool = False) -> P:
+    """Spec for (micro?, batch, ...) input arrays."""
+    b_axes = batch_axes(mesh)
+    b = b_axes if _div(global_batch, axis_size(mesh, b_axes)) else None
+    entries = ((None,) if leading_micro else ()) + (b,) + (None,) * extra_dims
+    return P(*entries)
+
+
+def to_named(tree_specs: Any, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+Runs real steps (reduced configs on this host's devices) or, with
+``--dryrun``, defers to ``repro.launch.dryrun`` for the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b --reduced \
+      --steps 20 --policy fairk
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.base import InputShape
+from repro.data.tokens import lm_batch
+from repro.launch.steps import OacServerConfig, init_server_state, make_train_step
+from repro.models import transformer as tr
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen2.5-32b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--oac", action="store_true", default=True,
+                    help="enable the FAIR-k OAC server phase")
+    ap.add_argument("--no-oac", dest="oac", action="store_false")
+    ap.add_argument("--rho", type=float, default=0.1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced_variant=args.reduced)
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+    shape = InputShape("custom", args.seq, args.batch, "train")
+    oac = OacServerConfig(rho=args.rho) if args.oac else None
+    bundle = make_train_step(cfg, shape, mesh, n_micro=1, oac=oac, lr=1e-3)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = tr.init_lm(key, cfg)
+    from repro.optim import make_optimizer
+    opt = make_optimizer(bundle.meta["optimizer"], bundle.meta["lr"])
+    opt_state = opt.init(params)
+    server = init_server_state(params)
+
+    step_fn = jax.jit(bundle.fn)
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M-param family "
+          f"variant, {args.steps} steps, oac={'on' if args.oac else 'off'}")
+    with mesh:
+        for t in range(args.steps):
+            toks, labels = lm_batch(args.seed * 1000 + t, args.batch,
+                                    args.seq, cfg.vocab)
+            batch = {"tokens": jnp.asarray(toks)[None],
+                     "labels": jnp.asarray(labels)[None]}
+            if cfg.family == "vlm":
+                batch["embeds"] = jnp.zeros(
+                    (1, args.batch, cfg.n_patches, cfg.d_model),
+                    jnp.dtype(cfg.compute_dtype))
+            if cfg.family == "audio":
+                batch["frames"] = jnp.zeros(
+                    (1, args.batch, cfg.encoder_seq, cfg.d_model),
+                    jnp.dtype(cfg.compute_dtype))
+            t0 = time.time()
+            params, opt_state, server, loss = step_fn(
+                params, opt_state, server, batch, jnp.asarray(t, jnp.int32))
+            print(f"  step {t:3d} loss {float(loss):.4f} "
+                  f"({time.time()-t0:.2f}s)", flush=True)
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

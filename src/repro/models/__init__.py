@@ -1,0 +1,17 @@
+"""Model zoo: transformer stacks (dense / MoE / SSM / hybrid / enc-dec / VLM)
+and the paper's small FL vision models."""
+
+from repro.models import attention, cnn, layers, mamba2, mlp, moe, transformer
+from repro.models.cnn import (accuracy, init_mlp_classifier, init_prototype_cnn,
+                              mlp_classifier, param_count, prototype_cnn,
+                              softmax_xent)
+from repro.models.transformer import (cache_specs, decode_step, forward_train,
+                                      init_caches, init_lm, loss_fn, prefill)
+
+__all__ = [
+    "attention", "cnn", "layers", "mamba2", "mlp", "moe", "transformer",
+    "accuracy", "init_mlp_classifier", "init_prototype_cnn", "mlp_classifier",
+    "param_count", "prototype_cnn", "softmax_xent",
+    "cache_specs", "decode_step", "forward_train", "init_caches", "init_lm",
+    "loss_fn", "prefill",
+]

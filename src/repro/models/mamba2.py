@@ -1,0 +1,224 @@
+"""Mamba-2 (SSD — state-space duality) mixer layer [arXiv:2405.21060].
+
+TPU adaptation: the chunked SSD algorithm is the TPU-native form of the
+selective scan — within a chunk the recurrence is re-expressed as dense
+matmuls (MXU-friendly, quadratic only in the chunk length), and chunks are
+linked by a tiny (H, P, N) state carried through ``lax.scan``.  Decode is the
+exact O(1) recurrent step on the same state.
+
+Layer layout (faithful to the reference implementation):
+  in_proj: D -> [z (d_in), x (d_in), B (G*N), C (G*N), dt (H)]
+  causal depthwise conv (kernel 4) over [x, B, C] channels
+  SSD core with per-head scalar decay A, skip D, softplus dt (+ bias)
+  gated RMSNorm(y * silu(z)) -> out_proj: d_in -> D
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_mamba(key: Array, cfg: ModelConfig, dtype) -> Dict:
+    """Split projections (z/x/bc/dt separated) so every activation carries a
+    cleanly sharded dim under TP: z/x on d_inner (= heads x head_dim), dt on
+    heads, b/c small and replicated.  Total params identical to the fused
+    in_proj formulation."""
+    ks = jax.random.split(key, 8)
+    h = cfg.ssm_heads
+    gn = cfg.ssm_groups * cfg.ssm_state
+    return {
+        "wz": dense_init(ks[0], cfg.d_model, cfg.d_inner, dtype),
+        "wx": dense_init(ks[1], cfg.d_model, cfg.d_inner, dtype),
+        "wbc": dense_init(ks[2], cfg.d_model, 2 * gn, dtype),
+        "wdt": dense_init(ks[3], cfg.d_model, h, dtype),
+        "conv_x_w": (0.1 * jax.random.normal(
+            ks[4], (cfg.ssm_conv, cfg.d_inner), jnp.float32)).astype(dtype),
+        "conv_x_b": jnp.zeros((cfg.d_inner,), dtype),
+        "conv_bc_w": (0.1 * jax.random.normal(
+            ks[5], (cfg.ssm_conv, 2 * gn), jnp.float32)).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * gn,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(cfg.d_inner, dtype),
+        "out_proj": dense_init(ks[6], cfg.d_inner, cfg.d_model, dtype, scale=0.5),
+    }
+
+
+def _expand_groups(t: Array, n_heads: int) -> Array:
+    """(..., G, N) -> (..., H, N) by repeating each group."""
+    g = t.shape[-2]
+    rep = n_heads // g
+    return jnp.repeat(t, rep, axis=-2)
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Optional[Array] = None
+                 ) -> Tuple[Array, Array]:
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). Returns (y, new_state)
+    where state is the trailing K-1 inputs (decode carry)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    y = jax.nn.silu(y + b[None, None, :])
+    return y, xp[:, -(k - 1):]
+
+
+def _segsum(a: Array) -> Array:
+    """a: (..., Q, H) -> (..., H, Q, Q) with out[i,j] = sum_{j<k<=i} a_k."""
+    q = a.shape[-2]
+    cs = jnp.cumsum(a, axis=-2)                                # (..., Q, H)
+    cs = jnp.moveaxis(cs, -1, -2)                              # (..., H, Q)
+    diff = cs[..., :, None] - cs[..., None, :]                 # (..., H, Q, Q)
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, b: Array, c: Array,
+                chunk: int, init_state: Optional[Array] = None
+                ) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (already softplus'ed); a: (H,) negative;
+    b, c: (B, S, H, N).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    s_orig = s
+    if s % chunk:
+        # pad to a chunk multiple; dt=0 on padding => zero state contribution
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+
+    da = dt * a[None, None, :]                                  # (B, S, H)
+    xdt = x * dt[..., None]
+    rs = lambda t: t.reshape((bsz, nc, chunk) + t.shape[2:])
+    da_c, xdt_c, b_c, c_c = rs(da), rs(xdt), rs(b), rs(c)
+
+    da_cs = jnp.cumsum(da_c, axis=2)                            # (B,C,Q,H)
+    # intra-chunk (quadratic in Q, dense matmuls)
+    l_mat = jnp.exp(_segsum(da_c))                              # (B,C,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", c_c, b_c)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores * l_mat, xdt_c)
+
+    # per-chunk input state contribution
+    decay_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)            # (B,C,Q,H)
+    chunk_states = jnp.einsum("bckhn,bckh,bckhp->bchpn",
+                              b_c, decay_end, xdt_c)
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])                   # (B,C,H)
+
+    def scan_body(state, inp):
+        st_c, dec_c = inp                                       # (B,H,P,N),(B,H)
+        out_state = state                                       # entering state
+        new_state = state * dec_c[..., None, None] + st_c
+        return new_state, out_state
+
+    init = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final_state, entering = jax.lax.scan(
+        scan_body, init,
+        (chunk_states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    entering = entering.swapaxes(0, 1)                          # (B,C,H,P,N)
+
+    # inter-chunk contribution
+    in_decay = jnp.exp(da_cs)                                   # (B,C,Q,H)
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", c_c, in_decay, entering)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s_orig]
+    return y, final_state
+
+
+def ssd_step(state: Array, x: Array, dt: Array, a: Array, b: Array, c: Array
+             ) -> Tuple[Array, Array]:
+    """Exact recurrent decode step.
+
+    state: (B,H,P,N); x: (B,H,P); dt: (B,H); b,c: (B,H,N)."""
+    da = jnp.exp(dt * a[None, :])                               # (B,H)
+    state = (state * da[..., None, None]
+             + jnp.einsum("bhp,bhn->bhpn", x * dt[..., None], b))
+    y = jnp.einsum("bhn,bhpn->bhp", c, state)
+    return y, state
+
+
+def mamba_cache_init(batch: int, cfg: ModelConfig, dtype) -> Dict:
+    gn2 = 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), dtype),
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, gn2), dtype),
+    }
+
+
+def mamba_cache_spec(batch: int, cfg: ModelConfig, dtype) -> Dict:
+    sds = jax.ShapeDtypeStruct
+    gn2 = 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": sds((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                   dtype),
+        "conv_x": sds((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "conv_bc": sds((batch, cfg.ssm_conv - 1, gn2), dtype),
+    }
+
+
+def mamba_layer(p: Dict, x: Array, cfg: ModelConfig, *,
+                cache: Optional[Dict] = None, decode: bool = False
+                ) -> Tuple[Array, Optional[Dict]]:
+    """Full mixer. x: (B, S, D) -> (B, S, D). decode => S == 1 with cache."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    g_, n_ = cfg.ssm_groups, cfg.ssm_state
+    z = dense(p["wz"], x, cdt)
+    xc = dense(p["wx"], x, cdt)
+    bc = dense(p["wbc"], x, cdt)
+    dt = dense(p["wdt"], x, cdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])         # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                    # (H,)
+
+    conv_x_state = cache["conv_x"] if cache is not None else None
+    conv_bc_state = cache["conv_bc"] if cache is not None else None
+    xc, new_conv_x = _causal_conv(xc, p["conv_x_w"].astype(cdt),
+                                  p["conv_x_b"].astype(cdt), conv_x_state)
+    bc, new_conv_bc = _causal_conv(bc, p["conv_bc_w"].astype(cdt),
+                                   p["conv_bc_b"].astype(cdt), conv_bc_state)
+    xh = xc.reshape(xc.shape[:-1] + (cfg.ssm_heads, cfg.ssm_head_dim))
+    b = bc[..., :g_ * n_].reshape(bc.shape[:-1] + (g_, n_))
+    c = bc[..., g_ * n_:].reshape(bc.shape[:-1] + (g_, n_))
+    b = _expand_groups(b, cfg.ssm_heads)
+    c = _expand_groups(c, cfg.ssm_heads)
+
+    if decode:
+        y1, new_ssm = ssd_step(cache["ssm"], xh[:, 0], dt[:, 0],
+                               a, b[:, 0], c[:, 0])
+        y = y1[:, None]
+    else:
+        init_state = cache["ssm"] if cache is not None else None
+        y, new_ssm = ssd_chunked(xh, dt, a, b, c, cfg.ssm_chunk, init_state)
+
+    y = y + p["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(x.shape[0], x.shape[1], cfg.d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(p["out_proj"], y, cdt)
+    new_cache = ({"ssm": new_ssm.astype(x.dtype if cache is None else
+                                        cache["ssm"].dtype),
+                  "conv_x": new_conv_x,
+                  "conv_bc": new_conv_bc}
+                 if (cache is not None or decode) else None)
+    return out.astype(x.dtype), new_cache

@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GeLU (whisper / bigcode)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init
+
+Array = jax.Array
+
+
+def init_mlp(key: Array, d_model: int, d_ff: int, mlp_type: str, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "wg": dense_init(ks[0], d_model, d_ff, dtype),
+            "wu": dense_init(ks[1], d_model, d_ff, dtype),
+            "wd": dense_init(ks[2], d_ff, d_model, dtype, scale=0.5),
+        }
+    if mlp_type == "gelu":
+        return {
+            "wu": dense_init(ks[0], d_model, d_ff, dtype, bias=True),
+            "wd": dense_init(ks[1], d_ff, d_model, dtype, scale=0.5, bias=True),
+        }
+    raise ValueError(f"unknown mlp_type {mlp_type!r}")
+
+
+def mlp(p: Dict, x: Array, mlp_type: str, compute_dtype) -> Array:
+    if mlp_type == "swiglu":
+        gate = jax.nn.silu(dense(p["wg"], x, compute_dtype))
+        up = dense(p["wu"], x, compute_dtype)
+        return dense(p["wd"], gate * up, compute_dtype)
+    up = jax.nn.gelu(dense(p["wu"], x, compute_dtype))
+    return dense(p["wd"], up, compute_dtype)

@@ -1,0 +1,443 @@
+"""Decoder-only / encoder-decoder transformer assembly.
+
+Layers are stacked into homogeneous *scan blocks* (``cfg.scan_block`` layers
+per block — 1 for uniform stacks, 8 for jamba's attn:mamba super-block) and
+iterated with ``lax.scan`` so HLO size is O(1) in depth.  Caches mirror the
+block structure and are scanned alongside the parameters.
+
+Public entry points:
+  init_lm / init_caches / cache_specs
+  forward_train(params, cfg, tokens, embeds/frames) -> logits
+  loss_fn(params, cfg, batch) -> (loss, metrics)
+  prefill(params, cfg, tokens, caches, ...) -> (last_logits, caches)
+  decode_step(params, cfg, token, pos, caches, ...) -> (logits, caches)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba2
+from repro.models.layers import (apply_rope, dense, dense_init, embed_init,
+                                 layernorm, layernorm_init, rmsnorm,
+                                 rmsnorm_init)
+from repro.models.mlp import init_mlp, mlp
+from repro.models.moe import init_moe, moe_ffn
+
+Array = jax.Array
+AUX_LOSS_WEIGHT = 0.01
+
+
+def _norm_init(cfg: ModelConfig, dtype):
+    return (layernorm_init(cfg.d_model, dtype) if cfg.norm_type == "layernorm"
+            else rmsnorm_init(cfg.d_model, dtype))
+
+
+def _norm(cfg: ModelConfig, p, x):
+    return (layernorm(p, x, cfg.norm_eps) if cfg.norm_type == "layernorm"
+            else rmsnorm(p, x, cfg.norm_eps))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key: Array, cfg: ModelConfig, i: int, dtype,
+                cross: bool = False) -> Dict:
+    ks = jax.random.split(key, 6)
+    kind = cfg.layer_kind(i)
+    p: Dict[str, Any] = {"norm1": _norm_init(cfg, dtype)}
+    if kind == "attn":
+        p["mixer"] = attn_lib.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            dtype, cfg.qkv_bias)
+    else:
+        p["mixer"] = mamba2.init_mamba(ks[0], cfg, dtype)
+    if cross:
+        p["norm_x"] = _norm_init(cfg, dtype)
+        p["cross"] = attn_lib.init_attention(
+            ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            dtype)
+    p["norm2"] = _norm_init(cfg, dtype)
+    if cfg.layer_is_moe(i):
+        p["ffn"] = init_moe(ks[2], cfg.d_model, cfg.moe_d_ff, cfg.n_experts,
+                            cfg.mlp_type, dtype)
+        if cfg.dense_residual:
+            p["dense_ffn"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                                      cfg.mlp_type, dtype)
+    elif cfg.d_ff:
+        p["ffn"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    return p
+
+
+def _init_block(key: Array, cfg: ModelConfig, block: int, dtype,
+                cross: bool = False) -> list:
+    ks = jax.random.split(key, cfg.scan_block)
+    return [_init_layer(ks[j], cfg, block * cfg.scan_block + j, dtype, cross)
+            for j in range(cfg.scan_block)]
+
+
+def _stack_blocks(key: Array, cfg: ModelConfig, n_blocks: int, dtype,
+                  cross: bool = False):
+    keys = jax.random.split(key, n_blocks)
+    blocks = [_init_block(k, cfg, 0, dtype, cross) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init_lm(key: Array, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "blocks": _stack_blocks(ks[1], cfg, cfg.n_scan_blocks, dtype,
+                                cross=cfg.is_encdec),
+        "final_norm": _norm_init(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[2], cfg.d_model, cfg.vocab, dtype)
+    if cfg.is_encdec:
+        enc_cfg = cfg  # same dims for encoder layers
+        params["enc_blocks"] = _stack_blocks(ks[3], enc_cfg,
+                                             cfg.encoder_layers, dtype)
+        params["enc_norm"] = _norm_init(cfg, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# attention mixer wrapper (mode dispatch)
+# ---------------------------------------------------------------------------
+
+def _attn_mixer(p: Dict, x: Array, cfg: ModelConfig, *, mode: str,
+                cache: Optional[Dict], pos: Array, window: int,
+                causal: bool = True) -> Tuple[Array, Optional[Dict]]:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    q = dense(p["wq"], x, cdt).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = dense(p["wk"], x, cdt).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = dense(p["wv"], x, cdt).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if mode == "decode":
+        q = apply_rope(q, pos[None, None], cfg.rope_theta)
+        k = apply_rope(k, pos[None, None], cfg.rope_theta)
+        new_cache = attn_lib.cache_write(cache, k, v, pos)
+        out = attn_lib.decode_attend(q, new_cache, pos, window=window)
+    else:
+        positions = pos  # (s,) vector for train/prefill
+        q = apply_rope(q, positions[None], cfg.rope_theta)
+        k = apply_rope(k, positions[None], cfg.rope_theta)
+        if mode == "train" and s <= 8192:
+            # plain masked attention differentiates without saving per-chunk
+            # softmax state (see attention.plain_attention)
+            out = attn_lib.plain_attention(q, k, v, positions, positions,
+                                           causal=causal, window=window)
+        else:
+            out = attn_lib.chunked_attention(
+                q, k, v, positions, positions, causal=causal, window=window,
+                causal_skip=cfg.causal_skip)
+        new_cache = (attn_lib.cache_fill(cache, k, v, positions)
+                     if cache is not None else None)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return dense(p["wo"], out, cdt).astype(x.dtype), new_cache
+
+
+def _cross_mixer(p: Dict, x: Array, cfg: ModelConfig, *,
+                 enc_out: Optional[Array], cross_cache: Optional[Dict]
+                 ) -> Tuple[Array, Optional[Dict]]:
+    """Cross-attention: kv from encoder output (or its cached projection)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    q = dense(p["wq"], x, cdt).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    if cross_cache is not None and enc_out is None:
+        k, v = cross_cache["k"], cross_cache["v"]
+        new_cache = cross_cache
+    else:
+        t = enc_out.shape[1]
+        k = dense(p["wk"], enc_out, cdt).reshape(b, t, cfg.n_kv_heads,
+                                                 cfg.head_dim)
+        v = dense(p["wv"], enc_out, cdt).reshape(b, t, cfg.n_kv_heads,
+                                                 cfg.head_dim)
+        new_cache = {"k": k, "v": v} if cross_cache is not None else None
+    t = k.shape[1]
+    qpos = jnp.zeros((s,), jnp.int32)        # no mask: full cross attention
+    kpos = jnp.zeros((t,), jnp.int32)
+    out = attn_lib.chunked_attention(q, k, v, qpos, kpos, causal=False)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return dense(p["wo"], out, cdt).astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# one layer / one scan block
+# ---------------------------------------------------------------------------
+
+def _apply_layer(p: Dict, x: Array, cfg: ModelConfig, i: int, *, mode: str,
+                 cache: Optional[Dict], pos: Array, window: int,
+                 enc_out: Optional[Array], causal: bool = True
+                 ) -> Tuple[Array, Optional[Dict], Array]:
+    kind = cfg.layer_kind(i)
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(cfg, p["norm1"], x)
+    if kind == "attn":
+        attn_cache = cache.get("attn") if cache else None
+        mix, new_attn_cache = _attn_mixer(p["mixer"], h, cfg, mode=mode,
+                                          cache=attn_cache, pos=pos,
+                                          window=window, causal=causal)
+        new_cache = dict(cache, attn=new_attn_cache) if cache else None
+    else:
+        m_cache = cache.get("mamba") if cache else None
+        mix, new_m_cache = mamba2.mamba_layer(p["mixer"], h, cfg,
+                                              cache=m_cache,
+                                              decode=(mode == "decode"))
+        new_cache = dict(cache, mamba=new_m_cache) if cache else None
+    x = x + mix
+    has_cross = "cross" in p and (enc_out is not None
+                                  or (cache is not None and "cross" in cache))
+    if has_cross:
+        hc = _norm(cfg, p["norm_x"], x)
+        cross_cache = cache.get("cross") if cache else None
+        cx, new_cross = _cross_mixer(p["cross"], hc, cfg, enc_out=enc_out,
+                                     cross_cache=cross_cache)
+        x = x + cx
+        if new_cache is not None:
+            new_cache["cross"] = new_cross
+    if "ffn" in p:
+        h2 = _norm(cfg, p["norm2"], x)
+        if cfg.layer_is_moe(i):
+            f, aux = moe_ffn(p["ffn"], h2, top_k=cfg.experts_per_token,
+                             capacity_factor=cfg.capacity_factor,
+                             mlp_type=cfg.mlp_type,
+                             compute_dtype=jnp.dtype(cfg.compute_dtype),
+                             decode_mode=(mode == "decode"),
+                             expert_shard_axis=cfg.expert_shard_axis)
+            if cfg.dense_residual:
+                f = f + mlp(p["dense_ffn"], h2, cfg.mlp_type,
+                            jnp.dtype(cfg.compute_dtype))
+        else:
+            f = mlp(p["ffn"], h2, cfg.mlp_type, jnp.dtype(cfg.compute_dtype))
+        x = x + f
+    return x, new_cache, aux
+
+
+def _apply_block(block_params: list, x: Array, cfg: ModelConfig, *, mode: str,
+                 block_cache, pos: Array, window: int, enc_out, causal=True):
+    """Apply one scan block (cfg.scan_block layers, unrolled).
+
+    For multi-layer super-blocks (jamba) each layer is additionally
+    rematted so the block's backward recompute peaks at ONE layer's
+    intermediates instead of all ``scan_block`` of them."""
+    new_caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+    nest_remat = cfg.remat and mode == "train" and cfg.scan_block > 1
+    for j in range(cfg.scan_block):
+        lc = block_cache[j] if block_cache is not None else None
+
+        def layer_fn(x_, lp_, j=j, lc=lc):
+            return _apply_layer(lp_, x_, cfg, j, mode=mode, cache=lc,
+                                pos=pos, window=window, enc_out=enc_out,
+                                causal=causal)
+        if nest_remat:
+            layer_fn = jax.checkpoint(layer_fn)
+        x, nc, aux = layer_fn(x, block_params[j])
+        new_caches.append(nc)
+        aux_total = aux_total + aux
+    return x, (new_caches if block_cache is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _run_stack(blocks, x: Array, cfg: ModelConfig, *, mode: str, caches,
+               pos: Array, window: int, enc_out, causal: bool = True,
+               remat: Optional[bool] = None, residual_fn=None):
+    """Scan over the stacked blocks. ``caches`` is None or a pytree with a
+    leading n_blocks dim.  Returns (x, new_caches, aux_sum)."""
+    use_remat = (cfg.remat if remat is None else remat) and mode == "train"
+    has_cache = caches is not None
+
+    def body(carry, scanned):
+        x, aux_acc = carry
+        bp, bc = scanned if has_cache else (scanned, None)
+
+        def inner(x_, bp_):
+            return _apply_block(bp_, x_, cfg, mode=mode, block_cache=bc,
+                                pos=pos, window=window, enc_out=enc_out,
+                                causal=causal)
+        if use_remat:
+            inner = jax.checkpoint(inner)
+        x, new_bc, aux = inner(x, bp)
+        if residual_fn is not None:
+            # sequence-parallel residual saves (Megatron SP): the per-layer
+            # remat save is sharded over the model axis on the seq dim
+            x = residual_fn(x)
+        return (x, aux_acc + aux), (new_bc if has_cache else None)
+
+    xs = (blocks, caches) if has_cache else blocks
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, (new_caches if has_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache_builder(cfg: ModelConfig, i: int, batch: int, capacity: int,
+                         dtype, ring: bool, spec: bool,
+                         cross_seq: int = 0) -> Dict:
+    make_attn = attn_lib.cache_spec if spec else attn_lib.init_cache
+    make_mamba = mamba2.mamba_cache_spec if spec else mamba2.mamba_cache_init
+    c: Dict[str, Any] = {}
+    if cfg.layer_kind(i) == "attn":
+        c["attn"] = make_attn(batch, capacity, cfg.n_kv_heads, cfg.head_dim,
+                              dtype, ring)
+    else:
+        c["mamba"] = make_mamba(batch, cfg, dtype)
+    if cfg.is_encdec:
+        if spec:
+            sds = jax.ShapeDtypeStruct
+            c["cross"] = {"k": sds((batch, cross_seq, cfg.n_kv_heads,
+                                    cfg.head_dim), dtype),
+                          "v": sds((batch, cross_seq, cfg.n_kv_heads,
+                                    cfg.head_dim), dtype)}
+        else:
+            c["cross"] = {"k": jnp.zeros((batch, cross_seq, cfg.n_kv_heads,
+                                          cfg.head_dim), dtype),
+                          "v": jnp.zeros((batch, cross_seq, cfg.n_kv_heads,
+                                          cfg.head_dim), dtype)}
+    return c
+
+
+def _build_caches(cfg: ModelConfig, batch: int, capacity: int, dtype,
+                  ring: bool, spec: bool):
+    """Stacked caches: per-scan-block list-of-layer-caches, leading n_blocks."""
+    per_block = [_layer_cache_builder(cfg, j, batch, capacity, dtype, ring,
+                                      spec, cross_seq=cfg.encoder_seq)
+                 for j in range(cfg.scan_block)]
+    n = cfg.n_scan_blocks
+    if spec:
+        return jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((n,) + l.shape, l.dtype), per_block)
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(),
+                        per_block)
+
+
+def init_caches(cfg: ModelConfig, batch: int, capacity: int,
+                dtype=None, ring: bool = False):
+    dtype = jnp.dtype(cfg.compute_dtype) if dtype is None else dtype
+    return _build_caches(cfg, batch, capacity, dtype, ring, spec=False)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int,
+                dtype=None, ring: bool = False):
+    dtype = jnp.dtype(cfg.compute_dtype) if dtype is None else dtype
+    return _build_caches(cfg, batch, capacity, dtype, ring, spec=True)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, tokens: Array) -> Array:
+    # activations (the residual stream, and hence the per-layer remat saves)
+    # live in compute dtype; only params/optimizer state stay higher precision
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.embed_mode == "onehot":
+        # §Perf: the gather's backward is a scatter-add that GSPMD
+        # replicates (full fp32 (V, D) grads per microbatch); as a one-hot
+        # matmul both forward and backward are plain dots that partition
+        # cleanly over (V: model, D: data) at +2·S·V·D flops
+        oh = jax.nn.one_hot(tokens, params["embed"].shape[0], dtype=cdt)
+        return jnp.einsum("bsv,vd->bsd", oh, params["embed"].astype(cdt))
+    return params["embed"][tokens].astype(cdt)
+
+
+def _logits(params, cfg: ModelConfig, x: Array) -> Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x.astype(cdt),
+                          params["embed"].astype(cdt))
+    return dense(params["head"], x, cdt)
+
+
+def _encode(params, cfg: ModelConfig, frames: Array) -> Array:
+    """Whisper encoder over stub frame embeddings (B, enc_seq, D)."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    pos = jnp.arange(x.shape[1])
+    x, _, _ = _run_stack(params["enc_blocks"], x, cfg, mode="train",
+                         caches=None, pos=pos, window=0, enc_out=None,
+                         causal=False)
+    return _norm(cfg, params["enc_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward_train(params, cfg: ModelConfig, tokens: Array,
+                  embeds: Optional[Array] = None,
+                  frames: Optional[Array] = None,
+                  residual_fn=None) -> Tuple[Array, Array]:
+    """Teacher-forced forward. tokens: (B, S_text). ``embeds``: VLM patch
+    embeddings (B, P, D) prepended; ``frames``: audio encoder stub input.
+    Returns (logits over the text positions, aux_loss)."""
+    x = _embed(params, cfg, tokens)
+    n_prefix = 0
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+        n_prefix = embeds.shape[1]
+    enc_out = _encode(params, cfg, frames) if frames is not None else None
+    pos = jnp.arange(x.shape[1])
+    x, _, aux = _run_stack(params["blocks"], x, cfg, mode="train",
+                           caches=None, pos=pos, window=0, enc_out=enc_out,
+                           residual_fn=residual_fn)
+    x = _norm(cfg, params["final_norm"], x)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict,
+            residual_fn=None) -> Tuple[Array, Dict]:
+    logits, aux = forward_train(params, cfg, batch["tokens"],
+                                embeds=batch.get("embeds"),
+                                frames=batch.get("frames"),
+                                residual_fn=residual_fn)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = nll.mean() + AUX_LOSS_WEIGHT * aux
+    return loss, {"nll": nll.mean(), "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, tokens: Array, caches,
+            embeds: Optional[Array] = None,
+            frames: Optional[Array] = None, window: int = 0):
+    """Run the prompt through the stack, filling caches.
+    Returns (last-position logits, caches)."""
+    x = _embed(params, cfg, tokens)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    enc_out = _encode(params, cfg, frames) if frames is not None else None
+    pos = jnp.arange(x.shape[1])
+    x, caches, _ = _run_stack(params["blocks"], x, cfg, mode="prefill",
+                              caches=caches, pos=pos, window=window,
+                              enc_out=enc_out)
+    x = _norm(cfg, params["final_norm"], x[:, -1:])
+    return _logits(params, cfg, x), caches
+
+
+def decode_step(params, cfg: ModelConfig, token: Array, pos: Array, caches,
+                window: int = 0):
+    """One-token decode. token: (B, 1) int32; pos: scalar global position.
+    Returns (logits (B, 1, V), updated caches)."""
+    x = _embed(params, cfg, token)
+    x, caches, _ = _run_stack(params["blocks"], x, cfg, mode="decode",
+                              caches=caches, pos=pos, window=window,
+                              enc_out=None)
+    x = _norm(cfg, params["final_norm"], x)
+    return _logits(params, cfg, x), caches

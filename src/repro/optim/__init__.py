@@ -1,0 +1,12 @@
+"""Minimal optimizer library (optax is not available offline).
+
+API mirrors optax: an optimizer is a pair ``(init_fn, update_fn)`` where
+``update_fn(grads, state, params) -> (updates, state)`` and updates are
+*added* to params (sign convention: updates already contain the minus)."""
+
+from repro.optim.optimizers import (Optimizer, adamw, apply_updates, sgd,
+                                    make_optimizer)
+from repro.optim.schedule import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "apply_updates", "sgd", "make_optimizer",
+           "constant", "cosine_decay", "linear_warmup_cosine"]

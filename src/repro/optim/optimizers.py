@@ -1,0 +1,100 @@
+"""SGD(+momentum) and AdamW in plain JAX, pytree-native."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Grads = Any
+State = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], State]
+    update: Callable[[Grads, State, Params], Tuple[Params, State]]
+
+
+def _to_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = _to_schedule(lr)
+
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params):
+        step = state["step"]
+        lr_t = lr_fn(step)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            eff = (jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+                   if nesterov else mu)
+        else:
+            mu, eff = None, grads
+        updates = jax.tree.map(lambda g: -lr_t * g, eff)
+        return updates, {"step": step + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = _to_schedule(lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "sgdm":
+        kw.setdefault("momentum", 0.9)
+        return sgd(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

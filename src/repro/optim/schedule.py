@@ -1,0 +1,26 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_decay(base: float, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (base - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return fn
+
+
+def linear_warmup_cosine(base: float, warmup: int, total_steps: int,
+                         floor: float = 0.0):
+    cos = cosine_decay(base, max(total_steps - warmup, 1), floor)
+    def fn(step):
+        step_f = step.astype(jnp.float32)
+        warm = base * step_f / max(warmup, 1)
+        return jnp.where(step_f < warmup, warm, cos(step_f - warmup))
+    return fn

@@ -1,0 +1,246 @@
+"""Loop-aware post-SPMD HLO parser.
+
+``compiled.cost_analysis()`` visits every computation once — ``while`` loop
+bodies (our microbatch / layer scans) are not multiplied by trip count, so
+its FLOP/byte numbers understate deep-stacked models by ~n_layers x.  XLA
+embeds ``backend_config={"known_trip_count":{"n":...}}`` on every while it
+can bound (all of ours: scans have static lengths), so we parse
+``compiled.as_text()``, build the computation call graph with per-edge
+multipliers, and accumulate:
+
+* dot FLOPs (2 * prod(result) * prod(lhs contracting dims)),
+* collective bytes per op kind (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute) — post-SPMD shapes are *per-device*,
+  which is exactly the roofline's unit,
+* HBM traffic approximation: result + operand bytes of every instruction in
+  non-fusion computations (fusion internals never touch HBM; the fusion
+  call site's operands/results are counted instead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+# result type: either a tuple "(...)" (may contain /*index=N*/ comments but
+# never parens) or "dtype[dims]{layout}"
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\([^)]*\)|\w+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    result_type: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instruction]
+    param_types: Dict[str, str]
+
+
+def parse_computations(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in hlo_text.splitlines():
+        head = _COMP_HEAD_RE.match(line)
+        if head and line.rstrip().endswith("{"):
+            params = {}
+            for p in re.findall(r"([\w.\-]+):\s*([^,)]+)", head.group(3)):
+                params[p[0]] = p[1].strip()
+            current = Computation(head.group(2), bool(head.group(1)), [],
+                                  params)
+            comps[current.name] = current
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            current.instrs.append(Instruction(m.group(1), m.group(2),
+                                              m.group(3), m.group(4)))
+    return comps
+
+
+def _call_edges(comp: Computation) -> List[Tuple[str, float]]:
+    """(callee computation name, multiplier) edges out of ``comp``."""
+    edges: List[Tuple[str, float]] = []
+    for ins in comp.instrs:
+        if ins.op == "while":
+            trip = 1.0
+            tm = _TRIP_RE.search(ins.rest)
+            if tm:
+                trip = float(tm.group(1))
+            for key in ("body", "condition"):
+                km = re.search(key + r"=%?([\w.\-]+)", ins.rest)
+                if km:
+                    edges.append((km.group(1), trip))
+        elif ins.op in ("fusion", "call", "custom-call", "map", "reduce",
+                        "reduce-window", "sort", "scatter", "select-and-scatter"):
+            for key in ("calls", "to_apply"):
+                km = re.search(key + r"=%?([\w.\-]+)", ins.rest)
+                if km:
+                    edges.append((km.group(1), 1.0))
+        elif ins.op == "conditional":
+            bm = re.search(r"branch_computations=\{([^}]*)\}", ins.rest)
+            if bm:
+                for name in _OPERAND_RE.findall(bm.group(1)):
+                    edges.append((name, 1.0))
+    return edges
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    entry = [c for c in comps.values() if c.is_entry]
+    roots = entry or [next(iter(comps.values()))]
+    for r in roots:
+        mult[r.name] = 1.0
+    # propagate (call graph is a DAG in HLO)
+    order = list(comps)
+    changed = True
+    it = 0
+    while changed and it < 100:
+        changed = False
+        it += 1
+        snapshot = dict(mult)
+        new = defaultdict(float)
+        for r in roots:
+            new[r.name] = 1.0
+        for cname in order:
+            if snapshot.get(cname, 0.0) <= 0.0:
+                continue
+            for callee, m in _call_edges(comps[cname]):
+                if callee in comps:
+                    new[callee] += snapshot[cname] * m
+        for k, v in new.items():
+            if abs(v - mult.get(k, 0.0)) > 1e-9:
+                changed = True
+        mult = new
+    return dict(mult)
+
+
+def _fusion_internal(comps: Dict[str, Computation]) -> set:
+    """Computation names reached only via fusion ``calls=`` edges."""
+    internal = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                km = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                if km:
+                    internal.add(km.group(1))
+    return internal
+
+
+def _dot_flops(ins: Instruction, defs: Dict[str, str]) -> float:
+    out_dims = _shape_dims(ins.result_type)
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    cm = _CONTRACT_RE.search(ins.rest)
+    k = 1
+    if cm and cm.group(1):
+        lhs_name_m = _OPERAND_RE.search(ins.rest)
+        lhs_type = defs.get(lhs_name_m.group(1), "") if lhs_name_m else ""
+        lhs_dims = _shape_dims(lhs_type)
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    return 2.0 * n_out * k
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, float]:
+    """Loop-multiplied per-device metrics from post-SPMD HLO text."""
+    comps = parse_computations(hlo_text)
+    mult = _multipliers(comps)
+    fusion_internal = _fusion_internal(comps)
+
+    flops = 0.0
+    bytes_touched = 0.0
+    coll: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    coll_count: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0.0:
+            continue
+        defs = dict(comp.param_types)
+        for ins in comp.instrs:
+            defs[ins.name] = ins.result_type
+        in_fusion = comp.name in fusion_internal
+        for ins in comp.instrs:
+            res_bytes = _shape_bytes(ins.result_type)
+            if ins.op == "dot":
+                flops += m * _dot_flops(ins, defs)
+            if ins.op in COLLECTIVES:
+                operand_names = _OPERAND_RE.findall(
+                    ins.rest.split(")", 1)[0])
+                op_bytes = sum(_shape_bytes(defs.get(o, ""))
+                               for o in operand_names)
+                coll[ins.op] += m * max(res_bytes, op_bytes)
+                coll_count[ins.op] += m
+            if not in_fusion and ins.op not in ("parameter", "constant",
+                                                "tuple", "get-tuple-element",
+                                                "bitcast"):
+                operand_names = _OPERAND_RE.findall(
+                    ins.rest.split("),", 1)[0])
+                op_bytes = sum(_shape_bytes(defs.get(o, ""))
+                               for o in operand_names[:8])
+                bytes_touched += m * (res_bytes + op_bytes)
+
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_touched,
+        "collective_bytes_per_device": sum(coll.values()),
+        "collective_breakdown": coll,
+        "collective_counts": coll_count,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
+# benches must see the real (single-CPU) device.  Only launch/dryrun.py (a
+# process entry point) forces the 512-device placeholder mesh, and the
+# distributed tests below spawn subprocesses with their own flags.
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,107 @@
+"""Integration tests for the OAC-FL trainer (paper Algorithm 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.oac import ChannelConfig
+from repro.data import partition, synthetic
+from repro.fl import FLConfig, train
+from repro.models import cnn
+
+
+@pytest.fixture(scope="module")
+def task():
+    spec = synthetic.DatasetSpec("t", (8, 8, 1), 4, 1200, 300,
+                                 noise_std=0.8, sparsity=0.1)
+    (xtr, ytr), (xte, yte) = synthetic.make_dataset(spec, seed=0)
+    parts = partition.dirichlet_partition(ytr, 8, 0.3, seed=0)
+    params0 = cnn.init_mlp_classifier(jax.random.PRNGKey(0), 64, 4,
+                                      hidden=(32,))
+
+    def loss_fn(p, x, y):
+        return cnn.softmax_xent(cnn.mlp_classifier(p, x), y)
+
+    @jax.jit
+    def eval_fn(p):
+        return {"acc": cnn.accuracy(cnn.mlp_classifier(p, jnp.asarray(xte)),
+                                    jnp.asarray(yte))}
+
+    def sample_round(t):
+        return partition.client_batches(xtr, ytr, parts, 10, 3, seed=100 + t)
+
+    return params0, loss_fn, eval_fn, sample_round
+
+
+def _run(task, policy, rounds=80, **kw):
+    params0, loss_fn, eval_fn, sample_round = task
+    kw.setdefault("local_lr", 0.05)
+    kw.setdefault("global_lr", 0.05)
+    fl = FLConfig(n_clients=8, local_steps=3, batch_size=10, rounds=rounds,
+                  policy=policy, compression_ratio=0.1,
+                  channel=ChannelConfig(fading="rayleigh", mean=1.0,
+                                        noise_std=0.1), **kw)
+    return train(fl, params0, loss_fn, sample_round, eval_fn=eval_fn,
+                 eval_every=rounds)
+
+
+def test_fairk_learns(task):
+    h = _run(task, "fairk")
+    assert h["acc"][-1] > 0.45, h["acc"]          # chance = 0.25
+
+
+def test_fairk_beats_topk(task):
+    """Fig. 4's headline: FAIR-k converges much faster than Top-k."""
+    h_fair = _run(task, "fairk")
+    h_top = _run(task, "topk")
+    assert h_fair["acc"][-1] > h_top["acc"][-1] + 0.1
+
+
+def test_fairk_lower_staleness_than_toprand(task):
+    """Fig. 5a: FAIR-k roughly halves the average AoU vs TopRand."""
+    h_fair = _run(task, "fairk", rounds=80)
+    h_rand = _run(task, "toprand", rounds=80)
+    assert np.mean(h_fair["mean_aou"][40:]) < 0.75 * np.mean(
+        h_rand["mean_aou"][40:])
+
+def test_topk_starves_entries(task):
+    """Fig. 5b: under Top-k most entries are never selected."""
+    h = _run(task, "topk", rounds=40)
+    frac_never = (h["sel_count"] == 0).mean()
+    assert frac_never > 0.5
+
+
+def test_fairk_covers_all_entries(task):
+    """FAIR-k's age stage guarantees every entry is eventually refreshed."""
+    d = len(_run(task, "fairk", rounds=2)["sel_count"])
+    k, k_m, _ = FLConfig(compression_ratio=0.1).budgets(d)
+    T = -(-(d - k_m) // (k - k_m))
+    h = _run(task, "fairk", rounds=T + 5)
+    assert (h["sel_count"] > 0).all()
+    assert h["max_aou"][-1] <= T
+
+
+def test_one_bit_mode_runs(task):
+    h = _run(task, "fairk", rounds=40, one_bit=True,
+             global_lr=0.002)
+    assert np.isfinite(h["acc"][-1])
+    assert h["acc"][-1] > 0.3
+
+
+def test_budgets():
+    fl = FLConfig(compression_ratio=0.1, k_m_frac=0.75)
+    k, k_m, r = fl.budgets(1000)
+    assert (k, k_m, r) == (100, 75, 150)
+    assert FLConfig(policy="topk").budgets(1000)[1] == 100
+    assert FLConfig(policy="roundrobin").budgets(1000)[1] == 0
+
+
+def test_error_feedback_improves_fairk(task):
+    """Beyond-paper: EF composes with FAIR-k (+acc) but cannot fix Top-k's
+    selection starvation (EF changes what is sent, not what is selected)."""
+    h_ef = _run(task, "fairk", error_feedback=True)
+    h_no = _run(task, "fairk")
+    assert h_ef["acc"][-1] >= h_no["acc"][-1] - 0.02
+    h_topk_ef = _run(task, "topk", error_feedback=True)
+    assert h_topk_ef["acc"][-1] < h_ef["acc"][-1] - 0.1

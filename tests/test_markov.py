@@ -1,0 +1,86 @@
+"""Markov staleness analysis (paper Sec. IV-B, Lemma 1, Fig. 3)."""
+
+import numpy as np
+import pytest
+
+from repro.core import markov
+
+
+@pytest.fixture(scope="module")
+def chain():
+    # Fig. 3 parameters: k=80, rho=0.1 (d=800), k_M/k=0.75, k_0/k_M=0.25
+    return markov.FairKChain(d=800, k=80, k_m=60, k0=15)
+
+
+class TestTransitionMatrix:
+    def test_rows_sum_to_one(self, chain):
+        P = markov.transition_matrix(chain)
+        np.testing.assert_allclose(P.sum(axis=1), 1.0, atol=1e-12)
+
+    def test_fresh_blocks_transitions(self, chain):
+        P = markov.transition_matrix(chain)
+        k_a = chain.k_a
+        # AoU-selected entry: joins Top-k_M w.p. p2, else starts ageing
+        assert P[0, k_a] == pytest.approx(chain.p2)
+        assert P[0, chain.k] == pytest.approx(1 - chain.p2)
+        # magnitude-selected entry: sticky w.p. 1 - p1
+        assert P[k_a, k_a] == pytest.approx(1 - chain.p1)
+        assert P[k_a, chain.k] == pytest.approx(chain.p1)
+
+    def test_steady_state_is_stationary(self, chain):
+        P = markov.transition_matrix(chain)
+        pi = markov.steady_state(P)
+        np.testing.assert_allclose(pi @ P, pi, atol=1e-8)
+        assert pi.min() >= -1e-15
+
+    def test_steady_state_fresh_mass(self, chain):
+        """P(in I_M) should be ~ k_M/d; P(in I_A) ~ k_A/d."""
+        P = markov.transition_matrix(chain)
+        pi = markov.steady_state(P)
+        # the collapsed-state approximation (footnote 2 truncation) shifts
+        # the fresh-state masses by a few percent — order-of-magnitude check
+        assert pi[chain.k_a] == pytest.approx(chain.k_m / chain.d, rel=0.2)
+        assert pi[0] == pytest.approx(chain.k_a / chain.d, rel=0.2)
+
+
+class TestLemma1:
+    def test_pmf_valid(self, chain):
+        support, pmf = markov.aou_distribution(chain)
+        assert support[0] == 0 and support[-1] == chain.max_staleness
+        assert pmf.min() >= 0
+        np.testing.assert_allclose(pmf.sum(), 1.0, atol=1e-9)
+
+    def test_matches_exchange_simulation(self, chain):
+        """Fig. 3: analysis vs simulation under the exchange model."""
+        _, pmf = markov.aou_distribution(chain)
+        emp = markov.simulate_aou(chain, rounds=2500, seed=0, mode="exchange")
+        tv = 0.5 * np.abs(pmf - emp).sum()
+        assert tv < 0.06, f"TV distance {tv:.3f}"
+
+    def test_matches_ar_simulation(self, chain):
+        """Robustness to the simplified-exchange assumption (AR magnitudes)."""
+        _, pmf = markov.aou_distribution(chain)
+        emp = markov.simulate_aou(chain, rounds=2500, seed=1, mode="ar")
+        tv = 0.5 * np.abs(pmf - emp).sum()
+        assert tv < 0.10, f"TV distance {tv:.3f}"
+
+    def test_expected_staleness_reasonable(self, chain):
+        """E[tau] must lie strictly inside (0, T)."""
+        e = markov.expected_staleness(chain)
+        assert 0.0 < e < chain.max_staleness
+
+    def test_more_age_budget_less_staleness(self):
+        """Increasing k_A (lower k_m at fixed k) must reduce E[tau]."""
+        base = dict(d=400, k=40, k0=7)
+        e_hi_km = markov.expected_staleness(markov.FairKChain(k_m=30, **base))
+        e_lo_km = markov.expected_staleness(markov.FairKChain(k_m=10, **base))
+        assert e_lo_km < e_hi_km
+
+
+def test_invalid_chain_params_rejected():
+    with pytest.raises(ValueError):
+        markov.FairKChain(d=100, k=60, k_m=30, k0=5)     # rho > 50%
+    with pytest.raises(ValueError):
+        markov.FairKChain(d=100, k=10, k_m=10, k0=5)     # k_a = 0
+    with pytest.raises(ValueError):
+        markov.FairKChain(d=100, k=10, k_m=5, k0=7)      # k0 >= k_m

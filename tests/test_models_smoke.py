@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests (assignment requirement): reduced variant of
+each family (2 scan-blocks, d_model <= 256, <= 4 experts) runs one forward /
+train step on CPU — asserting output shapes and no NaNs — plus prefill/decode
+consistency against teacher forcing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import transformer as tr
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def _batch(cfg, b=2, s=48, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)).astype("i4"))
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["embeds"] = 0.1 * jnp.ones((b, cfg.n_patches, cfg.d_model),
+                                         jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = 0.1 * jnp.ones((b, cfg.encoder_seq, cfg.d_model),
+                                         jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_config_limits(arch):
+    cfg = get_config(arch, reduced_variant=True)
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    assert cfg.n_layers <= 2 * cfg.scan_block <= 16
+    assert cfg.family == get_config(arch).family
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced_variant=True)
+    params = tr.init_lm(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    logits, aux = tr.forward_train(params, cfg, batch["tokens"],
+                                   embeds=batch.get("embeds"),
+                                   frames=batch.get("frames"))
+    b, s = batch["tokens"].shape
+    assert logits.shape == (b, s, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    # one SGD train step must produce finite loss + grads and change params
+    def loss(p):
+        return tr.loss_fn(p, cfg, batch)[0]
+    l0, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l0))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+    new_params = jax.tree.map(lambda p, g: p - 0.05 * g.astype(p.dtype),
+                              params, grads)
+    l1 = float(loss(new_params))
+    assert np.isfinite(l1)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_decode_consistency(arch):
+    """decode_step with a cache must agree with teacher forcing (bf16 tol).
+
+    MoE archs use a no-drop capacity factor here: capacity-based routing
+    drops overflow tokens under teacher forcing but never in single-token
+    decode, so exact parity only holds without drops (standard MoE serving
+    caveat)."""
+    import dataclasses
+    cfg = get_config(arch, reduced_variant=True)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = tr.init_lm(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg, b=1, s=33, seed=3)
+    toks = batch["tokens"]
+    kw = {k: batch[k] for k in ("embeds", "frames") if k in batch}
+    full, _ = tr.forward_train(params, cfg, toks, **kw)
+    caches = tr.init_caches(cfg, 1, capacity=34 + (cfg.n_patches or 0))
+    lg, caches = tr.prefill(params, cfg, toks[:, :32], caches, **kw)
+    scale = max(1.0, float(np.abs(np.asarray(full, np.float32)).max()))
+    err = np.abs(np.asarray(lg[0, 0], np.float32)
+                 - np.asarray(full[0, 31], np.float32)).max() / scale
+    assert err < 0.03, f"prefill mismatch {err}"
+    pos = 32 + (cfg.n_patches or 0)
+    lg2, _ = tr.decode_step(params, cfg, toks[:, 32:33], jnp.asarray(pos),
+                            caches)
+    err2 = np.abs(np.asarray(lg2[0, 0], np.float32)
+                  - np.asarray(full[0, 32], np.float32)).max() / scale
+    assert err2 < 0.05, f"decode mismatch {err2}"
+
+
+def test_full_configs_match_published_sizes():
+    targets = {
+        "mistral-large-123b": 123e9, "whisper-base": 74e6,
+        "mamba2-370m": 370e6, "internvl2-1b": 0.63e9, "deepseek-67b": 67e9,
+        "granite-34b": 34e9, "granite-moe-3b-a800m": 3.3e9,
+        "qwen2.5-32b": 32e9, "jamba-1.5-large-398b": 398e9,
+        "arctic-480b": 480e9,
+    }
+    for name, target in targets.items():
+        n = get_config(name).param_count()
+        assert abs(n - target) / target < 0.35, (name, n, target)
+
+
+def test_moe_active_params_smaller():
+    for name in ("granite-moe-3b-a800m", "arctic-480b",
+                 "jamba-1.5-large-398b"):
+        cfg = get_config(name)
+        assert cfg.active_param_count() < 0.5 * cfg.param_count()
+
+
+def test_long_context_support_flags():
+    for name, cfg in ARCHS.items():
+        assert cfg.supports_long_context, name  # via SSM/hybrid or window

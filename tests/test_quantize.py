@@ -1,0 +1,40 @@
+"""One-bit FSK majority-vote transport (paper Sec. V-B prototype)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize
+
+
+def test_one_bit_sign_with_zero_positive():
+    x = jnp.asarray([-2.0, 0.0, 3.0])
+    np.testing.assert_array_equal(np.asarray(quantize.one_bit(x)),
+                                  [-1.0, 1.0, 1.0])
+
+
+def test_majority_vote_noiseless():
+    votes = jnp.asarray([[1.0, -1, -1], [1, -1, 1], [1, 1, -1]])
+    out = quantize.fsk_majority_vote(jax.random.PRNGKey(0), votes)
+    np.testing.assert_array_equal(np.asarray(out), [1.0, -1.0, -1.0])
+
+
+def test_majority_vote_robust_to_moderate_noise():
+    """With N=21 unanimous clients, sigma=1 noise flips (almost) nothing."""
+    votes = jnp.ones((21, 512))
+    out = quantize.fsk_majority_vote(jax.random.PRNGKey(1), votes,
+                                     noise_std=1.0)
+    assert float((out == 1.0).mean()) == 1.0
+
+
+def test_one_bit_round_stale_preserved():
+    rng = np.random.default_rng(0)
+    grads = jnp.asarray(rng.normal(size=(5, 32)).astype("f4"))
+    g_prev = jnp.asarray(rng.normal(size=32).astype("f4"))
+    idx = jnp.asarray([1, 5, 9], jnp.int32)
+    g_t = quantize.one_bit_round(jax.random.PRNGKey(0), g_prev, idx, grads)
+    g_t = np.asarray(g_t)
+    assert set(np.unique(g_t[np.asarray(idx)])) <= {-1.0, 1.0}
+    mask = np.ones(32, bool)
+    mask[np.asarray(idx)] = False
+    np.testing.assert_array_equal(g_t[mask], np.asarray(g_prev)[mask])

@@ -1,0 +1,75 @@
+"""End-to-end behaviour tests: the paper's headline claims reproduced on
+small synthetic settings (relative orderings, not absolute accuracies —
+DESIGN.md §7 data gate)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import markov
+from repro.core.oac import ChannelConfig
+from repro.data import partition, synthetic
+from repro.fl import FLConfig, train
+from repro.models import cnn
+
+
+@pytest.fixture(scope="module")
+def results():
+    """One FL sweep over all headline policies, shared across asserts."""
+    spec = synthetic.DatasetSpec("sys", (12, 12, 1), 6, 2400, 400,
+                                 noise_std=0.8, sparsity=0.08)
+    (xtr, ytr), (xte, yte) = synthetic.make_dataset(spec, seed=0)
+    parts = partition.dirichlet_partition(ytr, 10, 0.3, seed=0)
+    params0 = cnn.init_mlp_classifier(jax.random.PRNGKey(0), 144, 6,
+                                      hidden=(48,))
+
+    def loss_fn(p, x, y):
+        return cnn.softmax_xent(cnn.mlp_classifier(p, x), y)
+
+    @jax.jit
+    def eval_fn(p):
+        return {"acc": cnn.accuracy(cnn.mlp_classifier(p, jnp.asarray(xte)),
+                                    jnp.asarray(yte))}
+
+    def sample_round(t):
+        return partition.client_batches(xtr, ytr, parts, 10, 3, seed=500 + t)
+
+    out = {}
+    for policy in ("fairk", "topk", "toprand", "agetopk"):
+        fl = FLConfig(n_clients=10, local_steps=3, batch_size=10, rounds=80,
+                      policy=policy, compression_ratio=0.1,
+                      channel=ChannelConfig(fading="rayleigh", mean=1.0,
+                                            noise_std=0.2))
+        out[policy] = train(fl, params0, loss_fn, sample_round,
+                            eval_fn=eval_fn, eval_every=80)
+    return out
+
+
+def test_fig4_policy_ordering(results):
+    """FAIR-k beats Top-k and AgeTop-k decisively and >= TopRand (Fig. 4)."""
+    acc = {p: h["acc"][-1] for p, h in results.items()}
+    assert acc["fairk"] > acc["topk"] + 0.1, acc
+    assert acc["fairk"] > acc["agetopk"] + 0.1, acc
+    assert acc["fairk"] >= acc["toprand"] - 0.03, acc
+
+
+def test_fig5a_aou_ordering(results):
+    """Average AoU: FAIR-k < TopRand < Top-k (Fig. 5a)."""
+    mean_aou = {p: np.mean(h["mean_aou"][40:]) for p, h in results.items()}
+    assert mean_aou["fairk"] < mean_aou["toprand"] < mean_aou["topk"], mean_aou
+
+
+def test_fig5b_participation(results):
+    """FAIR-k broadens participation; Top-k starves most entries (Fig. 5b)."""
+    assert (results["fairk"]["sel_count"] > 0).mean() > 0.95
+    assert (results["topk"]["sel_count"] == 0).mean() > 0.5
+
+
+def test_theorem1_staleness_term():
+    """E[tau] from Lemma 1 falls as the age budget k_A grows — the residual
+    error term eta*L_g*E[tau]*G^2*H^2 in Theorem 1 shrinks accordingly."""
+    es = [markov.expected_staleness(markov.FairKChain(d=400, k=40, k_m=km,
+                                                      k0=5))
+          for km in (30, 20, 10)]
+    assert es[0] > es[1] > es[2]

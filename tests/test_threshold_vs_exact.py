@@ -1,0 +1,69 @@
+"""Links the production path to the paper-exact algorithm: the sampled-
+quantile threshold FAIR-k used by the sharded trainer (launch.steps) must
+statistically agree with the exact index-based FAIR-k (core.selection)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection
+from repro.launch.steps import OacServerConfig, fairk_threshold_masks
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_threshold_mask_matches_exact_budget(seed):
+    rng = np.random.default_rng(seed)
+    d = 1 << 16
+    g = jnp.asarray(rng.normal(size=d).astype("f4"))
+    age = jnp.asarray(rng.integers(0, 40, d).astype("f4"))
+    oac = OacServerConfig(rho=0.1, k_m_frac=0.75)
+    mask, mask_m = fairk_threshold_masks(g, age, oac, sample_cap=d)
+    frac = float(np.asarray(mask).mean())
+    assert abs(frac - 0.1) < 0.01
+    assert abs(float(np.asarray(mask_m).mean()) - 0.075) < 0.01
+
+
+def test_threshold_magnitude_stage_overlaps_exact():
+    """The threshold magnitude stage must select (almost exactly) the same
+    coordinates as exact Top-k_M."""
+    rng = np.random.default_rng(3)
+    d = 1 << 15
+    g = jnp.asarray(rng.normal(size=d).astype("f4"))
+    age = jnp.zeros((d,), jnp.float32)
+    oac = OacServerConfig(rho=0.1, k_m_frac=0.75)
+    _, mask_m = fairk_threshold_masks(g, age, oac, sample_cap=d)
+    k_m = int(round(0.075 * d))
+    exact = set(np.asarray(selection.top_k_indices(g, k=k_m)).tolist())
+    thresh = set(np.flatnonzero(np.asarray(mask_m)).tolist())
+    overlap = len(exact & thresh) / k_m
+    assert overlap > 0.98, overlap
+
+
+def test_threshold_age_stage_prefers_oldest():
+    """With distinct ages, the age-stage picks must dominate the age
+    distribution's upper tail (matching exact FAIR-k's age stage)."""
+    rng = np.random.default_rng(4)
+    d = 1 << 14
+    g = jnp.asarray(rng.normal(size=d).astype("f4"))
+    age = jnp.asarray(rng.permutation(d).astype("f4") / 64.0)  # distinct
+    oac = OacServerConfig(rho=0.1, k_m_frac=0.5)
+    mask, mask_m = fairk_threshold_masks(g, age, oac, sample_cap=d)
+    age_np = np.asarray(age)
+    a_picks = np.flatnonzero(np.asarray(mask) * (1 - np.asarray(mask_m)))
+    # the age picks should sit in the top ~6% of ages (rho_rest ~ 0.051)
+    assert np.median(age_np[a_picks]) > np.quantile(age_np, 0.93)
+
+
+def test_sampled_quantile_close_to_full():
+    """The strided 64k-sample quantile threshold must track the full-data
+    quantile (production uses sampling on 1e9-coordinate shards)."""
+    rng = np.random.default_rng(5)
+    d = 1 << 20
+    g = jnp.asarray(rng.normal(size=d).astype("f4"))
+    age = jnp.asarray(rng.integers(0, 40, d).astype("f4"))
+    oac = OacServerConfig(rho=0.1, k_m_frac=0.75)
+    m_full, _ = fairk_threshold_masks(g, age, oac, sample_cap=d)
+    m_samp, _ = fairk_threshold_masks(g, age, oac, sample_cap=65536)
+    f_full = float(np.asarray(m_full).mean())
+    f_samp = float(np.asarray(m_samp).mean())
+    assert abs(f_full - f_samp) < 0.01
