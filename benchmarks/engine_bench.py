@@ -1,0 +1,81 @@
+"""SelectionEngine backend benchmark: exact (lax.top_k) vs threshold
+(sampled-quantile + fused update) wall-clock across model sizes.
+
+The threshold backend is the d >= 1e8 production route — this bench
+measures where it starts paying on this host.  Emits CSV rows through
+``benchmarks.run`` and writes a standalone JSON artifact
+(benchmarks/artifacts/engine_bench.json) with the per-size timings.
+
+  PYTHONPATH=src python -m benchmarks.engine_bench [--full]
+
+fast: d in {1e5, 1e6, 1e7};  --full adds 1e8 (needs ~4 GB RAM).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.engine import EngineConfig, SelectionEngine
+
+FAST_SIZES = (100_000, 1_000_000, 10_000_000)
+FULL_SIZES = FAST_SIZES + (100_000_000,)
+
+
+def _bench_one(d: int, rho: float = 0.1, k_m_frac: float = 0.75):
+    rng = np.random.default_rng(d % 7919)
+    g = jnp.asarray(rng.standard_normal(d).astype("f4"))
+    g_prev = jnp.asarray(rng.standard_normal(d).astype("f4"))
+    age = jnp.asarray(rng.integers(0, 40, d).astype("f4"))
+
+    res = {"d": d, "rho": rho, "k_m_frac": k_m_frac}
+    for backend in ("exact", "threshold"):
+        eng = SelectionEngine(
+            EngineConfig(policy="fairk", backend=backend, rho=rho,
+                         k_m_frac=k_m_frac), d)
+        fn = jax.jit(lambda a, b, c, e=eng: e.select_and_merge(a, b, c)[:2])
+        us, (g_t, age_next) = timed(
+            lambda: jax.block_until_ready(fn(g, g_prev, age)))
+        res[backend + "_us"] = us
+        res[backend + "_gbps"] = 5 * 4 * d / (us * 1e-6) / 1e9  # 3 in + 2 out
+    res["speedup_threshold"] = res["exact_us"] / res["threshold_us"]
+    return res
+
+
+def run(fast: bool = True):
+    sizes = FAST_SIZES if fast else FULL_SIZES
+    rows, per_size = [], []
+    for d in sizes:
+        r = _bench_one(d)
+        per_size.append(r)
+        rows.append((f"engine/exact_d{d:.0e}".replace("+0", ""),
+                     r["exact_us"], f"gbps={r['exact_gbps']:.2f}"))
+        rows.append((f"engine/threshold_d{d:.0e}".replace("+0", ""),
+                     r["threshold_us"],
+                     f"speedup={r['speedup_threshold']:.2f}x"))
+    detail = {"sizes": per_size,
+              "note": "threshold = sampled-quantile theta + fused update; "
+                      "exact = lax.top_k index policies (fairk)"}
+    out_dir = os.path.join(os.path.dirname(__file__), "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "engine_bench.json"), "w") as f:
+        json.dump(detail, f, indent=1)
+    return rows, detail
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    rows, detail = run(fast=not args.full)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(json.dumps(detail["sizes"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

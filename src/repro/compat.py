@@ -1,0 +1,47 @@
+"""JAX version-compat shims (pinned container: jax 0.4.37).
+
+Two API seams moved across JAX releases and both sit on this repo's hot
+paths:
+
+* ``shard_map`` lived in ``jax.experimental.shard_map`` (<= 0.4.x, kwarg
+  ``check_rep``), then graduated to ``jax.shard_map`` (kwarg ``check_vma``).
+  ``shard_map`` below resolves whichever exists and normalises the
+  rep/vma-check kwarg, so ``launch.steps`` and the engine's sharded backend
+  run unchanged on either side of the move.
+* ``Compiled.cost_analysis()`` returned a one-element ``list`` of dicts on
+  JAX <= 0.4.x and a plain ``dict`` on newer releases.
+  ``cost_analysis_dict`` flattens both to a dict.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+
+
+def shard_map(f: Callable, mesh, in_specs, out_specs, *,
+              check: bool = False) -> Callable:
+    """Version-portable ``shard_map`` with replication checking disabled by
+    default (``check=False`` maps to ``check_rep``/``check_vma`` as the
+    installed JAX spells it)."""
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+        for kwarg in ("check_vma", "check_rep"):
+            try:
+                return sm(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **{kwarg: check})
+            except TypeError:
+                continue
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=check)
+
+
+def cost_analysis_dict(compiled: Any) -> Dict[str, Any]:
+    """``compiled.cost_analysis()`` as a dict on every JAX version."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)

@@ -1,0 +1,360 @@
+"""Unified SelectionEngine: one API over the three FAIR-k execution paths.
+
+The paper's selection rule (Eq. 11) and server update (Eq. 8-10) exist at
+three operating points in this repo, historically implemented three times:
+
+* ``exact``      — index-form ``lax.top_k`` policies (``core.selection``),
+  the paper-faithful simulation path.  Exact budget (k indices), supports
+  all six policies, cost O(d log d) — fine to d ~ 1e7.
+* ``threshold``  — sampled-quantile thresholds θ_M / θ_A plus the fused
+  ``fairk_update`` Pallas kernel: one HBM pass over (g, g_prev, age), no
+  sort.  Approximate budget (|selected| ≈ k), FAIR-k-family policies only,
+  the d ~ 1e8-1e9 single-device production route.
+* ``sharded``    — the threshold math inside ``shard_map``: every device
+  updates its local shard with locally estimated thresholds, zero extra
+  collectives.  The multi-device production route (launch.steps).
+
+``SelectionEngine`` puts all three behind ``select_and_merge(g, g_prev,
+age)`` -> ``(g_t, age', stats)`` so trainers, benchmarks and tests can swap
+backends without touching call sites, and so cross-backend parity is
+testable (see tests/test_engine.py): with ``exact_theta=True`` the
+threshold/sharded backends compute order-statistic thresholds that select
+*identical* coordinates to ``exact`` on tie-free inputs.
+
+Semantics (all backends):
+  selection scores the first argument ``g`` (the production server scores
+  the fresh aggregate; the paper's trainer scores g_{t-1} — pass whichever
+  the algorithm calls for), fresh values come from ``g``, stale values from
+  ``g_prev``, and the AoU vector advances by Eq. (10) capped at
+  ``AGE_CAP`` (the fused kernel's staleness clip).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import selection
+
+Array = jax.Array
+
+BACKENDS = ("exact", "threshold", "sharded")
+
+# FAIR-k-family policies expressible as (θ_M, θ_A) thresholds; the other
+# three (toprand / agetopk / randk) need index arithmetic -> exact only.
+THRESHOLD_POLICIES = ("fairk", "topk", "roundrobin")
+
+# staleness clip baked into the fused kernel (kernels/fairk_update.py);
+# int8 server state in launch.steps needs age < 127
+AGE_CAP = 120.0
+
+
+# ---------------------------------------------------------------------------
+# threshold building blocks (promoted from launch/steps.py)
+# ---------------------------------------------------------------------------
+
+def index_jitter(n: int, offset=0) -> Array:
+    """Deterministic per-coordinate jitter in [0, 1) (Knuth hash of the
+    *global* coordinate index) — breaks integer-age ties without an extra
+    input.  ``offset`` (static or traced) is the global index of the first
+    local coordinate, so shards hash the same ids as the unsharded path.
+    Must stay bit-identical to the fused kernel's in-kernel recomputation."""
+    i = jax.lax.iota(jnp.uint32, n) + jnp.asarray(offset, jnp.uint32)
+    return (i * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
+            ).astype(jnp.float32) / float(1 << 24)
+
+
+def strided_sample(x: Array, cap: int) -> Array:
+    n = x.shape[0]
+    stride = max(1, n // cap)
+    return x[::stride]
+
+
+def sampled_thresholds(g: Array, age: Array, *, rho: float, k_m_frac: float,
+                       sample_cap: int) -> Tuple[Array, Array]:
+    """(θ_M, θ_A) from strided-sample quantiles (no global sort).
+
+    θ_M ≈ the (1 − ρ·k_m_frac) quantile of |g|; θ_A sizes the age stage to
+    the residual budget over the whole vector (the complement correction is
+    the (1 − ρ_M) denominator)."""
+    rho_m = rho * k_m_frac
+    rho_a = (rho - rho_m) / max(1.0 - rho_m, 1e-6)
+    mag = jnp.abs(g.astype(jnp.float32))
+    age_eff = age.astype(jnp.float32) + index_jitter(g.shape[0])
+    theta_m = (jnp.quantile(strided_sample(mag, sample_cap), 1.0 - rho_m)
+               if rho_m > 0.0 else jnp.float32(jnp.inf))
+    theta_a = (jnp.quantile(strided_sample(age_eff, sample_cap), 1.0 - rho_a)
+               if rho_a > 0.0 else jnp.float32(jnp.inf))
+    return theta_m.astype(jnp.float32), theta_a.astype(jnp.float32)
+
+
+def exact_thresholds(g: Array, age: Array, *, k: int, k_m: int
+                     ) -> Tuple[Array, Array]:
+    """Order-statistic (θ_M, θ_A) that reproduce exact FAIR-k on tie-free
+    inputs: θ_M sits strictly between the k_m-th and (k_m+1)-th largest
+    |g|, θ_A between the k_a-th and (k_a+1)-th largest jittered age *among
+    the magnitude-stage complement*.  O(d log d) — parity/testing path."""
+    d = g.shape[0]
+    k_a = k - k_m
+    mag = jnp.abs(g.astype(jnp.float32))
+    if k_m == 0:
+        theta_m = jnp.float32(jnp.inf)
+        mask_m = jnp.zeros((d,), bool)
+    else:
+        vals = jax.lax.top_k(mag, min(k_m + 1, d))[0]
+        edge = vals[-1] if k_m >= d else vals[k_m]
+        theta_m = (vals[k_m - 1] + edge) / 2.0
+        mask_m = mag >= theta_m
+    if k_a == 0:
+        return theta_m, jnp.float32(jnp.inf)
+    age_eff = age.astype(jnp.float32) + index_jitter(d)
+    rest = jnp.where(mask_m, -jnp.inf, age_eff)
+    vals = jax.lax.top_k(rest, min(k_a + 1, d))[0]
+    edge = vals[-1] if k_a >= d else vals[k_a]
+    theta_a = (vals[k_a - 1] + edge) / 2.0
+    return theta_m, theta_a
+
+
+def threshold_mask(g: Array, age: Array, theta_m: Array, theta_a: Array,
+                   index_offset=0) -> Tuple[Array, Array]:
+    """Dense float32 (mask, mask_m) for the two-stage threshold rule —
+    the jnp mirror of the fused kernel's in-register mask.  When applied to
+    a shard, pass the shard's global start index as ``index_offset`` so the
+    age jitter matches the unsharded selection."""
+    mag = jnp.abs(g.astype(jnp.float32))
+    mask_m = mag >= theta_m
+    age_eff = age.astype(jnp.float32) + index_jitter(g.shape[0],
+                                                     index_offset)
+    mask_a = (age_eff >= theta_a) & (~mask_m)
+    return (mask_m | mask_a).astype(jnp.float32), mask_m.astype(jnp.float32)
+
+
+def masked_merge(fresh: Array, g_prev: Array, age: Array, mask: Array
+                 ) -> Tuple[Array, Array]:
+    """Eq. (8) stale merge + Eq. (10) AoU update (mask form, f32 out)."""
+    keep = 1.0 - mask
+    g_t = mask * fresh.astype(jnp.float32) + keep * g_prev.astype(jnp.float32)
+    age_next = jnp.minimum((age.astype(jnp.float32) + 1.0) * keep, AGE_CAP)
+    return g_t, age_next
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Backend-independent FAIR-k settings.
+
+    Budgets derive from (rho, k_m_frac, r_frac) unless (k, k_m, r) are
+    given explicitly.  ``exact_theta`` switches the threshold/sharded
+    backends from sampled quantiles to order-statistic thresholds (parity
+    mode); ``global_thresholds`` makes the sharded backend estimate one
+    (θ_M, θ_A) pair on the full vector instead of per shard."""
+    policy: str = "fairk"
+    backend: str = "exact"
+    rho: float = 0.1
+    k_m_frac: float = 0.75
+    r_frac: float = 1.5                  # AgeTop-k candidate ratio r / k
+    k: Optional[int] = None
+    k_m: Optional[int] = None
+    r: Optional[int] = None
+    sample_cap: int = 65536              # quantile sample size
+    exact_theta: bool = False
+    global_thresholds: bool = False
+    noise_std: float = 0.0               # channel noise on fresh coords
+    n_clients: int = 1                   # N in Eq. (7) (noise / N scaling)
+    kernel_mode: Optional[str] = None    # None auto | pallas | interpret | ref
+
+
+class SelectionEngine:
+    """One ``select_and_merge`` over the exact / threshold / sharded paths.
+
+    Construct once per (d, config); all methods are pure jit-compatible
+    functions of their array arguments.  ``mesh`` is only required for the
+    sharded backend (the flat vector is sharded across *all* mesh axes)."""
+
+    def __init__(self, cfg: EngineConfig, d: int, mesh=None):
+        if cfg.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {cfg.backend!r}; "
+                             f"choose from {BACKENDS}")
+        if cfg.policy not in selection.POLICIES:
+            raise ValueError(f"unknown policy {cfg.policy!r}; "
+                             f"choose from {selection.POLICIES}")
+        if cfg.backend != "exact" and cfg.policy not in THRESHOLD_POLICIES:
+            raise ValueError(
+                f"policy {cfg.policy!r} needs index arithmetic — only "
+                f"{THRESHOLD_POLICIES} run on the {cfg.backend!r} backend")
+        if cfg.backend == "sharded":
+            if mesh is None:
+                raise ValueError("sharded backend needs a mesh")
+            n_dev = _mesh_size(mesh)
+            if d % n_dev:
+                raise ValueError(f"d={d} not divisible by {n_dev} devices")
+        self.cfg = cfg
+        self.d = d
+        self.mesh = mesh
+
+    # -- budgets ------------------------------------------------------------
+
+    def budgets(self) -> Tuple[int, int, int]:
+        """(k, k_M, r) with the Remark-1 policy specialisations applied."""
+        cfg = self.cfg
+        k = cfg.k if cfg.k is not None else max(2, round(cfg.rho * self.d))
+        k_m = (cfg.k_m if cfg.k_m is not None
+               else int(round(cfg.k_m_frac * k)))
+        if cfg.policy == "topk":
+            k_m = k
+        if cfg.policy == "roundrobin":
+            k_m = 0
+        r = cfg.r if cfg.r is not None else max(k, round(cfg.r_frac * k))
+        return k, k_m, r
+
+    def _rho_parts(self) -> Tuple[float, float]:
+        k, k_m, _ = self.budgets()
+        return k / self.d, (k_m / k if k else 0.0)
+
+    # -- selection ----------------------------------------------------------
+
+    def select(self, key: Optional[Array], g: Array, age: Array) -> Array:
+        """Exact index-form selection (all six policies): (k,) int32."""
+        k, k_m, r = self.budgets()
+        if key is None:
+            if self.cfg.policy in ("toprand", "randk"):
+                raise ValueError(f"policy {self.cfg.policy!r} needs a PRNG key")
+            key = jax.random.PRNGKey(0)
+        return selection.select_indices(self.cfg.policy, key, g, age,
+                                        k=k, k_m=k_m, r=r)
+
+    def thresholds(self, g: Array, age: Array) -> Tuple[Array, Array]:
+        """(θ_M, θ_A) per config (order-statistic or sampled-quantile)."""
+        k, k_m, _ = self.budgets()
+        if self.cfg.exact_theta:
+            return exact_thresholds(g, age, k=k, k_m=k_m)
+        rho, km_frac = self._rho_parts()
+        return sampled_thresholds(g, age, rho=rho, k_m_frac=km_frac,
+                                  sample_cap=self.cfg.sample_cap)
+
+    # -- fused server phase -------------------------------------------------
+
+    def select_and_merge(self, g: Array, g_prev: Array, age: Array, *,
+                         key: Optional[Array] = None
+                         ) -> Tuple[Array, Array, Dict[str, Any]]:
+        """One server phase: select on ``g``, merge fresh ``g`` over stale
+        ``g_prev`` (Eq. 8), advance AoU (Eq. 10).  Returns f32
+        ``(g_t, age', stats)``; stats holds the selection artefacts
+        (count, thresholds, and — exact backend — the index vector)."""
+        if g.shape != (self.d,):
+            raise ValueError(f"expected shape ({self.d},), got {g.shape}")
+        if self.cfg.noise_std > 0.0 and key is None:
+            raise ValueError("noise_std > 0 needs a PRNG key (identical "
+                             "noise every round is not a channel)")
+        backend = self.cfg.backend
+        if backend == "exact":
+            return self._exact_update(g, g_prev, age, key)
+        if backend == "threshold":
+            return self._threshold_update(g, g_prev, age, key)
+        return self._sharded_update(g, g_prev, age, key)
+
+    def _noisy(self, fresh: Array, key: Optional[Array]) -> Array:
+        cfg = self.cfg
+        if key is None or cfg.noise_std <= 0.0:
+            return fresh.astype(jnp.float32)
+        noise = (cfg.noise_std / cfg.n_clients) * jax.random.normal(
+            key, fresh.shape, jnp.float32)
+        return fresh.astype(jnp.float32) + noise
+
+    def _exact_update(self, g, g_prev, age, key):
+        k, _, _ = self.budgets()
+        key_sel = key_noise = None
+        if key is not None:
+            key_sel, key_noise = jax.random.split(key)
+        idx = self.select(key_sel, g, age)
+        mask = selection.mask_from_indices(idx, self.d)
+        g_t, age_next = masked_merge(self._noisy(g, key_noise), g_prev, age,
+                                     mask)
+        stats = {"idx": idx, "n_selected": jnp.float32(k), "k": k}
+        return g_t, age_next, stats
+
+    def _threshold_update(self, g, g_prev, age, key):
+        from repro.kernels import ops          # deferred: kernels import core
+        k, _, _ = self.budgets()
+        theta_m, theta_a = self.thresholds(g, age)
+        g_t, age_next = ops.fairk_update(g, g_prev, age, theta_m, theta_a,
+                                         mode=self.cfg.kernel_mode)
+        # selected coordinates are exactly the age-reset ones (Eq. 10)
+        sel = (age_next == 0.0).astype(jnp.float32)
+        n_sel = sel.sum()
+        if self.cfg.noise_std > 0.0:
+            # selection saw the clean aggregate; the channel perturbs only
+            # the fresh (transmitted) coordinates — one extra masked pass on
+            # top of the fused kernel, equivalent to merging g + noise
+            g_t = g_t + sel * (self.cfg.noise_std / self.cfg.n_clients) * \
+                jax.random.normal(key, g.shape, jnp.float32)
+        stats = {"theta_m": theta_m, "theta_a": theta_a,
+                 "n_selected": n_sel, "k": k}
+        return g_t, age_next, stats
+
+    def _sharded_update(self, g, g_prev, age, key):
+        cfg = self.cfg
+        mesh = self.mesh
+        axes = tuple(mesh.axis_names)
+        k, _, _ = self.budgets()
+        rho, km_frac = self._rho_parts()
+        vec = P(axes)
+        use_global = cfg.global_thresholds or cfg.exact_theta
+        if use_global:
+            theta_m, theta_a = self.thresholds(g, age)
+        else:
+            theta_m = theta_a = jnp.float32(0.0)    # placeholder, unused
+
+        def shard_phase(g_l, gp_l, age_l, tm, ta, key_l):
+            my = 0
+            for ax in axes:
+                my = my * mesh.shape[ax] + jax.lax.axis_index(ax)
+            if not use_global:
+                tm, ta = sampled_thresholds(
+                    g_l, age_l, rho=rho, k_m_frac=km_frac,
+                    sample_cap=cfg.sample_cap)
+            # jitter hashes GLOBAL coordinate ids (my * n_local offset) so
+            # the mask is the one the unsharded backends would compute
+            mask, _ = threshold_mask(g_l, age_l, tm, ta,
+                                     index_offset=my * g_l.shape[0])
+            fresh = g_l.astype(jnp.float32)
+            if cfg.noise_std > 0.0:
+                kk = jax.random.fold_in(key_l, my)
+                fresh = fresh + (cfg.noise_std / cfg.n_clients) * \
+                    jax.random.normal(kk, g_l.shape, jnp.float32)
+            g_t, age_next = masked_merge(fresh, gp_l, age_l, mask)
+            return g_t, age_next, jax.lax.psum(mask.sum(), axes)
+
+        fn = compat.shard_map(
+            shard_phase, mesh,
+            in_specs=(vec, vec, vec, P(), P(), P()),
+            out_specs=(vec, vec, P()))
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        g_t, age_next, n_sel = fn(g, g_prev, age, theta_m, theta_a, key)
+        stats = {"n_selected": n_sel, "k": k}
+        if use_global:
+            stats |= {"theta_m": theta_m, "theta_a": theta_a}
+        return g_t, age_next, stats
+
+
+def _mesh_size(mesh) -> int:
+    n = 1
+    for ax in mesh.axis_names:
+        n *= mesh.shape[ax]
+    return n
+
+
+def make_engine(policy: str = "fairk", backend: str = "exact", *, d: int,
+                mesh=None, **cfg_kw) -> SelectionEngine:
+    """Convenience constructor mirroring the string-driven policy registry."""
+    return SelectionEngine(EngineConfig(policy=policy, backend=backend,
+                                        **cfg_kw), d, mesh=mesh)

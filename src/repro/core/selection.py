@@ -30,7 +30,10 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
-_EXCLUDED_AGE = jnp.float32(-1.0)  # ages are >= 0; -1 can never win a top-k
+# ages are >= 0; -1 can never win a top-k.  Kept a python float: a jnp
+# constant here would initialize the jax backend at import time and lock the
+# device count before launch/dryrun.py can set XLA_FLAGS.
+_EXCLUDED_AGE = -1.0
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,8 @@
-"""Federated-learning substrate: the OAC-FL trainer (paper Alg. 1)."""
+"""Federated-learning substrate: the OAC-FL trainer (paper Alg. 1) and the
+vmapped (policy × k_m × seed) sweep driver."""
 
 from repro.fl.trainer import FLConfig, ServerState, init_server, make_fl_step, train
+from repro.fl.sweep import SweepConfig, fair_k_mask_dynamic, run_sweep, sweep_grid
 
-__all__ = ["FLConfig", "ServerState", "init_server", "make_fl_step", "train"]
+__all__ = ["FLConfig", "ServerState", "init_server", "make_fl_step", "train",
+           "SweepConfig", "fair_k_mask_dynamic", "run_sweep", "sweep_grid"]

@@ -1,0 +1,193 @@
+"""Vmapped sweep driver: many (policy × k_m × seed) OAC-FL simulations in
+ONE compiled program.
+
+The paper's figures sweep the k_M/k ratio, the selection policy and the
+random seed — dozens of runs that the per-figure benchmarks execute
+sequentially.  Scenario-diversity studies want hundreds.  This driver
+batches the entire grid through ``jax.vmap``: every grid point is one
+simulated OAC-FL server (quadratic heterogeneous clients, Rayleigh fading,
+channel noise) and the whole grid advances round-by-round inside a single
+``lax.scan``.
+
+The trick that makes the grid vmappable is a *rank-based* FAIR-k: the exact
+policies concatenate top-k index vectors whose lengths are static (``k_m``
+cannot be a traced value), so instead we select by rank —
+
+    mask_M = rank(|score|)      < k_m          (magnitude stage)
+    mask_A = rank(age ⊙ ¬mask_M) < k − k_m     (age stage)
+
+which picks the identical coordinate set (rank and top-k agree on tie-free
+inputs; ties break toward lower index in both) while ``k_m`` rides in as a
+traced per-lane scalar.  Policy identity also rides in as data: a policy id
+switches the magnitude score between |g| (FAIR-k family) and uniform noise
+(Rand-k family), so fairk / topk / roundrobin / randk all share one program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# policy ids for the traced policy axis (fairk covers topk at k_m=k and
+# roundrobin at k_m=0 — Remark 1)
+POLICY_FAIRK = 0
+POLICY_RANDK = 1
+SWEEP_POLICIES = {"fairk": POLICY_FAIRK, "topk": POLICY_FAIRK,
+                  "roundrobin": POLICY_FAIRK, "randk": POLICY_RANDK}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """One synthetic OAC-FL scenario (shared by every grid point)."""
+    d: int = 1024                  # model dimension
+    n_clients: int = 16            # N
+    rho: float = 0.2               # budget k / d
+    rounds: int = 100
+    local_steps: int = 2           # H (closed-form local SGD on quadratics)
+    local_lr: float = 0.1          # eta_l
+    global_lr: float = 0.05        # eta (stale coordinates replay up to
+                                   # ~1/rho rounds, so eta * H * 1/rho must
+                                   # stay inside the quadratic stability
+                                   # window — see Lemma 1's T bound)
+    shared: float = 3.0            # scale of the common optimum component
+    hetero: float = 1.0            # client-optimum spread (non-IID knob)
+    fading_mean: float = 1.0       # mu_c (Rayleigh)
+    noise_std: float = 0.5         # sigma_z
+
+    @property
+    def k(self) -> int:
+        return max(1, int(round(self.rho * self.d)))
+
+
+def _rank_desc(x: Array) -> Array:
+    """rank[i] = number of entries strictly ranked above x[i] (descending,
+    ties toward lower index — matching ``lax.top_k``)."""
+    d = x.shape[0]
+    order = jnp.argsort(-x, stable=True)
+    return jnp.zeros((d,), jnp.int32).at[order].set(
+        jnp.arange(d, dtype=jnp.int32))
+
+
+def fair_k_mask_dynamic(score: Array, age: Array, k: int, k_m: Array
+                        ) -> Array:
+    """Rank-based FAIR-k (Eq. 11) with a *traced* magnitude budget ``k_m``.
+
+    Returns a float32 mask with exactly ``k`` ones.  ``score`` is the
+    magnitude-stage statistic (|g| for FAIR-k, random for Rand-k)."""
+    d = score.shape[0]
+    mask_m = (_rank_desc(score) < k_m)
+    # age stage on the complement; -1 can never win (ages are >= 0) and the
+    # index tie-break mirrors lax.top_k via the stable argsort
+    age_rest = jnp.where(mask_m, -1.0, age.astype(jnp.float32))
+    mask_a = _rank_desc(age_rest) < (k - k_m)
+    return (mask_m | mask_a).astype(jnp.float32)
+
+
+def _one_round(cfg: SweepConfig, carry, key, policy_id, k_m):
+    """One OAC-FL round for one grid point (pure, vmappable)."""
+    w, g_prev, age, w_stars = carry
+    key_pol, key_h, key_z = jax.random.split(key, 3)
+    # H closed-form local SGD steps on f_n(w) = 0.5 ||w - w*_n||^2:
+    #   w_H = w*_n + (1 - eta_l)^H (w - w*_n);  accumulated grad (Eq. 5)
+    shrink = (1.0 - (1.0 - cfg.local_lr) ** cfg.local_steps) / cfg.local_lr
+    grads = shrink * (w[None, :] - w_stars)               # (N, d)
+    # selection (Eq. 11) scored on the last reconstructed gradient
+    score = jnp.where(policy_id == POLICY_RANDK,
+                      jax.random.uniform(key_pol, (cfg.d,)),
+                      jnp.abs(g_prev))
+    mask = fair_k_mask_dynamic(score, age, cfg.k, k_m)
+    # OAC uplink (Eq. 7): fading superposition + channel noise on the
+    # selected coordinates only
+    h = jax.random.rayleigh(key_h, cfg.fading_mean / np.sqrt(np.pi / 2.0),
+                            shape=(cfg.n_clients,), dtype=jnp.float32)
+    agg = jnp.einsum("n,nd->d", h, grads) / cfg.n_clients
+    noise = cfg.noise_std / cfg.n_clients * jax.random.normal(
+        key_z, (cfg.d,), jnp.float32)
+    # Eq. (8) merge + Eq. (9) model step + Eq. (10) AoU
+    g_t = mask * (agg + noise) + (1.0 - mask) * g_prev
+    w_next = w - cfg.global_lr * g_t
+    age_next = (age + 1.0) * (1.0 - mask)
+    loss = 0.5 * jnp.mean(jnp.sum((w_next[None, :] - w_stars) ** 2, axis=1))
+    metrics = {"loss": loss, "mean_age": age_next.mean(),
+               "max_age": age_next.max(), "frac_fresh": mask.mean()}
+    return (w_next, g_t, age_next, w_stars), metrics
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _run_grid(cfg: SweepConfig, seeds: Array, policy_ids: Array,
+              k_ms: Array) -> Dict[str, Array]:
+    """All grid points, one compiled program: scan over rounds, vmap over
+    the flattened (policy, k_m, seed) grid."""
+
+    def one_sim(seed, policy_id, k_m):
+        key0 = jax.random.PRNGKey(seed)
+        key_shared, key_init, key_run = jax.random.split(key0, 3)
+        # client optima = common signal (learnable from w_0 = 0) + non-IID
+        # spread (the irreducible heterogeneity floor)
+        w_stars = (cfg.shared * jax.random.normal(key_shared, (cfg.d,),
+                                                  jnp.float32)[None, :]
+                   + cfg.hetero * jax.random.normal(
+                       key_init, (cfg.n_clients, cfg.d), jnp.float32))
+        carry = (jnp.zeros((cfg.d,), jnp.float32),
+                 jnp.zeros((cfg.d,), jnp.float32),
+                 jnp.zeros((cfg.d,), jnp.float32), w_stars)
+
+        def round_body(c, key):
+            return _one_round(cfg, c, key, policy_id, k_m)
+
+        _, metrics = jax.lax.scan(round_body, carry,
+                                  jax.random.split(key_run, cfg.rounds))
+        return metrics                                    # (rounds,) leaves
+
+    return jax.vmap(one_sim)(seeds, policy_ids, k_ms)
+
+
+def sweep_grid(policies: Sequence[str], k_m_fracs: Sequence[float],
+               n_seeds: int, cfg: SweepConfig
+               ) -> Tuple[Array, Array, Array, list]:
+    """Flatten (policy × k_m_frac × seed) into the vmapped grid arrays.
+
+    ``topk`` / ``roundrobin`` override the k_m axis to k / 0 (Remark 1)."""
+    combos = []
+    for pol in policies:
+        if pol not in SWEEP_POLICIES:
+            raise ValueError(f"sweep supports {sorted(SWEEP_POLICIES)}, "
+                             f"got {pol!r}")
+        # Remark-1 policies pin k_m, collapsing their k_m axis to one point
+        if pol == "topk" or pol == "randk":
+            fracs = (1.0,)
+        elif pol == "roundrobin":
+            fracs = (0.0,)
+        else:
+            fracs = tuple(k_m_fracs)
+        for frac in fracs:
+            if (pol, frac) not in combos:
+                combos.append((pol, frac))
+    seeds, pids, kms, labels = [], [], [], []
+    for pol, frac in combos:
+        for s in range(n_seeds):
+            seeds.append(s)
+            pids.append(SWEEP_POLICIES[pol])
+            kms.append(int(round(frac * cfg.k)))
+            labels.append((pol, frac, s))
+    return (jnp.asarray(seeds, jnp.int32), jnp.asarray(pids, jnp.int32),
+            jnp.asarray(kms, jnp.int32), labels)
+
+
+def run_sweep(cfg: SweepConfig, policies: Sequence[str] = ("fairk",),
+              k_m_fracs: Sequence[float] = (0.75,), n_seeds: int = 4
+              ) -> Dict[str, np.ndarray]:
+    """Execute the grid; returns per-grid-point per-round metric arrays of
+    shape (n_grid, rounds) plus the grid labels."""
+    seeds, pids, kms, labels = sweep_grid(policies, k_m_fracs, n_seeds, cfg)
+    metrics = _run_grid(cfg, seeds, pids, kms)
+    out = {name: np.asarray(v) for name, v in metrics.items()}
+    out["labels"] = labels
+    return out

@@ -23,8 +23,9 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 import numpy as np
 
-from repro.core import oac, quantize, selection
+from repro.core import oac, quantize
 from repro.core.aou import update_age_by_indices
+from repro.core.engine import EngineConfig, SelectionEngine
 from repro.core.oac import ChannelConfig
 
 Array = jax.Array
@@ -39,6 +40,10 @@ class FLConfig:
     global_lr: float = 0.01         # eta
     rounds: int = 200
     policy: str = "fairk"           # see core.selection.POLICIES
+    backend: str = "exact"          # core.engine backend: "exact" keeps the
+                                    # paper-faithful index path; "threshold"
+                                    # runs the sampled-quantile fused-kernel
+                                    # server phase (d >> 1e7 route)
     compression_ratio: float = 0.1  # rho = k / d
     k_m_frac: float = 0.75          # k_M / k (paper Sec. V-A)
     r_frac: float = 1.5             # AgeTop-k candidate ratio r / k
@@ -51,14 +56,14 @@ class FLConfig:
 
     def budgets(self, d: int, k_m_frac: Optional[float] = None
                 ) -> Tuple[int, int, int]:
-        k = max(2, int(round(self.compression_ratio * d)))
-        k_m = int(round((self.k_m_frac if k_m_frac is None else k_m_frac) * k))
-        if self.policy == "topk":
-            k_m = k
-        if self.policy == "roundrobin":
-            k_m = 0
-        r = max(k, int(round(self.r_frac * k)))
-        return k, k_m, r
+        """(k, k_M, r) — delegated to the engine so the Remark-1 pinning
+        and rounding rules live in exactly one place."""
+        eng = SelectionEngine(EngineConfig(
+            policy="fairk" if self.policy == "fairk_auto" else self.policy,
+            rho=self.compression_ratio,
+            k_m_frac=self.k_m_frac if k_m_frac is None else k_m_frac,
+            r_frac=self.r_frac), d)
+        return eng.budgets()
 
 
 @dataclasses.dataclass
@@ -78,6 +83,11 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
     arrives as stacked arrays (N, H, B, ...)."""
     k, k_m, r = fl.budgets(d, k_m_frac)
     grad_fn = jax.grad(loss_fn)
+    if fl.backend not in ("exact", "threshold"):
+        raise ValueError(f"FLConfig.backend must be exact|threshold, "
+                         f"got {fl.backend!r}")
+    if fl.backend == "threshold" and (fl.one_bit or fl.error_feedback):
+        raise ValueError("one_bit / error_feedback need the exact backend")
 
     def client_update(w_flat: Array, xs: Array, ys: Array) -> Array:
         """H local SGD steps; returns the accumulated gradient (Eq. 5)."""
@@ -91,14 +101,32 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
 
     clients = jax.vmap(client_update, in_axes=(None, 0, 0))
     policy_name = "fairk" if fl.policy == "fairk_auto" else fl.policy
+    engine = SelectionEngine(
+        EngineConfig(policy=policy_name, backend=fl.backend,
+                     k=k, k_m=k_m, r=r,
+                     noise_std=(fl.channel.noise_std
+                                if fl.backend == "threshold" else 0.0),
+                     n_clients=fl.n_clients), d)
 
     @jax.jit
     def fl_round(key: Array, w: Array, g_prev: Array, age: Array,
                  sel_count: Array, xs: Array, ys: Array, residual: Array):
         key_sel, key_ch = jax.random.split(key)
-        idx = selection.select_indices(policy_name, key_sel, g_prev, age,
-                                       k=k, k_m=k_m, r=r)
         grads = clients(w, xs, ys)                       # (N, d)
+        if fl.backend == "threshold":
+            # production-scale server phase: dense faded aggregate, then one
+            # fused threshold select+merge pass (selection scores the fresh
+            # aggregate — the threshold route's operating point)
+            h = oac.sample_fading(key_sel, fl.n_clients, fl.channel)
+            fresh = jnp.einsum("n,nd->d", h, grads) / fl.n_clients
+            g_t, age_next, _ = engine.select_and_merge(fresh, g_prev, age,
+                                                       key=key_ch)
+            sel_mask = (age_next == 0.0).astype(jnp.float32)
+            w_next = w - fl.global_lr * g_t              # Eq. (9)
+            sel_count = sel_count + sel_mask
+            return w_next, g_t, age_next, sel_count, residual, sel_mask
+        idx = engine.select(key_sel, g_prev, age)        # Eq. (11)
+        sel_mask = jnp.zeros((d,), jnp.float32).at[idx].set(1.0)
         if fl.error_feedback:
             # add back last round's unsent mass; shared mask => the residual
             # is identical across clients and can live on the server side
@@ -113,7 +141,9 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
         w_next = w - fl.global_lr * g_t                  # Eq. (9)
         age_next = update_age_by_indices(age, idx)       # Eq. (10)
         sel_count = sel_count.at[idx].add(1.0)
-        return w_next, g_t, age_next, sel_count, residual, idx
+        # last slot is the dense selection mask on BOTH backends, so callers
+        # can swap backends without changing what they consume
+        return w_next, g_t, age_next, sel_count, residual, sel_mask
 
     return fl_round
 

@@ -82,12 +82,31 @@ def two_stage_topk(x: Array, k: int, block_size: int = 4096,
 
 
 def fairk_update(g: Array, g_prev: Array, age: Array, theta_m, theta_a,
-                 mode: Optional[str] = None) -> Tuple[Array, Array]:
-    """Fused threshold-FAIR-k server update (see kernels.fairk_update)."""
+                 mode: Optional[str] = None,
+                 block_size: int = 65536) -> Tuple[Array, Array]:
+    """Fused threshold-FAIR-k server update (see kernels.fairk_update).
+
+    Accepts any length: non-block-aligned inputs (e.g. arbitrary parameter
+    leaves routed through the SelectionEngine) are zero-padded to the block
+    grid and sliced back — padding never leaks (|0| < θ_M rejects it from
+    the output region we keep)."""
     mode = mode or ("pallas" if _on_tpu() else "ref")
     tm = jnp.asarray(theta_m, jnp.float32)
     ta = jnp.asarray(theta_a, jnp.float32)
     if mode == "ref":
         return ref.fairk_update_ref(g, g_prev, age, tm, ta)
-    return fairk_update_pallas(g, g_prev, age, tm, ta,
-                               interpret=(mode == "interpret"))
+    d = g.shape[0]
+    # lane-align the block (multiple of 256) so small/odd leaves don't hand
+    # Mosaic an unaligned 1-D tile; size it from the trip count so padding
+    # stays < 256 * nb instead of block-1 (d = block_size + 1 must not
+    # double the HBM traffic of this bandwidth-bound pass)
+    nb = -(-d // block_size)              # trip count at the requested block
+    per_block = -(-d // nb)
+    block = -(-per_block // 256) * 256    # lane-aligned actual block
+    pad = nb * block - d
+    if pad:
+        g, g_prev, age = (jnp.pad(x, (0, pad)) for x in (g, g_prev, age))
+    g_t, age_out = fairk_update_pallas(g, g_prev, age, tm, ta,
+                                       block_size=block,
+                                       interpret=(mode == "interpret"))
+    return (g_t[:d], age_out[:d]) if pad else (g_t, age_out)

@@ -26,7 +26,8 @@ from repro.configs import ARCHS, SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (make_fl_oac_step, make_prefill_step,
                                 make_serve_step, make_train_step)
-from repro.roofline import analyze_hlo, build_report, suggestion
+from repro.roofline import (analyze_hlo, build_report, suggestion,
+                            xla_cost_analysis)
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "benchmarks", "artifacts", "dryrun")
@@ -72,7 +73,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     print(mem)                               # proves it fits
-    cost = compiled.cost_analysis()
+    cost = xla_cost_analysis(compiled)
     print({k: v for k, v in cost.items()
            if k in ("flops", "bytes accessed", "transcendentals")})
     parsed = analyze_hlo(compiled.as_text())

@@ -34,7 +34,10 @@ from math import prod as np_prod
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import InputShape, ModelConfig
+from repro.core.engine import (EngineConfig, SelectionEngine,
+                               sampled_thresholds, threshold_mask)
 from repro.launch import sharding as shlib
 from repro.launch.mesh import axis_size, batch_axes
 from repro.models import transformer as tr
@@ -116,19 +119,6 @@ def _batch_pspecs(cfg: ModelConfig, gb: int, mesh, micro: bool) -> Dict:
     return specs
 
 
-def _index_jitter(n: int) -> Array:
-    """Deterministic per-coordinate jitter in [0, 1) for integer-age ties."""
-    i = jax.lax.iota(jnp.uint32, n)
-    return (i * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
-            ).astype(jnp.float32) / float(1 << 24)
-
-
-def _strided_sample(x: Array, cap: int) -> Array:
-    n = x.shape[0]
-    stride = max(1, n // cap)
-    return x[::stride]
-
-
 def fairk_threshold_masks(g_flat: Array, age_flat: Array,
                           oac: OacServerConfig, sample_cap: int
                           ) -> Tuple[Array, Array]:
@@ -136,19 +126,20 @@ def fairk_threshold_masks(g_flat: Array, age_flat: Array,
 
     Stage M: |g| >= theta_M  (theta_M ~ (1 - rho*k_m_frac) quantile of |g|).
     Stage A: among the rest, age+jitter >= theta_A sized to rho*(1-k_m_frac).
-    Returns (mask selected, mask_m)."""
-    n = g_flat.shape[0]
-    mag = jnp.abs(g_flat.astype(jnp.float32))
-    rho_m = oac.rho * oac.k_m_frac
-    theta_m = jnp.quantile(_strided_sample(mag, sample_cap),
-                           1.0 - rho_m)
-    mask_m = mag >= theta_m
-    age_eff = age_flat.astype(jnp.float32) + _index_jitter(n)
-    rho_rest = (oac.rho - rho_m) / jnp.maximum(1.0 - rho_m, 1e-6)
-    theta_a = jnp.quantile(_strided_sample(age_eff, sample_cap),
-                           1.0 - rho_rest)
-    mask_a = (age_eff >= theta_a) & (~mask_m)
-    return (mask_m | mask_a).astype(jnp.float32), mask_m
+    Returns (mask selected, mask_m).  Thin wrapper over the SelectionEngine
+    threshold primitives (core.engine) — kept as the launch-facing name."""
+    theta_m, theta_a = sampled_thresholds(
+        g_flat, age_flat, rho=oac.rho, k_m_frac=oac.k_m_frac,
+        sample_cap=sample_cap)
+    return threshold_mask(g_flat, age_flat, theta_m, theta_a)
+
+
+def _leaf_engine(oac: OacServerConfig, n: int) -> SelectionEngine:
+    """Threshold-backend engine for one parameter leaf of ``n`` elements."""
+    return SelectionEngine(
+        EngineConfig(policy="fairk", backend="threshold", rho=oac.rho,
+                     k_m_frac=oac.k_m_frac, sample_cap=oac.sample_cap,
+                     noise_std=oac.noise_std, n_clients=oac.n_clients), n)
 
 
 def _leaf_server_update(g: Array, g_prev: Array, age: Array, key: Array,
@@ -157,18 +148,12 @@ def _leaf_server_update(g: Array, g_prev: Array, age: Array, key: Array,
     (reconstructed gradient g_t, new g_prev, new age)."""
     shape = g.shape
     gf = g.reshape(-1)
-    af = age.reshape(-1)
-    mask, _ = fairk_threshold_masks(gf, af, oac, oac.sample_cap)
-    fresh = gf.astype(jnp.float32)
-    if oac.noise_std > 0.0:
-        fresh = fresh + (oac.noise_std / oac.n_clients) * jax.random.normal(
-            key, gf.shape, jnp.float32)
-    keep = 1.0 - mask
-    g_t = mask * fresh + keep * g_prev.reshape(-1).astype(jnp.float32)
-    age_next = ((af.astype(jnp.float32) + 1.0) * keep)
-    age_next = jnp.minimum(age_next, 120.0).astype(jnp.int8)
+    eng = _leaf_engine(oac, gf.shape[0])
+    g_t, age_next, _ = eng.select_and_merge(
+        gf, g_prev.reshape(-1), age.reshape(-1),
+        key=key if oac.noise_std > 0.0 else None)
     return (g_t.reshape(shape), g_t.astype(g_prev.dtype).reshape(shape),
-            age_next.reshape(shape))
+            age_next.astype(jnp.int8).reshape(shape))
 
 
 # ---------------------------------------------------------------------------
@@ -268,11 +253,10 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
             }
             return new_params, new_opt, new_server
 
-        update_sharded = jax.shard_map(
-            update_phase, mesh=mesh,
+        update_sharded = compat.shard_map(
+            update_phase, mesh,
             in_specs=(p_specs, o_specs, srv_specs, p_specs, P()),
-            out_specs=(p_specs, o_specs, srv_specs),
-            check_vma=False)
+            out_specs=(p_specs, o_specs, srv_specs))
     else:
         def update_sharded(params, opt_state, server, grads, seed):
             updates, new_opt = opt.update(grads, opt_state, params)
@@ -496,10 +480,9 @@ def make_fl_oac_step(cfg: ModelConfig, mesh, *, seq_len: int = 1024,
         "labels": SDS((n_clients * local_batch, seq_len), jnp.int32),
     }
     b_pspec = {"tokens": P(axes, None), "labels": P(axes, None)}
-    fn = jax.shard_map(fl_oac_step, mesh=mesh,
-                       in_specs=(P(), P(), P(), b_pspec, P()),
-                       out_specs=(P(), P(), P(), P()),
-                       check_vma=False)
+    fn = compat.shard_map(fl_oac_step, mesh,
+                          in_specs=(P(), P(), P(), b_pspec, P()),
+                          out_specs=(P(), P(), P(), P()))
     named = lambda s: shlib.to_named(s, mesh)
     repl = NamedSharding(mesh, P())
     in_sh = (repl, repl, repl, named(b_pspec), repl)

@@ -1,0 +1,100 @@
+"""``hypothesis`` facade for the property tests.
+
+When the real ``hypothesis`` is installed (CI does), this module re-exports
+it untouched.  When it is missing (the pinned jax_pallas container), a
+minimal deterministic stand-in provides the same surface the test-suite
+uses — ``given`` / ``settings`` / ``strategies.integers`` /
+``strategies.sampled_from`` / ``strategies.data`` — driving each test with
+``max_examples`` seeded draws instead of adaptive search.  No shrinking, no
+database; coverage is fixed but reproducible, which is exactly what a
+hermetic tier-1 run needs.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies
+    st = strategies
+    HAVE_HYPOTHESIS = True
+except ImportError:                                        # pragma: no cover
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def example_from(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _DataObject:
+        """Stand-in for hypothesis' interactive ``data()`` object."""
+
+        def __init__(self, rng: random.Random):
+            self._rng = rng
+
+        def draw(self, strategy: _Strategy):
+            return strategy.example_from(self._rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(options) -> _Strategy:
+            opts = list(options)
+            return _Strategy(lambda rng: rng.choice(opts))
+
+        @staticmethod
+        def data() -> _Strategy:
+            return _Strategy(lambda rng: _DataObject(rng))
+
+    strategies = st = _Strategies()
+
+    _DEFAULT_EXAMPLES = 10
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                base = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode())
+                for i in range(n):
+                    rng = random.Random(base + i)
+                    drawn = {name: s.example_from(rng)
+                             for name, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+            # pytest must not see the strategy-filled parameters (it would
+            # look for fixtures of the same name): hide the original
+            # signature and expose only the remaining params (e.g. self)
+            del wrapper.__wrapped__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strats])
+            return wrapper
+        return deco
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        """Accepts (and ignores) deadline / database / etc. kwargs."""
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+
+__all__ = ["given", "settings", "strategies", "st", "HAVE_HYPOTHESIS"]

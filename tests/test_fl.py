@@ -97,6 +97,26 @@ def test_budgets():
     assert FLConfig(policy="roundrobin").budgets(1000)[1] == 0
 
 
+def test_threshold_backend_learns(task):
+    """FLConfig(backend="threshold") — the engine's fused d>>1e7 server
+    route — must train, keep every coordinate participating, and track the
+    rho budget (approximately: thresholds, not exact top-k)."""
+    h = _run(task, "fairk", backend="threshold")
+    assert np.isfinite(h["acc"][-1])
+    assert h["acc"][-1] > 0.5
+    assert (h["sel_count"] > 0).mean() > 0.95
+    # per-round selected fraction ~ rho (sel_count sums dense masks)
+    frac = h["sel_count"].sum() / (h["sel_count"].shape[0] * 80)
+    assert 0.05 < frac < 0.2, frac
+
+
+def test_threshold_backend_rejects_exact_only_modes():
+    from repro.fl import make_fl_step
+    with pytest.raises(ValueError):
+        make_fl_step(FLConfig(backend="threshold", one_bit=True),
+                     lambda w: w, lambda p, x, y: 0.0, 16)
+
+
 def test_error_feedback_improves_fairk(task):
     """Beyond-paper: EF composes with FAIR-k (+acc) but cannot fix Top-k's
     selection starvation (EF changes what is sent, not what is selected)."""

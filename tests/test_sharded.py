@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = [pytest.mark.sharded, pytest.mark.slow]
+
 _SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
@@ -159,6 +161,50 @@ print(json.dumps({"losses": losses, "frac_fresh": frac_fresh,
     assert all(np.isfinite(l) for l in res["losses"])
     # after a round, ~rho of blocks are fresh (age 0)
     assert abs(res["frac_fresh"] - res["kb_over_nb"]) < 0.05
+
+
+def test_engine_sharded_parity_multi_device():
+    """SelectionEngine sharded backend on a REAL 8-device mesh: must match
+    the exact backend on tie-free ages, and must match the single-device
+    threshold backend bit-exactly even under heavy integer-age ties (the
+    global-index jitter property a 1-device parity test cannot see)."""
+    out = _run_sub(r"""
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.core.engine import EngineConfig, SelectionEngine
+
+d = 4096
+rng = np.random.default_rng(0)
+g = jnp.asarray(rng.normal(size=d).astype("f4"))
+gp = jnp.asarray(rng.normal(size=d).astype("f4"))
+common = dict(policy="fairk", rho=0.1, k_m_frac=0.75, exact_theta=True)
+mesh = jax.make_mesh((8,), ("shard",))
+ex = SelectionEngine(EngineConfig(backend="exact", **common), d)
+th = SelectionEngine(EngineConfig(backend="threshold", **common), d)
+sh = SelectionEngine(EngineConfig(backend="sharded", **common), d,
+                     mesh=mesh)
+out = {}
+# (a) tie-free ages: sharded == exact (the documented parity guarantee)
+age = jnp.asarray(rng.permutation(d).astype("f4"))
+g1, a1, _ = jax.jit(ex.select_and_merge)(g, gp, age)
+with mesh:
+    g2, a2, _ = jax.jit(sh.select_and_merge)(g, gp, age)
+out["exact_mismatch"] = int((np.asarray(g1) != np.asarray(g2)).sum()
+                            + (np.asarray(a1) != np.asarray(a2)).sum())
+# (b) heavy ties: sharded == threshold (same global-index jitter)
+age_t = jnp.asarray(rng.integers(0, 8, d).astype("f4"))
+g3, a3, s3 = th.select_and_merge(g, gp, age_t)
+with mesh:
+    g4, a4, s4 = jax.jit(sh.select_and_merge)(g, gp, age_t)
+out["thresh_mismatch"] = int((np.asarray(g3) != np.asarray(g4)).sum()
+                             + (np.asarray(a3) != np.asarray(a4)).sum())
+out["n_thresh"] = float(s3["n_selected"])
+out["n_sharded"] = float(s4["n_selected"])
+print(json.dumps(out))
+""")
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["exact_mismatch"] == 0, res
+    assert res["thresh_mismatch"] == 0, res
+    assert res["n_thresh"] == res["n_sharded"], res
 
 
 import numpy as np  # noqa: E402  (used in asserts above)

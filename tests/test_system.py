@@ -13,6 +13,8 @@ from repro.data import partition, synthetic
 from repro.fl import FLConfig, train
 from repro.models import cnn
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def results():
