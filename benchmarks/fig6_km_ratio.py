@@ -1,24 +1,44 @@
-"""Fig. 6 — FAIR-k test accuracy vs the magnitude share k_M/k.
+"""Fig. 6 — FAIR-k quality vs the magnitude share k_M/k.
 
 k_M/k = 1 is Top-k, k_M/k = 0 is Round-Robin; the paper's claim is a wide
-stable plateau (no delicate tuning needed)."""
+stable plateau (no delicate tuning needed).
+
+Routed through the vmapped ``fl.sweep`` grid (ROADMAP item): the whole
+k_M/k curve — every ratio x every seed — runs as ONE compiled program
+(rank-based FAIR-k with the magnitude budget as a traced per-lane scalar)
+instead of one sequential FL simulation per ratio.  Per the DESIGN.md §7
+data gate the claim is *relative*: interior ratios must not be worse than
+the k_M/k = 1 / = 0 endpoints (the plateau), measured by final loss on the
+synthetic heterogeneous-quadratic scenario."""
 
 import time
 
-from benchmarks.common import make_task, run_policy
+import numpy as np
+
+from repro.fl.sweep import SweepConfig, run_sweep
 
 RATIOS = (0.0, 0.25, 0.5, 0.75, 1.0)
 
 
 def run(fast: bool = True):
     rounds = 120 if fast else 600
-    task = make_task(fast=fast)
-    rows, detail = [], {}
-    for r in RATIOS:
-        t0 = time.perf_counter()
-        h = run_policy(task, "fairk", rounds, k_m_frac=r)
-        us = (time.perf_counter() - t0) / rounds * 1e6
-        detail[str(r)] = h["acc"][-1]
-        rows.append((f"fig6/km_ratio_{r:.2f}", us,
-                     f"acc={h['acc'][-1]:.3f}"))
+    n_seeds = 4 if fast else 8
+    cfg = SweepConfig(d=2048, n_clients=16, rho=0.2, rounds=rounds)
+    t0 = time.perf_counter()
+    out = run_sweep(cfg, policies=("fairk",), k_m_fracs=RATIOS,
+                    n_seeds=n_seeds)
+    total_us = (time.perf_counter() - t0) * 1e6
+    # mean final loss per ratio across seeds (labels: (policy, frac, seed))
+    finals = {}
+    for i, (_, frac, _) in enumerate(out["labels"]):
+        finals.setdefault(frac, []).append(float(out["loss"][i, -1]))
+    n_grid = len(out["labels"])
+    rows, detail = [], {"rounds": rounds, "n_seeds": n_seeds,
+                        "grid_points": n_grid,
+                        "grid_total_us": total_us}
+    for frac in sorted(finals):
+        loss = float(np.mean(finals[frac]))
+        detail[str(frac)] = loss
+        rows.append((f"fig6/km_ratio_{frac:.2f}", total_us / n_grid,
+                     f"loss={loss:.4f}"))
     return rows, detail

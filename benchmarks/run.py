@@ -20,14 +20,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks import (engine_bench, ext_error_feedback, ext_fairk_auto,
                         fig3_aou, fig4_convergence, fig5_staleness,
                         fig6_km_ratio, fig7_local_epochs, fig9_prototype,
-                        kernels_bench, roofline_table, table1_lipschitz)
+                        kernels_bench, packed_bench, roofline_table,
+                        table1_lipschitz)
 
 MODULES = {
     "fig3": fig3_aou, "fig4": fig4_convergence, "fig5": fig5_staleness,
     "fig6": fig6_km_ratio, "fig7": fig7_local_epochs,
     "table1": table1_lipschitz, "fig9": fig9_prototype,
     "kernels": kernels_bench, "roofline": roofline_table,
-    "engine": engine_bench,
+    "engine": engine_bench, "packed": packed_bench,
     "ext_ef": ext_error_feedback, "ext_auto": ext_fairk_auto,
 }
 

@@ -39,11 +39,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core import selection
+from repro.core import packing, selection
 
 Array = jax.Array
 
-BACKENDS = ("exact", "threshold", "sharded")
+BACKENDS = ("exact", "threshold", "sharded", "packed")
 
 # FAIR-k-family policies expressible as (θ_M, θ_A) thresholds; the other
 # three (toprand / agetopk / randk) need index arithmetic -> exact only.
@@ -58,15 +58,23 @@ AGE_CAP = 120.0
 # threshold building blocks (promoted from launch/steps.py)
 # ---------------------------------------------------------------------------
 
-def index_jitter(n: int, offset=0) -> Array:
-    """Deterministic per-coordinate jitter in [0, 1) (Knuth hash of the
-    *global* coordinate index) — breaks integer-age ties without an extra
-    input.  ``offset`` (static or traced) is the global index of the first
-    local coordinate, so shards hash the same ids as the unsharded path.
-    Must stay bit-identical to the fused kernel's in-kernel recomputation."""
-    i = jax.lax.iota(jnp.uint32, n) + jnp.asarray(offset, jnp.uint32)
-    return (i * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
+def jitter_from_ids(ids) -> Array:
+    """Deterministic per-coordinate jitter in [0, 1): Knuth hash of the
+    coordinate index.  THE canonical host-side formula — must stay
+    bit-identical to the in-kernel recomputation in kernels/fairk_update.py
+    and its oracle in kernels/ref.py (tie-break parity depends on it)."""
+    u = jnp.asarray(ids).astype(jnp.uint32)
+    return (u * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
             ).astype(jnp.float32) / float(1 << 24)
+
+
+def index_jitter(n: int, offset=0) -> Array:
+    """Jitter for coordinates [offset, offset + n) — breaks integer-age
+    ties without an extra input.  ``offset`` (static or traced) is the
+    global index of the first local coordinate, so shards hash the same ids
+    as the unsharded path."""
+    return jitter_from_ids(jax.lax.iota(jnp.uint32, n)
+                           + jnp.asarray(offset, jnp.uint32))
 
 
 def strided_sample(x: Array, cap: int) -> Array:
@@ -75,22 +83,42 @@ def strided_sample(x: Array, cap: int) -> Array:
     return x[::stride]
 
 
-def sampled_thresholds(g: Array, age: Array, *, rho: float, k_m_frac: float,
-                       sample_cap: int) -> Tuple[Array, Array]:
-    """(θ_M, θ_A) from strided-sample quantiles (no global sort).
+def thresholds_from_samples(mag_s: Array, age_eff_s: Array, *, rho: float,
+                            k_m_frac: float) -> Tuple[Array, Array]:
+    """(θ_M, θ_A) quantiles from pre-drawn samples of |g| and jittered age.
 
     θ_M ≈ the (1 − ρ·k_m_frac) quantile of |g|; θ_A sizes the age stage to
     the residual budget over the whole vector (the complement correction is
     the (1 − ρ_M) denominator)."""
     rho_m = rho * k_m_frac
     rho_a = (rho - rho_m) / max(1.0 - rho_m, 1e-6)
-    mag = jnp.abs(g.astype(jnp.float32))
-    age_eff = age.astype(jnp.float32) + index_jitter(g.shape[0])
-    theta_m = (jnp.quantile(strided_sample(mag, sample_cap), 1.0 - rho_m)
+    theta_m = (jnp.quantile(mag_s, 1.0 - rho_m)
                if rho_m > 0.0 else jnp.float32(jnp.inf))
-    theta_a = (jnp.quantile(strided_sample(age_eff, sample_cap), 1.0 - rho_a)
+    theta_a = (jnp.quantile(age_eff_s, 1.0 - rho_a)
                if rho_a > 0.0 else jnp.float32(jnp.inf))
     return theta_m.astype(jnp.float32), theta_a.astype(jnp.float32)
+
+
+def sampled_thresholds(g: Array, age: Array, *, rho: float, k_m_frac: float,
+                       sample_cap: int,
+                       sample_ids: Optional[Array] = None
+                       ) -> Tuple[Array, Array]:
+    """(θ_M, θ_A) from strided-sample quantiles (no global sort).
+
+    ``sample_ids`` (static int32 positions, e.g. ``PackedLayout.sample_ids``)
+    restricts the sample to those coordinates — REQUIRED on packed buffers,
+    where pad zeros in the sample would bias θ_M low (jitter still hashes
+    the true buffer positions so ties break identically to the kernel)."""
+    mag = jnp.abs(g.astype(jnp.float32))
+    age32 = age.astype(jnp.float32)
+    if sample_ids is None:
+        mag_s = strided_sample(mag, sample_cap)
+        age_s = strided_sample(age32 + index_jitter(g.shape[0]), sample_cap)
+    else:
+        ids = jnp.asarray(sample_ids)
+        mag_s = mag[ids]
+        age_s = age32[ids] + jitter_from_ids(ids)
+    return thresholds_from_samples(mag_s, age_s, rho=rho, k_m_frac=k_m_frac)
 
 
 def exact_thresholds(g: Array, age: Array, *, k: int, k_m: int
@@ -170,6 +198,19 @@ class EngineConfig:
     noise_std: float = 0.0               # channel noise on fresh coords
     n_clients: int = 1                   # N in Eq. (7) (noise / N scaling)
     kernel_mode: Optional[str] = None    # None auto | pallas | interpret | ref
+    # -- packed backend only ------------------------------------------------
+    warm_start: bool = False             # carry (θ, counts) across rounds and
+                                         # skip the quantile pass when warm
+    warm_alpha: float = 0.5              # budget-correction exponent
+    warm_clip: float = 2.0               # per-round correction factor bound
+    warm_tol: float = 0.25               # trust region: re-run the quantile
+                                         # pass when |n_sel - k| > tol * k
+    warm_streak: int = 3                 # on-track rounds required before
+                                         # carried thresholds are trusted
+    # psum/pmean axes for threshold + count reduction when the packed path
+    # runs inside shard_map (launch.steps): one tiny scalar collective makes
+    # (θ_M, θ_A) globally consistent across shards
+    reduce_axes: Tuple[str, ...] = ()
 
 
 class SelectionEngine:
@@ -177,9 +218,13 @@ class SelectionEngine:
 
     Construct once per (d, config); all methods are pure jit-compatible
     functions of their array arguments.  ``mesh`` is only required for the
-    sharded backend (the flat vector is sharded across *all* mesh axes)."""
+    sharded backend (the flat vector is sharded across *all* mesh axes);
+    ``layout`` (a ``core.packing.PackedLayout``) only for the packed backend,
+    whose buffers are ``(layout.d_packed,)`` with budgets drawn against the
+    ``layout.d_valid`` real coordinates."""
 
-    def __init__(self, cfg: EngineConfig, d: int, mesh=None):
+    def __init__(self, cfg: EngineConfig, d: int, mesh=None,
+                 layout: Optional[packing.PackedLayout] = None):
         if cfg.backend not in BACKENDS:
             raise ValueError(f"unknown backend {cfg.backend!r}; "
                              f"choose from {BACKENDS}")
@@ -196,16 +241,28 @@ class SelectionEngine:
             n_dev = _mesh_size(mesh)
             if d % n_dev:
                 raise ValueError(f"d={d} not divisible by {n_dev} devices")
+        if cfg.backend == "packed":
+            if layout is None:
+                raise ValueError("packed backend needs a PackedLayout")
+            if d != layout.d_packed:
+                raise ValueError(f"d={d} != layout.d_packed="
+                                 f"{layout.d_packed}")
         self.cfg = cfg
         self.d = d
         self.mesh = mesh
+        self.layout = layout
+        # budgets target the REAL coordinates (pads are dead weight)
+        self.d_budget = layout.d_valid if layout is not None else d
+        self._sample_ids = (jnp.asarray(layout.sample_ids(cfg.sample_cap))
+                            if layout is not None else None)
 
     # -- budgets ------------------------------------------------------------
 
     def budgets(self) -> Tuple[int, int, int]:
         """(k, k_M, r) with the Remark-1 policy specialisations applied."""
         cfg = self.cfg
-        k = cfg.k if cfg.k is not None else max(2, round(cfg.rho * self.d))
+        k = (cfg.k if cfg.k is not None
+             else max(2, round(cfg.rho * self.d_budget)))
         k_m = (cfg.k_m if cfg.k_m is not None
                else int(round(cfg.k_m_frac * k)))
         if cfg.policy == "topk":
@@ -217,7 +274,7 @@ class SelectionEngine:
 
     def _rho_parts(self) -> Tuple[float, float]:
         k, k_m, _ = self.budgets()
-        return k / self.d, (k_m / k if k else 0.0)
+        return k / self.d_budget, (k_m / k if k else 0.0)
 
     # -- selection ----------------------------------------------------------
 
@@ -243,12 +300,17 @@ class SelectionEngine:
     # -- fused server phase -------------------------------------------------
 
     def select_and_merge(self, g: Array, g_prev: Array, age: Array, *,
-                         key: Optional[Array] = None
+                         key: Optional[Array] = None,
+                         tstate: Optional[Dict[str, Array]] = None
                          ) -> Tuple[Array, Array, Dict[str, Any]]:
         """One server phase: select on ``g``, merge fresh ``g`` over stale
         ``g_prev`` (Eq. 8), advance AoU (Eq. 10).  Returns f32
         ``(g_t, age', stats)``; stats holds the selection artefacts
-        (count, thresholds, and — exact backend — the index vector)."""
+        (count, thresholds, and — exact backend — the index vector).
+
+        ``tstate`` (packed backend with ``warm_start=True`` only) is the
+        carried threshold state from ``packing.init_threshold_state``; the
+        successor state is returned in ``stats["tstate"]``."""
         if g.shape != (self.d,):
             raise ValueError(f"expected shape ({self.d},), got {g.shape}")
         if self.cfg.noise_std > 0.0 and key is None:
@@ -259,6 +321,8 @@ class SelectionEngine:
             return self._exact_update(g, g_prev, age, key)
         if backend == "threshold":
             return self._threshold_update(g, g_prev, age, key)
+        if backend == "packed":
+            return self._packed_update(g, g_prev, age, key, tstate)
         return self._sharded_update(g, g_prev, age, key)
 
     def _noisy(self, fresh: Array, key: Optional[Array]) -> Array:
@@ -299,6 +363,109 @@ class SelectionEngine:
         stats = {"theta_m": theta_m, "theta_a": theta_a,
                  "n_selected": n_sel, "k": k}
         return g_t, age_next, stats
+
+    def _packed_thresholds(self, g, age, tstate):
+        """(θ_M, θ_A, streak') for a packed buffer: pad-excluding sampled
+        quantiles, or — when warm — last round's thresholds with the
+        budget-tracking correction (no quantile pass at all on steady-state
+        rounds, via lax.cond)."""
+        cfg = self.cfg
+        k, k_m, _ = self.budgets()
+        streak = jnp.float32(0.0)
+        if cfg.exact_theta:
+            # pads (|g|=0, age=PAD_AGE+jitter < 0) can never enter either
+            # top-k, so the order statistics are those of the valid coords
+            return (*exact_thresholds(g, age, k=k, k_m=k_m), streak)
+        rho, km_frac = self._rho_parts()
+
+        def bootstrap(_):
+            tm, ta = sampled_thresholds(
+                g, age, rho=rho, k_m_frac=km_frac,
+                sample_cap=cfg.sample_cap, sample_ids=self._sample_ids)
+            if cfg.reduce_axes:
+                tm = jax.lax.pmean(tm, cfg.reduce_axes)
+                ta = jax.lax.pmean(ta, cfg.reduce_axes)
+            return tm, ta
+
+        if not (cfg.warm_start and tstate is not None):
+            return (*bootstrap(None), streak)
+
+        # trust region, two gates:
+        #  * on_track — last round's realised count stayed inside the budget
+        #    tolerance;
+        #  * streak — the warm predictor must have AGREED with the sampled
+        #    quantiles for ``warm_streak`` consecutive bootstrap rounds.
+        #    During drift (the cold-start transient: every unselected age
+        #    advances together for ~1/rho rounds) the sampled θ_A moves ~1
+        #    age unit per round while the predictor is near-constant, so the
+        #    streak never builds and every round bootstraps — which is the
+        #    correct (and self-healing) behaviour.  Once the age histogram
+        #    is stationary, predictions match, the streak builds, and the
+        #    quantile pass stops executing (lax.cond).
+        pred_tm, pred_ta = packing.warm_corrected_thresholds(
+            tstate, k=k, k_m=k_m, alpha=cfg.warm_alpha, clip=cfg.warm_clip)
+        on_track = ((tstate["init"] > 0.0)
+                    & (jnp.abs(tstate["n_sel"] - k) <= cfg.warm_tol * k))
+        use_warm = on_track & (tstate["streak"] >= cfg.warm_streak)
+        tm, ta = jax.lax.cond(use_warm, lambda _: (pred_tm, pred_ta),
+                              bootstrap, None)
+        both = lambda a, b: jnp.isinf(a) & jnp.isinf(b)
+        ratio_tol = 1.0 + cfg.warm_tol
+        pred_ok = (
+            (both(ta, pred_ta) | (jnp.abs(ta - pred_ta) <= 0.75))
+            & (both(tm, pred_tm)
+               | ((pred_tm <= tm * ratio_tol) & (pred_tm * ratio_tol >= tm))))
+        streak = jnp.where(on_track & pred_ok, tstate["streak"] + 1.0, 0.0)
+        return tm, ta, streak
+
+    def _packed_update(self, g, g_prev, age, key, tstate):
+        """One fused FAIR-k pass over the whole packed pytree buffer.
+
+        Exactly one quantile estimation (or none, when warm) and exactly one
+        ``fairk_update`` launch for the entire model — vs one of each per
+        leaf on the historical per-leaf path."""
+        from repro.kernels import ops          # deferred: kernels import core
+        cfg = self.cfg
+        k, _, _ = self.budgets()
+        theta_m, theta_a, streak = self._packed_thresholds(g, age, tstate)
+        g_t, age_next = ops.fairk_update(g, g_prev, age, theta_m, theta_a,
+                                         mode=cfg.kernel_mode)
+        # selected coordinates are exactly the age-reset ones (Eq. 10);
+        # pads keep the negative sentinel so they never count
+        sel = (age_next == 0.0).astype(jnp.float32)
+        n_sel = sel.sum()
+        n_sel_m = (sel * (jnp.abs(g.astype(jnp.float32)) >= theta_m)).sum()
+        if cfg.reduce_axes:
+            # per-shard mean keeps counts comparable to the local budgets
+            n_sel = jax.lax.pmean(n_sel, cfg.reduce_axes)
+            n_sel_m = jax.lax.pmean(n_sel_m, cfg.reduce_axes)
+        if cfg.noise_std > 0.0:
+            g_t = g_t + sel * (cfg.noise_std / cfg.n_clients) * \
+                jax.random.normal(key, g.shape, jnp.float32)
+        tstate_next = {"theta_m": theta_m, "theta_a": theta_a,
+                       "n_sel_m": n_sel_m, "n_sel": n_sel,
+                       "init": jnp.float32(1.0), "streak": streak}
+        stats = {"theta_m": theta_m, "theta_a": theta_a,
+                 "n_selected": n_sel, "k": k, "tstate": tstate_next}
+        return g_t, age_next, stats
+
+    def select_and_merge_tree(self, g_tree, g_prev_tree, age_tree, *,
+                              key: Optional[Array] = None,
+                              tstate: Optional[Dict[str, Array]] = None):
+        """Pytree façade over the packed backend: pack (g, g_prev, age),
+        run the single fused pass, unpack ``(g_t, age')`` back to the tree
+        structure (leaf dtypes from the layout).  Returns
+        ``(g_t_tree, age_tree', stats)``."""
+        lay = self.layout
+        if lay is None:
+            raise ValueError("select_and_merge_tree needs the packed "
+                             "backend (construct with layout=...)")
+        g = lay.pack(g_tree)
+        gp = lay.pack(g_prev_tree)
+        ag = lay.pack_age(age_tree)
+        g_t, age_next, stats = self._packed_update(g, gp, ag, key, tstate)
+        return lay.unpack(g_t, cast=False), lay.unpack(age_next,
+                                                       cast=False), stats
 
     def _sharded_update(self, g, g_prev, age, key):
         cfg = self.cfg
@@ -353,8 +520,16 @@ def _mesh_size(mesh) -> int:
     return n
 
 
-def make_engine(policy: str = "fairk", backend: str = "exact", *, d: int,
-                mesh=None, **cfg_kw) -> SelectionEngine:
-    """Convenience constructor mirroring the string-driven policy registry."""
+def make_engine(policy: str = "fairk", backend: str = "exact", *,
+                d: Optional[int] = None, mesh=None,
+                layout: Optional[packing.PackedLayout] = None,
+                **cfg_kw) -> SelectionEngine:
+    """Convenience constructor mirroring the string-driven policy registry.
+    ``d`` may be omitted when ``layout`` pins it (= ``layout.d_packed``)."""
+    if d is None:
+        if layout is None:
+            raise ValueError("make_engine needs d (or a layout)")
+        d = layout.d_packed
     return SelectionEngine(EngineConfig(policy=policy, backend=backend,
-                                        **cfg_kw), d, mesh=mesh)
+                                        **cfg_kw), d, mesh=mesh,
+                           layout=layout)

@@ -23,12 +23,13 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 import numpy as np
 
-from repro.core import oac, quantize
+from repro.core import oac, packing, quantize
 from repro.core.aou import update_age_by_indices
 from repro.core.engine import EngineConfig, SelectionEngine
 from repro.core.oac import ChannelConfig
 
 Array = jax.Array
+SDS = jax.ShapeDtypeStruct
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +44,10 @@ class FLConfig:
     backend: str = "exact"          # core.engine backend: "exact" keeps the
                                     # paper-faithful index path; "threshold"
                                     # runs the sampled-quantile fused-kernel
-                                    # server phase (d >> 1e7 route)
+                                    # server phase (d >> 1e7 route);
+                                    # "packed" adds warm-start thresholds on
+                                    # top (quantile pass skipped on
+                                    # steady-state rounds)
     compression_ratio: float = 0.1  # rho = k / d
     k_m_frac: float = 0.75          # k_M / k (paper Sec. V-A)
     r_frac: float = 1.5             # AgeTop-k candidate ratio r / k
@@ -83,10 +87,10 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
     arrives as stacked arrays (N, H, B, ...)."""
     k, k_m, r = fl.budgets(d, k_m_frac)
     grad_fn = jax.grad(loss_fn)
-    if fl.backend not in ("exact", "threshold"):
-        raise ValueError(f"FLConfig.backend must be exact|threshold, "
+    if fl.backend not in ("exact", "threshold", "packed"):
+        raise ValueError(f"FLConfig.backend must be exact|threshold|packed, "
                          f"got {fl.backend!r}")
-    if fl.backend == "threshold" and (fl.one_bit or fl.error_feedback):
+    if fl.backend != "exact" and (fl.one_bit or fl.error_feedback):
         raise ValueError("one_bit / error_feedback need the exact backend")
 
     def client_update(w_flat: Array, xs: Array, ys: Array) -> Array:
@@ -101,30 +105,40 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
 
     clients = jax.vmap(client_update, in_axes=(None, 0, 0))
     policy_name = "fairk" if fl.policy == "fairk_auto" else fl.policy
+    # the flat (d,) server vector is a trivially packed single-leaf layout
+    # (lane=1: no pads — ops.fairk_update handles trailing alignment) — the
+    # packed backend rides it to get warm-start thresholds
+    layout = (packing.PackedLayout.from_tree([SDS((d,), jnp.float32)], lane=1)
+              if fl.backend == "packed" else None)
     engine = SelectionEngine(
         EngineConfig(policy=policy_name, backend=fl.backend,
                      k=k, k_m=k_m, r=r,
                      noise_std=(fl.channel.noise_std
-                                if fl.backend == "threshold" else 0.0),
-                     n_clients=fl.n_clients), d)
+                                if fl.backend != "exact" else 0.0),
+                     n_clients=fl.n_clients,
+                     warm_start=(fl.backend == "packed")), d,
+        layout=layout)
 
     @jax.jit
     def fl_round(key: Array, w: Array, g_prev: Array, age: Array,
-                 sel_count: Array, xs: Array, ys: Array, residual: Array):
+                 sel_count: Array, xs: Array, ys: Array, residual: Array,
+                 tstate):
         key_sel, key_ch = jax.random.split(key)
         grads = clients(w, xs, ys)                       # (N, d)
-        if fl.backend == "threshold":
+        if fl.backend in ("threshold", "packed"):
             # production-scale server phase: dense faded aggregate, then one
             # fused threshold select+merge pass (selection scores the fresh
             # aggregate — the threshold route's operating point)
             h = oac.sample_fading(key_sel, fl.n_clients, fl.channel)
             fresh = jnp.einsum("n,nd->d", h, grads) / fl.n_clients
-            g_t, age_next, _ = engine.select_and_merge(fresh, g_prev, age,
-                                                       key=key_ch)
+            g_t, age_next, stats = engine.select_and_merge(
+                fresh, g_prev, age, key=key_ch,
+                tstate=tstate if fl.backend == "packed" else None)
             sel_mask = (age_next == 0.0).astype(jnp.float32)
             w_next = w - fl.global_lr * g_t              # Eq. (9)
             sel_count = sel_count + sel_mask
-            return w_next, g_t, age_next, sel_count, residual, sel_mask
+            return (w_next, g_t, age_next, sel_count, residual, sel_mask,
+                    stats.get("tstate", tstate))
         idx = engine.select(key_sel, g_prev, age)        # Eq. (11)
         sel_mask = jnp.zeros((d,), jnp.float32).at[idx].set(1.0)
         if fl.error_feedback:
@@ -141,9 +155,9 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
         w_next = w - fl.global_lr * g_t                  # Eq. (9)
         age_next = update_age_by_indices(age, idx)       # Eq. (10)
         sel_count = sel_count.at[idx].add(1.0)
-        # last slot is the dense selection mask on BOTH backends, so callers
+        # sel_mask is the dense selection mask on ALL backends, so callers
         # can swap backends without changing what they consume
-        return w_next, g_t, age_next, sel_count, residual, sel_mask
+        return w_next, g_t, age_next, sel_count, residual, sel_mask, tstate
 
     return fl_round
 
@@ -213,6 +227,7 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
                                "max_aou": [], "k": fl.budgets(d)[0], "d": d}
     w, g, age, sel_count = state.w, state.g, state.age, state.sel_count
     residual = jnp.zeros_like(state.g)
+    tstate = packing.init_threshold_state()
     history["km_frac"] = []
     for t in range(fl.rounds):
         key, sub = jax.random.split(key)
@@ -221,9 +236,9 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
             fl_step = get_step(_auto_km_level(gradient_gini(g)))
         history["km_frac"].append(
             [f for f, st in steps.items() if st is fl_step][0])
-        w, g, age, sel_count, residual, _ = fl_step(
+        w, g, age, sel_count, residual, _, tstate = fl_step(
             sub, w, g, age, sel_count, jnp.asarray(xs), jnp.asarray(ys),
-            residual)
+            residual, tstate)
         history["mean_aou"].append(float(age.mean()))
         history["max_aou"].append(float(age.max()))
         if eval_fn is not None and ((t + 1) % eval_every == 0 or t == 0

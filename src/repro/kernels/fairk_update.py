@@ -10,6 +10,12 @@ loop at d/256 ~ 10^9 coordinates per device.
 Thresholds are scalars estimated outside (sampled quantiles); the index
 jitter for integer-age tie-breaking is regenerated inside the kernel from
 the global coordinate index (identical to launch.steps._index_jitter).
+
+Pad protocol (core.packing): coordinates with ``age < 0`` are padding in a
+packed multi-leaf buffer.  They can never be selected (neither stage), and
+their age passes through unchanged so the sentinel survives round trips —
+this is what lets the packed server phase keep interior lane-alignment pads
+inside the buffer across steps without them polluting the selection budget.
 """
 
 from __future__ import annotations
@@ -35,12 +41,14 @@ def _fairk_update_kernel(g_ref, gp_ref, age_ref, thetas_ref,
     idx = (bid * block_size + jax.lax.iota(jnp.uint32, block_size))
     jitter = (idx * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
               ).astype(jnp.float32) / float(1 << 24)
-    mask_m = jnp.abs(g) >= theta_m
-    mask = mask_m | ((age + jitter >= theta_a) & (~mask_m))
+    valid = age >= 0.0                      # age < 0 marks packing pads
+    mask_m = valid & (jnp.abs(g) >= theta_m)
+    mask = mask_m | (valid & (age + jitter >= theta_a) & (~mask_m))
     keep = 1.0 - mask.astype(jnp.float32)
     gt_ref[...] = (mask.astype(jnp.float32) * g
                    + keep * gp_ref[...].astype(jnp.float32))
-    age_out_ref[...] = jnp.minimum((age + 1.0) * keep, 120.0)
+    age_out_ref[...] = jnp.where(valid,
+                                 jnp.minimum((age + 1.0) * keep, 120.0), age)
 
 
 @functools.partial(jax.jit, static_argnames=("block_size", "interpret"))

@@ -81,15 +81,23 @@ def two_stage_topk(x: Array, k: int, block_size: int = 4096,
     return global_topk_from_candidates(vals, idxs, k)
 
 
+# trace-time counter: how many fused fairk_update passes a program traces.
+# The packed-server bench smoke asserts packed == 1 vs per-leaf == n_leaves.
+FAIRK_UPDATE_CALLS = 0
+
+
 def fairk_update(g: Array, g_prev: Array, age: Array, theta_m, theta_a,
                  mode: Optional[str] = None,
                  block_size: int = 65536) -> Tuple[Array, Array]:
     """Fused threshold-FAIR-k server update (see kernels.fairk_update).
 
     Accepts any length: non-block-aligned inputs (e.g. arbitrary parameter
-    leaves routed through the SelectionEngine) are zero-padded to the block
-    grid and sliced back — padding never leaks (|0| < θ_M rejects it from
-    the output region we keep)."""
+    leaves routed through the SelectionEngine) are padded to the block grid
+    (age pad = PAD_AGE sentinel, so padding can never select) and sliced
+    back.  Interior pads of packed buffers (core.packing) use the same
+    sentinel and pass through untouched."""
+    global FAIRK_UPDATE_CALLS
+    FAIRK_UPDATE_CALLS += 1
     mode = mode or ("pallas" if _on_tpu() else "ref")
     tm = jnp.asarray(theta_m, jnp.float32)
     ta = jnp.asarray(theta_a, jnp.float32)
@@ -105,7 +113,8 @@ def fairk_update(g: Array, g_prev: Array, age: Array, theta_m, theta_a,
     block = -(-per_block // 256) * 256    # lane-aligned actual block
     pad = nb * block - d
     if pad:
-        g, g_prev, age = (jnp.pad(x, (0, pad)) for x in (g, g_prev, age))
+        g, g_prev = (jnp.pad(x, (0, pad)) for x in (g, g_prev))
+        age = jnp.pad(age, (0, pad), constant_values=-1.0)  # PAD_AGE
     g_t, age_out = fairk_update_pallas(g, g_prev, age, tm, ta,
                                        block_size=block,
                                        interpret=(mode == "interpret"))

@@ -43,17 +43,22 @@ def sign_mv_ref(votes: Array) -> Array:
 
 def fairk_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
                      theta_a: Array) -> Tuple[Array, Array]:
-    """Oracle for the fused threshold-FAIR-k server update (one shard)."""
+    """Oracle for the fused threshold-FAIR-k server update (one shard).
+
+    Coordinates with ``age < 0`` are packing pads (core.packing.PAD_AGE):
+    never selected, age passes through unchanged."""
     d = g.shape[0]
     g32 = g.astype(jnp.float32)
     age32 = age.astype(jnp.float32)
     idx = jnp.arange(d, dtype=jnp.uint32)
     jitter = (idx * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
               ).astype(jnp.float32) / float(1 << 24)
-    mask_m = jnp.abs(g32) >= theta_m
-    mask = (mask_m | ((age32 + jitter >= theta_a) & (~mask_m))
+    valid = age32 >= 0.0
+    mask_m = valid & (jnp.abs(g32) >= theta_m)
+    mask = (mask_m | (valid & (age32 + jitter >= theta_a) & (~mask_m))
             ).astype(jnp.float32)
     keep = 1.0 - mask
     g_t = mask * g32 + keep * g_prev.astype(jnp.float32)
-    age_next = jnp.minimum((age32 + 1.0) * keep, 120.0)
+    age_next = jnp.where(valid, jnp.minimum((age32 + 1.0) * keep, 120.0),
+                         age32)
     return g_t, age_next

@@ -33,9 +33,11 @@ ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "benchmarks", "artifacts", "dryrun")
 
 
-def make_step(cfg, shape, mesh):
+def make_step(cfg, shape, mesh, oac_packed: bool = True):
     if shape.kind == "train":
-        return make_train_step(cfg, shape, mesh)
+        from repro.launch.steps import OacServerConfig
+        return make_train_step(cfg, shape, mesh,
+                               oac=OacServerConfig(packed=oac_packed))
     if shape.kind == "prefill":
         return make_prefill_step(cfg, shape, mesh)
     return make_serve_step(cfg, shape, mesh)
@@ -43,7 +45,8 @@ def make_step(cfg, shape, mesh):
 
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             out_dir: str, fl_mode: bool = False, fl_baseline: bool = False,
-            fl_one_bit: bool = False, force: bool = False) -> dict:
+            fl_one_bit: bool = False, force: bool = False,
+            oac_packed: bool = True) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "x".join(str(s) for s in
                          (mesh.devices.shape if hasattr(mesh, "devices")
@@ -51,11 +54,20 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     mesh_name = ("2x16x16" if multi_pod else "16x16")
     tag = f"{arch}__{shape_name}__{mesh_name}" + (
         "__flbase" if fl_baseline else
-        "__fl1bit" if fl_one_bit else "__fl" if fl_mode else "")
+        "__fl1bit" if fl_one_bit else "__fl" if fl_mode else "") + (
+        "" if oac_packed else "__perleaf")
     out_path = os.path.join(out_dir, tag + ".json")
     if os.path.exists(out_path) and not force:
         with open(out_path) as f:
-            return json.load(f)
+            cached = json.load(f)
+        # artifacts written before the packed server phase share the
+        # default tag — only reuse a train artifact if it records the same
+        # server-phase flavour (stale per-leaf stats must not masquerade
+        # as the packed configuration)
+        meta = cached.get("meta", {})
+        if (meta.get("kind") != "train"
+                or meta.get("oac_packed") == oac_packed):
+            return cached
 
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -64,7 +76,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         bundle = make_fl_oac_step(cfg, mesh, baseline=fl_baseline,
                                   one_bit=fl_one_bit)
     else:
-        bundle = make_step(cfg, shape, mesh)
+        bundle = make_step(cfg, shape, mesh, oac_packed=oac_packed)
     with mesh:
         lowered = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                           out_shardings=bundle.out_shardings
@@ -120,6 +132,9 @@ def main():
                     help="FL-OAC without compression (full all-reduce)")
     ap.add_argument("--fl-onebit", action="store_true",
                     help="FL-OAC with one-bit FSK-MV uplink (Sec. V-B)")
+    ap.add_argument("--per-leaf-server", action="store_true",
+                    help="historical per-leaf OAC server phase (default: "
+                         "packed single fused pass, DESIGN.md §9)")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--out", default=os.path.abspath(ART_DIR))
     args = ap.parse_args()
@@ -139,7 +154,8 @@ def main():
         try:
             run_one(arch, shape, args.multi_pod, args.out,
                     fl_mode=args.fl_mode, fl_baseline=args.fl_baseline,
-                    fl_one_bit=args.fl_onebit, force=args.force)
+                    fl_one_bit=args.fl_onebit, force=args.force,
+                    oac_packed=not args.per_leaf_server)
         except Exception as e:
             failures.append((arch, shape, repr(e)))
             traceback.print_exc()

@@ -131,8 +131,9 @@ def opt_pspecs(opt_state: Any, p_specs: Any) -> Any:
 
 
 def server_pspecs(p_specs: Any) -> Any:
-    """OAC server state {g, age} mirrors parameter sharding."""
-    return {"g": p_specs, "age": p_specs}
+    """OAC server state: {g, age} mirror parameter sharding; the warm-start
+    threshold state vector is replicated (psum-consistent across shards)."""
+    return {"g": p_specs, "age": p_specs, "theta": P()}
 
 
 def cache_pspecs(caches: Any, cfg: ModelConfig, mesh,

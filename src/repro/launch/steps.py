@@ -5,11 +5,14 @@ Two integrations of the paper's technique (DESIGN.md §3, §5):
 * ``make_train_step`` — the production trainer for the 10 assigned
   architectures.  Gradients flow through the standard 2-D FSDPxTP backward
   (XLA inserts the data-axis reduction = the multiple-access superposition);
-  the OAC server phase then runs inside a fully-manual ``shard_map``:
-  per-shard threshold-based FAIR-k (sampled quantile thresholds + index
-  jitter for integer-age tie-breaking), channel-noise injection on the fresh
-  coordinates, Eq. (8) stale merge, Eq. (10) AoU update, and the optimizer —
-  all local, zero extra collectives.
+  the OAC server phase then runs inside a fully-manual ``shard_map``.  By
+  default (``OacServerConfig.packed``) each shard packs its local pytree
+  into ONE lane-aligned flat buffer (core.packing) and runs a single fused
+  threshold-FAIR-k pass with globally consistent (θ_M, θ_A) — pmean'd
+  across shards, two scalars — and warm-start thresholds that skip the
+  quantile pass on steady-state rounds.  ``packed=False`` keeps the
+  historical per-leaf loop (one quantile estimation + kernel launch per
+  leaf) for comparison; benchmarks/packed_bench.py measures the gap.
 
 * ``make_fl_oac_step`` — the paper's own regime at its own scale: every mesh
   device is one FL client holding a full model replica; FAIR-k is applied at
@@ -36,7 +39,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import InputShape, ModelConfig
-from repro.core.engine import (EngineConfig, SelectionEngine,
+from repro.core import packing
+from repro.core.engine import (AGE_CAP, EngineConfig, SelectionEngine,
                                sampled_thresholds, threshold_mask)
 from repro.launch import sharding as shlib
 from repro.launch.mesh import axis_size, batch_axes
@@ -54,7 +58,14 @@ class OacServerConfig:
     k_m_frac: float = 0.75         # magnitude share of the budget
     noise_std: float = 0.0         # channel noise sigma_z (post-aggregation)
     n_clients: int = 16            # N in Eq. (7) (= data shards)
-    sample_cap: int = 65536        # per-leaf quantile sample size
+    sample_cap: int = 65536        # quantile sample size (per leaf when
+                                   # packed=False, per shard when packed)
+    packed: bool = True            # ONE fused FAIR-k pass over the whole
+                                   # local pytree (core.packing) instead of
+                                   # the historical per-leaf loop
+    warm_start: bool = True        # carry (θ_M, θ_A) across rounds; skip
+                                   # the quantile pass on steady-state
+                                   # rounds (packed path only)
 
 
 @dataclasses.dataclass
@@ -161,10 +172,14 @@ def _leaf_server_update(g: Array, g_prev: Array, age: Array, key: Array,
 # ---------------------------------------------------------------------------
 
 def init_server_state(params: Any) -> Dict:
-    """g_prev in bf16, age in int8 (max staleness << 127) — DESIGN.md §5."""
+    """g_prev in bf16, age in int8 (max staleness << 127) — DESIGN.md §5.
+    ``theta`` is the replicated warm-start threshold state (DESIGN.md §9),
+    all-zero = bootstrap on the first round."""
     return {
         "g": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
         "age": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.int8), params),
+        "theta": jnp.zeros((len(packing.THRESHOLD_STATE_FIELDS),),
+                           jnp.float32),
     }
 
 
@@ -172,6 +187,7 @@ def abstract_server_state(params_abs: Any) -> Dict:
     return {
         "g": jax.tree.map(lambda p: SDS(p.shape, jnp.bfloat16), params_abs),
         "age": jax.tree.map(lambda p: SDS(p.shape, jnp.int8), params_abs),
+        "theta": SDS((len(packing.THRESHOLD_STATE_FIELDS),), jnp.float32),
     }
 
 
@@ -227,9 +243,39 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
 
     if oac is not None:
         oac = dataclasses.replace(oac, n_clients=n_shards)
+        mesh_axes = tuple(mesh.axis_names)
 
-        def update_phase(params, opt_state, server, grads, seed):
-            """Runs under fully-manual shard_map: leaves are local shards."""
+        def _packed_server_phase(server, grads, seed):
+            """ONE fused FAIR-k pass over the whole local pytree: pack the
+            shard's leaves into a lane-aligned buffer (trace-time layout),
+            estimate/carry globally consistent (θ_M, θ_A) (pmean across
+            shards — two scalars), run a single ``fairk_update``, unpack.
+            Replaces ~n_leaves quantile estimations + kernel launches."""
+            layout = packing.PackedLayout.from_tree(grads)
+            eng = SelectionEngine(
+                EngineConfig(policy="fairk", backend="packed", rho=oac.rho,
+                             k_m_frac=oac.k_m_frac,
+                             sample_cap=oac.sample_cap,
+                             noise_std=oac.noise_std,
+                             n_clients=oac.n_clients,
+                             warm_start=oac.warm_start,
+                             reduce_axes=mesh_axes),
+                layout.d_packed, layout=layout)
+            tstate = packing.threshold_state_from_vec(server["theta"])
+            key = (jax.random.PRNGKey(seed)
+                   if oac.noise_std > 0.0 else None)
+            g_t, age_tree, stats = eng.select_and_merge_tree(
+                grads, server["g"], server["age"], key=key, tstate=tstate)
+            new_server = {
+                "g": jax.tree.map(lambda x: x.astype(jnp.bfloat16), g_t),
+                "age": jax.tree.map(lambda x: x.astype(jnp.int8), age_tree),
+                "theta": packing.threshold_state_to_vec(stats["tstate"]),
+            }
+            return g_t, new_server
+
+        def _per_leaf_server_phase(server, grads, seed):
+            """Historical per-leaf loop (oac.packed=False): one threshold
+            estimation + one fused kernel per parameter leaf."""
             leaves_g, treedef = jax.tree_util.tree_flatten(grads)
             leaves_gp = treedef.flatten_up_to(server["g"])
             leaves_age = treedef.flatten_up_to(server["age"])
@@ -243,14 +289,22 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                 new_gp.append(b)
                 new_age.append(c)
             g_t = jax.tree_util.tree_unflatten(treedef, g_t)
+            new_server = {
+                "g": jax.tree_util.tree_unflatten(treedef, new_gp),
+                "age": jax.tree_util.tree_unflatten(treedef, new_age),
+                "theta": server["theta"],
+            }
+            return g_t, new_server
+
+        def update_phase(params, opt_state, server, grads, seed):
+            """Runs under fully-manual shard_map: leaves are local shards."""
+            phase = (_packed_server_phase if oac.packed
+                     else _per_leaf_server_phase)
+            g_t, new_server = phase(server, grads, seed)
             g_t = jax.tree.map(lambda gt, p: gt.astype(p.dtype), g_t, params)
             updates, new_opt = opt.update(g_t, opt_state, params)
             new_params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
                                       params, updates)
-            new_server = {
-                "g": jax.tree_util.tree_unflatten(treedef, new_gp),
-                "age": jax.tree_util.tree_unflatten(treedef, new_age),
-            }
             return new_params, new_opt, new_server
 
         update_sharded = compat.shard_map(
@@ -303,6 +357,8 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
     meta = {
         "kind": "train", "n_micro": n_micro, "micro_batch": mb,
         "seq_len": shape.seq_len, "oac": oac is not None,
+        "oac_packed": bool(oac.packed) if oac is not None else False,
+        "oac_warm_start": bool(oac.warm_start) if oac is not None else False,
         "optimizer": opt_name or cfg.optimizer, "lr": lr,
         "gather_dtype": gather_dtype,
         "scans": {"microbatch": n_micro, "layers": cfg.n_scan_blocks},
@@ -469,7 +525,10 @@ def make_fl_oac_step(cfg: ModelConfig, mesh, *, seq_len: int = 1024,
         fresh_blocks = fresh_blocks + noise
         # --- Eq. (8)-(10) at block granularity ------------------------------
         g_new = gp.astype(jnp.float32).at[idx].set(fresh_blocks)
-        age_next = (age_b + 1.0).at[idx].set(0.0)
+        # Eq. (10) with the engine's staleness clip: without it the block
+        # AoU grows unbounded over a long run and breaks the int8-safety
+        # invariant (DESIGN.md §5) the coordinate-level paths guarantee
+        age_next = jnp.minimum((age_b + 1.0).at[idx].set(0.0), AGE_CAP)
         g_new_flat = g_new.reshape(-1)[:d]
         w_next = w_flat - 0.01 * g_new_flat.astype(w_flat.dtype)
         loss_mean = jax.lax.pmean(loss, axes)

@@ -35,6 +35,9 @@ def main():
                     help="enable the FAIR-k OAC server phase")
     ap.add_argument("--no-oac", dest="oac", action="store_false")
     ap.add_argument("--rho", type=float, default=0.1)
+    ap.add_argument("--per-leaf-server", action="store_true",
+                    help="historical per-leaf OAC server phase (default: "
+                         "packed single fused pass, DESIGN.md §9)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -42,7 +45,8 @@ def main():
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((1, n_dev), ("data", "model"))
     shape = InputShape("custom", args.seq, args.batch, "train")
-    oac = OacServerConfig(rho=args.rho) if args.oac else None
+    oac = (OacServerConfig(rho=args.rho, packed=not args.per_leaf_server)
+           if args.oac else None)
     bundle = make_train_step(cfg, shape, mesh, n_micro=1, oac=oac, lr=1e-3)
 
     key = jax.random.PRNGKey(args.seed)
@@ -52,7 +56,9 @@ def main():
     opt_state = opt.init(params)
     server = init_server_state(params)
 
-    step_fn = jax.jit(bundle.fn)
+    # donate (params, opt_state, server): the packed server buffers are
+    # consumed and rebuilt every step — donation lets XLA update in place
+    step_fn = jax.jit(bundle.fn, donate_argnums=(0, 1, 2))
     print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M-param family "
           f"variant, {args.steps} steps, oac={'on' if args.oac else 'off'}")
     with mesh:
