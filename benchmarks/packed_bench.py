@@ -12,11 +12,18 @@ per-leaf loop):
 * ``packed_warm`` — packed with warm-start thresholds on a steady-state
   round: the strided-sample quantile pass is skipped entirely (lax.cond on
   the carried threshold state).
+* ``persisted``   — the launch.steps production shape: g_prev / age (and
+  the EF residual) live as flat buffers ACROSS rounds, so a steady-state
+  round packs exactly ONE tree (the fresh grads) and unpacks exactly ONE
+  (g_t for the optimizer) — zero re-pack copies of the carried state.
+* ``persisted_ef`` — persisted plus the fused kernel's residual
+  (error-feedback) stage.
 
 Emits CSV rows through ``benchmarks.run`` and writes
 benchmarks/artifacts/packed_bench.json.  ``--smoke`` runs a tiny pytree and
-asserts the structural claims (packed traces exactly ONE fused update;
-per-leaf traces one per leaf) — wired into CI.
+asserts the structural claims (packed traces exactly ONE fused update vs
+one per leaf; the persisted path performs ZERO re-pack copies of
+g_prev/age per steady-state round) — wired into CI.
 
   PYTHONPATH=src python -m benchmarks.packed_bench [--full | --smoke]
 """
@@ -114,12 +121,44 @@ def build_packed_fn(tree, *, warm):
     return jax.jit(packed), layout, eng
 
 
-def _traced_fused_calls(fn, *args):
-    """Fused-update launches one trace of ``fn`` records (the structural
-    packed-vs-per-leaf claim, independent of timers)."""
-    before = ops.FAIRK_UPDATE_CALLS
+def build_persisted_fn(tree, *, warm, error_feedback=False):
+    """The launch.steps._packed_server_phase shape: carried state is FLAT
+    (g_prev bf16, age int8, optional EF residual f32) — only the fresh
+    grads are packed, only the optimizer-facing g_t is unpacked."""
+    layout = packing.PackedLayout.from_tree(tree)
+    eng = _mk_engine("packed", layout, warm=warm)
+
+    def persisted(g_tree, gp_flat, age_flat, res_flat, tstate):
+        g_flat = layout.pack(g_tree)           # the only pack per round
+        g_t, age_next, stats = eng.select_and_merge(
+            g_flat, gp_flat, age_flat, tstate=tstate, residual=res_flat)
+        g_t_tree = layout.unpack(g_t, cast=False)   # optimizer-facing tree
+        return (g_t_tree, g_t.astype(jnp.bfloat16),
+                age_next.astype(jnp.int8),
+                stats.get("residual"), stats["tstate"])
+
+    def flat_state(gp_tree, age_tree):
+        gp = layout.pack(gp_tree).astype(jnp.bfloat16)
+        ag = layout.pack_age(age_tree).astype(jnp.int8)
+        res = (jnp.zeros((layout.d_packed,), jnp.float32)
+               if error_feedback else None)
+        return gp, ag, res
+
+    return jax.jit(persisted), flat_state, layout
+
+
+def _traced_counts(fn, *args):
+    """(fused launches, packs, unpacks) ONE trace of ``fn`` records — the
+    structural packed-vs-per-leaf and persisted-state claims, independent
+    of timers.  Counted in a single ``eval_shape`` because a second trace
+    with the same signature hits the jit cache and never re-runs the
+    Python body (so its counters would read zero)."""
+    before = (ops.FAIRK_UPDATE_CALLS, packing.PACK_CALLS,
+              packing.UNPACK_CALLS)
     jax.eval_shape(fn, *args)
-    return ops.FAIRK_UPDATE_CALLS - before
+    return (ops.FAIRK_UPDATE_CALLS - before[0],
+            packing.PACK_CALLS - before[1],
+            packing.UNPACK_CALLS - before[2])
 
 
 def bench_tree(n_layers, d_model, vocab, repeats=3):
@@ -128,15 +167,31 @@ def bench_tree(n_layers, d_model, vocab, repeats=3):
     per_leaf_fn, n_leaves = build_per_leaf_fn(tree)
     packed_fn, layout, eng = build_packed_fn(tree, warm=False)
     warm_fn, _, _ = build_packed_fn(tree, warm=True)
+    persisted_fn, flat_state, _ = build_persisted_fn(tree, warm=False)
+    persisted_ef_fn, flat_state_ef, _ = build_persisted_fn(
+        tree, warm=False, error_feedback=True)
 
     ts0 = packing.init_threshold_state()
-    calls_per_leaf = _traced_fused_calls(per_leaf_fn, tree, g_prev, age)
-    calls_packed = _traced_fused_calls(packed_fn, tree, g_prev, age, ts0)
+    gp_flat, age_flat, _ = flat_state(g_prev, age)
+    _, _, res_flat = flat_state_ef(g_prev, age)
+    calls_per_leaf, _, _ = _traced_counts(per_leaf_fn, tree, g_prev, age)
+    # per-round tree copies: the PR-2 re-pack path packs 3 trees + unpacks
+    # 2; the persisted path packs 1 (fresh grads) + unpacks 1 (g_t) — the
+    # carried g_prev/age (and EF residual) are NEVER re-packed
+    calls_packed, *copies_packed = _traced_counts(packed_fn, tree, g_prev,
+                                                  age, ts0)
+    _, *copies_persisted = _traced_counts(persisted_fn, tree, gp_flat,
+                                          age_flat, None, ts0)
+    _, *copies_persisted_ef = _traced_counts(persisted_ef_fn, tree, gp_flat,
+                                             age_flat, res_flat, ts0)
 
     res = {"n_leaves": n_leaves, "d_valid": layout.d_valid,
            "d_packed": layout.d_packed, "k": eng.budgets()[0],
            "fused_calls_per_leaf": calls_per_leaf,
-           "fused_calls_packed": calls_packed}
+           "fused_calls_packed": calls_packed,
+           "copies_packed": tuple(copies_packed),
+           "copies_persisted": tuple(copies_persisted),
+           "copies_persisted_ef": tuple(copies_persisted_ef)}
 
     us, _ = timed(lambda: jax.block_until_ready(
         per_leaf_fn(tree, g_prev, age)), repeats=repeats)
@@ -144,6 +199,13 @@ def bench_tree(n_layers, d_model, vocab, repeats=3):
     us, (g_t, age_next, ts1) = timed(lambda: jax.block_until_ready(
         packed_fn(tree, g_prev, age, ts0)), repeats=repeats)
     res["packed_us"] = us
+    us, _ = timed(lambda: jax.block_until_ready(
+        persisted_fn(tree, gp_flat, age_flat, None, ts0)), repeats=repeats)
+    res["persisted_us"] = us
+    us, _ = timed(lambda: jax.block_until_ready(
+        persisted_ef_fn(tree, gp_flat, age_flat, res_flat, ts0)),
+        repeats=repeats)
+    res["persisted_ef_us"] = us
     # steady-state warm round: a carried state whose counts track the
     # budget and whose prediction streak is established — the lax.cond
     # takes the warm branch and the quantile pass never executes
@@ -157,6 +219,8 @@ def bench_tree(n_layers, d_model, vocab, repeats=3):
     res["speedup_packed"] = res["per_leaf_us"] / res["packed_us"]
     res["speedup_warm"] = res["per_leaf_us"] / res["packed_warm_us"]
     res["warm_vs_cold"] = res["packed_us"] / res["packed_warm_us"]
+    res["speedup_persisted"] = res["per_leaf_us"] / res["persisted_us"]
+    res["persisted_vs_repack"] = res["packed_us"] / res["persisted_us"]
 
     # isolate the threshold stage: sampled quantile pass (bootstrap branch)
     # vs warm correction (a handful of scalar flops) — the work the warm
@@ -187,13 +251,20 @@ def run(fast: bool = True):
          f"speedup={res['speedup_packed']:.2f}x"),
         ("packed/fused_warm", res["packed_warm_us"],
          f"speedup={res['speedup_warm']:.2f}x"),
+        ("packed/persisted", res["persisted_us"],
+         f"vs_repack={res['persisted_vs_repack']:.2f}x"),
+        ("packed/persisted_ef", res["persisted_ef_us"],
+         f"copies={res['copies_persisted_ef']}"),
     ]
     detail = {"tree": {"n_layers": shape[0], "d_model": shape[1],
                        "vocab": shape[2]}, **res,
               "note": "per_leaf = historical per-leaf loop; packed = one "
-                      "fused pass (core.packing); packed_warm = packed + "
-                      "warm-start thresholds (steady-state round, no "
-                      "quantile pass)"}
+                      "fused pass (core.packing, re-packs state trees); "
+                      "packed_warm = packed + warm-start thresholds "
+                      "(steady-state round, no quantile pass); persisted = "
+                      "flat g_prev/age carried across rounds (1 pack + 1 "
+                      "unpack per round); persisted_ef = + the fused "
+                      "kernel's residual (error-feedback) stage"}
     out_dir = os.path.join(os.path.dirname(__file__), "artifacts")
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "packed_bench.json"), "w") as f:
@@ -204,20 +275,28 @@ def run(fast: bool = True):
 def smoke() -> dict:
     """CI gate: structural claims on a tiny pytree (seconds, not minutes).
 
-    Asserts the packed server phase traces EXACTLY ONE fused update vs one
-    per leaf for the loop.  Deliberately NO wall-clock assertion: a single
-    timing sample at tiny sizes is scheduler noise on shared runners — the
-    speedup claim is checked by the real benchmark's JSON artifact."""
+    Asserts (a) the packed server phase traces EXACTLY ONE fused update vs
+    one per leaf for the loop, and (b) the persisted path performs ZERO
+    re-pack copies of the carried state per steady-state round — exactly
+    1 pack (the fresh grads) and 1 unpack (the optimizer-facing g_t),
+    vs 3 packs + 2 unpacks on the re-pack path.  Deliberately NO
+    wall-clock assertion: a single timing sample at tiny sizes is
+    scheduler noise on shared runners — the speedup claim is checked by
+    the real benchmark's JSON artifact."""
     res = bench_tree(2, 32, 256, repeats=1)
     assert res["fused_calls_packed"] == 1, res
     assert res["fused_calls_per_leaf"] == res["n_leaves"], res
+    assert res["copies_packed"] == (3, 2), res        # the PR-2 re-pack path
+    assert res["copies_persisted"] == (1, 1), res     # zero state re-packs
+    assert res["copies_persisted_ef"] == (1, 1), res  # EF adds no copies
     out_dir = os.path.join(os.path.dirname(__file__), "artifacts")
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "packed_bench_smoke.json"), "w") as f:
         json.dump(res, f, indent=1)
     print(json.dumps(res, indent=1))
     print(f"[packed_bench --smoke] OK: 1 fused call vs "
-          f"{res['n_leaves']} per-leaf, "
+          f"{res['n_leaves']} per-leaf; persisted round = "
+          f"{res['copies_persisted']} (pack, unpack) tree copies, "
           f"speedup {res['speedup_packed']:.1f}x")
     return res
 

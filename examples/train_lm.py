@@ -71,7 +71,7 @@ def main():
     n_params = sum(p.size for p in jax.tree.leaves(params))
     opt = make_optimizer("adamw", args.lr)
     opt_state = opt.init(params)
-    server = init_server_state(params)
+    server = init_server_state(params, mesh=mesh, cfg=cfg, oac=oac)
     step_fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                       out_shardings=bundle.out_shardings)
     print(f"[train_lm] {cfg.name}: {n_params/1e6:.1f}M params, "

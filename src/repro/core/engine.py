@@ -27,6 +27,18 @@ Semantics (all backends):
   the algorithm calls for), fresh values come from ``g``, stale values from
   ``g_prev``, and the AoU vector advances by Eq. (10) capped at
   ``AGE_CAP`` (the fused kernel's staleness clip).
+
+Error feedback & one-bit (all backends, not just exact):
+  ``select_and_merge(..., residual=...)`` folds the error-feedback
+  accumulator back pre-selection — the score and the transmitted values
+  become ``g + residual`` — and returns the updated accumulator in
+  ``stats["residual"]`` (unsent mass on unselected coordinates,
+  quantization error on selected ones).  On the threshold/packed backends
+  the residual stage rides the SAME fused kernel pass
+  (``kernels.fairk_ef_update``).  ``fresh=...`` decouples the transmitted
+  values from the score source — the one-bit FSK-MV route passes the
+  majority-vote sign vector (``kernels.sign_mv``) as ``fresh`` while
+  scoring the vote energy.
 """
 
 from __future__ import annotations
@@ -101,24 +113,35 @@ def thresholds_from_samples(mag_s: Array, age_eff_s: Array, *, rho: float,
 
 def sampled_thresholds(g: Array, age: Array, *, rho: float, k_m_frac: float,
                        sample_cap: int,
-                       sample_ids: Optional[Array] = None
+                       sample_ids: Optional[Array] = None,
+                       residual: Optional[Array] = None
                        ) -> Tuple[Array, Array]:
     """(θ_M, θ_A) from strided-sample quantiles (no global sort).
 
     ``sample_ids`` (static int32 positions, e.g. ``PackedLayout.sample_ids``)
     restricts the sample to those coordinates — REQUIRED on packed buffers,
     where pad zeros in the sample would bias θ_M low (jitter still hashes
-    the true buffer positions so ties break identically to the kernel)."""
-    mag = jnp.abs(g.astype(jnp.float32))
+    the true buffer positions so ties break identically to the kernel).
+
+    ``residual`` (error feedback) folds into the magnitude statistic:
+    θ_M is estimated on ``|g + residual|`` — the residual is sampled at the
+    same positions and added sample-wise, so no d-length effective-gradient
+    temp is materialised for the estimate."""
     age32 = age.astype(jnp.float32)
     if sample_ids is None:
-        mag_s = strided_sample(mag, sample_cap)
+        g_s = strided_sample(g.astype(jnp.float32), sample_cap)
+        if residual is not None:
+            g_s = g_s + strided_sample(residual.astype(jnp.float32),
+                                       sample_cap)
         age_s = strided_sample(age32 + index_jitter(g.shape[0]), sample_cap)
     else:
         ids = jnp.asarray(sample_ids)
-        mag_s = mag[ids]
+        g_s = g[ids].astype(jnp.float32)
+        if residual is not None:
+            g_s = g_s + residual[ids].astype(jnp.float32)
         age_s = age32[ids] + jitter_from_ids(ids)
-    return thresholds_from_samples(mag_s, age_s, rho=rho, k_m_frac=k_m_frac)
+    return thresholds_from_samples(jnp.abs(g_s), age_s, rho=rho,
+                                   k_m_frac=k_m_frac)
 
 
 def exact_thresholds(g: Array, age: Array, *, k: int, k_m: int
@@ -160,6 +183,14 @@ def threshold_mask(g: Array, age: Array, theta_m: Array, theta_a: Array,
                                                      index_offset)
     mask_a = (age_eff >= theta_a) & (~mask_m)
     return (mask_m | mask_a).astype(jnp.float32), mask_m.astype(jnp.float32)
+
+
+def eff_score(g: Array, residual: Optional[Array]) -> Array:
+    """The error-feedback fold ``score = g + residual`` in f32 — THE
+    formula the fused kernel recomputes per block (kernels/fairk_update.py);
+    every host-side use must stay bit-identical to it."""
+    g32 = g.astype(jnp.float32)
+    return g32 if residual is None else g32 + residual.astype(jnp.float32)
 
 
 def masked_merge(fresh: Array, g_prev: Array, age: Array, mask: Array
@@ -288,20 +319,25 @@ class SelectionEngine:
         return selection.select_indices(self.cfg.policy, key, g, age,
                                         k=k, k_m=k_m, r=r)
 
-    def thresholds(self, g: Array, age: Array) -> Tuple[Array, Array]:
-        """(θ_M, θ_A) per config (order-statistic or sampled-quantile)."""
+    def thresholds(self, g: Array, age: Array,
+                   residual: Optional[Array] = None) -> Tuple[Array, Array]:
+        """(θ_M, θ_A) per config (order-statistic or sampled-quantile).
+        ``residual`` folds into the magnitude statistic (score = g + res)."""
         k, k_m, _ = self.budgets()
         if self.cfg.exact_theta:
-            return exact_thresholds(g, age, k=k, k_m=k_m)
+            return exact_thresholds(eff_score(g, residual), age, k=k, k_m=k_m)
         rho, km_frac = self._rho_parts()
         return sampled_thresholds(g, age, rho=rho, k_m_frac=km_frac,
-                                  sample_cap=self.cfg.sample_cap)
+                                  sample_cap=self.cfg.sample_cap,
+                                  residual=residual)
 
     # -- fused server phase -------------------------------------------------
 
     def select_and_merge(self, g: Array, g_prev: Array, age: Array, *,
                          key: Optional[Array] = None,
-                         tstate: Optional[Dict[str, Array]] = None
+                         tstate: Optional[Dict[str, Array]] = None,
+                         residual: Optional[Array] = None,
+                         fresh: Optional[Array] = None
                          ) -> Tuple[Array, Array, Dict[str, Any]]:
         """One server phase: select on ``g``, merge fresh ``g`` over stale
         ``g_prev`` (Eq. 8), advance AoU (Eq. 10).  Returns f32
@@ -310,7 +346,18 @@ class SelectionEngine:
 
         ``tstate`` (packed backend with ``warm_start=True`` only) is the
         carried threshold state from ``packing.init_threshold_state``; the
-        successor state is returned in ``stats["tstate"]``."""
+        successor state is returned in ``stats["tstate"]``.
+
+        ``residual`` (error feedback, any backend): the accumulator folds
+        back pre-selection — score and transmitted values become
+        ``g + residual`` — and ``stats["residual"]`` carries the successor
+        ``score - mask * sent`` (on the threshold/packed backends this is
+        a pad-aware stage of the same fused kernel pass).
+
+        ``fresh`` (one-bit FSK-MV, exact/threshold/packed): transmitted
+        values when they differ from the score source — pass the
+        ``kernels.sign_mv`` majority-vote signs while scoring the vote
+        energy in ``g``."""
         if g.shape != (self.d,):
             raise ValueError(f"expected shape ({self.d},), got {g.shape}")
         if self.cfg.noise_std > 0.0 and key is None:
@@ -318,12 +365,14 @@ class SelectionEngine:
                              "noise every round is not a channel)")
         backend = self.cfg.backend
         if backend == "exact":
-            return self._exact_update(g, g_prev, age, key)
+            return self._exact_update(g, g_prev, age, key, residual, fresh)
         if backend == "threshold":
-            return self._threshold_update(g, g_prev, age, key)
+            return self._threshold_update(g, g_prev, age, key, residual,
+                                          fresh)
         if backend == "packed":
-            return self._packed_update(g, g_prev, age, key, tstate)
-        return self._sharded_update(g, g_prev, age, key)
+            return self._packed_update(g, g_prev, age, key, tstate,
+                                       residual, fresh)
+        return self._sharded_update(g, g_prev, age, key, residual, fresh)
 
     def _noisy(self, fresh: Array, key: Optional[Array]) -> Array:
         cfg = self.cfg
@@ -333,24 +382,32 @@ class SelectionEngine:
             key, fresh.shape, jnp.float32)
         return fresh.astype(jnp.float32) + noise
 
-    def _exact_update(self, g, g_prev, age, key):
+    def _exact_update(self, g, g_prev, age, key, residual=None, fresh=None):
         k, _, _ = self.budgets()
         key_sel = key_noise = None
         if key is not None:
             key_sel, key_noise = jax.random.split(key)
-        idx = self.select(key_sel, g, age)
+        score = eff_score(g, residual)
+        idx = self.select(key_sel, score, age)
         mask = selection.mask_from_indices(idx, self.d)
-        g_t, age_next = masked_merge(self._noisy(g, key_noise), g_prev, age,
-                                     mask)
+        sent = score if fresh is None else fresh.astype(jnp.float32)
+        g_t, age_next = masked_merge(self._noisy(sent, key_noise), g_prev,
+                                     age, mask)
         stats = {"idx": idx, "n_selected": jnp.float32(k), "k": k}
+        if residual is not None:
+            # noise-free accounting (the channel error is not observable by
+            # the clients) — identical formula to the fused kernel's stage
+            stats["residual"] = score - mask * sent
         return g_t, age_next, stats
 
-    def _threshold_update(self, g, g_prev, age, key):
+    def _threshold_update(self, g, g_prev, age, key, residual=None,
+                          fresh=None):
         from repro.kernels import ops          # deferred: kernels import core
         k, _, _ = self.budgets()
-        theta_m, theta_a = self.thresholds(g, age)
-        g_t, age_next = ops.fairk_update(g, g_prev, age, theta_m, theta_a,
-                                         mode=self.cfg.kernel_mode)
+        theta_m, theta_a = self.thresholds(g, age, residual=residual)
+        g_t, age_next, res_next = ops.fairk_ef_update(
+            g, g_prev, age, theta_m, theta_a, residual=residual,
+            fresh=fresh, mode=self.cfg.kernel_mode)
         # selected coordinates are exactly the age-reset ones (Eq. 10)
         sel = (age_next == 0.0).astype(jnp.float32)
         n_sel = sel.sum()
@@ -362,26 +419,31 @@ class SelectionEngine:
                 jax.random.normal(key, g.shape, jnp.float32)
         stats = {"theta_m": theta_m, "theta_a": theta_a,
                  "n_selected": n_sel, "k": k}
+        if res_next is not None:
+            stats["residual"] = res_next
         return g_t, age_next, stats
 
-    def _packed_thresholds(self, g, age, tstate):
+    def _packed_thresholds(self, g, age, tstate, residual=None):
         """(θ_M, θ_A, streak') for a packed buffer: pad-excluding sampled
         quantiles, or — when warm — last round's thresholds with the
         budget-tracking correction (no quantile pass at all on steady-state
-        rounds, via lax.cond)."""
+        rounds, via lax.cond).  ``residual`` folds into the magnitude
+        statistic (score = g + residual; pads carry residual 0)."""
         cfg = self.cfg
         k, k_m, _ = self.budgets()
         streak = jnp.float32(0.0)
         if cfg.exact_theta:
             # pads (|g|=0, age=PAD_AGE+jitter < 0) can never enter either
             # top-k, so the order statistics are those of the valid coords
-            return (*exact_thresholds(g, age, k=k, k_m=k_m), streak)
+            return (*exact_thresholds(eff_score(g, residual), age,
+                                      k=k, k_m=k_m), streak)
         rho, km_frac = self._rho_parts()
 
         def bootstrap(_):
             tm, ta = sampled_thresholds(
                 g, age, rho=rho, k_m_frac=km_frac,
-                sample_cap=cfg.sample_cap, sample_ids=self._sample_ids)
+                sample_cap=cfg.sample_cap, sample_ids=self._sample_ids,
+                residual=residual)
             if cfg.reduce_axes:
                 tm = jax.lax.pmean(tm, cfg.reduce_axes)
                 ta = jax.lax.pmean(ta, cfg.reduce_axes)
@@ -418,23 +480,30 @@ class SelectionEngine:
         streak = jnp.where(on_track & pred_ok, tstate["streak"] + 1.0, 0.0)
         return tm, ta, streak
 
-    def _packed_update(self, g, g_prev, age, key, tstate):
+    def _packed_update(self, g, g_prev, age, key, tstate, residual=None,
+                       fresh=None):
         """One fused FAIR-k pass over the whole packed pytree buffer.
 
         Exactly one quantile estimation (or none, when warm) and exactly one
         ``fairk_update`` launch for the entire model — vs one of each per
-        leaf on the historical per-leaf path."""
+        leaf on the historical per-leaf path.  The residual (error-feedback)
+        stage and the one-bit ``fresh`` values ride the same fused pass."""
         from repro.kernels import ops          # deferred: kernels import core
         cfg = self.cfg
         k, _, _ = self.budgets()
-        theta_m, theta_a, streak = self._packed_thresholds(g, age, tstate)
-        g_t, age_next = ops.fairk_update(g, g_prev, age, theta_m, theta_a,
-                                         mode=cfg.kernel_mode)
+        theta_m, theta_a, streak = self._packed_thresholds(g, age, tstate,
+                                                           residual)
+        g_t, age_next, res_next = ops.fairk_ef_update(
+            g, g_prev, age, theta_m, theta_a, residual=residual,
+            fresh=fresh, mode=cfg.kernel_mode)
         # selected coordinates are exactly the age-reset ones (Eq. 10);
         # pads keep the negative sentinel so they never count
         sel = (age_next == 0.0).astype(jnp.float32)
         n_sel = sel.sum()
-        n_sel_m = (sel * (jnp.abs(g.astype(jnp.float32)) >= theta_m)).sum()
+        # stat read only: XLA fuses |score| >= θ into the reduction over
+        # the already-resident (g, residual) buffers (an in-kernel mask_m
+        # count would need a cross-block scalar output — ROADMAP)
+        n_sel_m = (sel * (jnp.abs(eff_score(g, residual)) >= theta_m)).sum()
         if cfg.reduce_axes:
             # per-shard mean keeps counts comparable to the local budgets
             n_sel = jax.lax.pmean(n_sel, cfg.reduce_axes)
@@ -447,15 +516,21 @@ class SelectionEngine:
                        "init": jnp.float32(1.0), "streak": streak}
         stats = {"theta_m": theta_m, "theta_a": theta_a,
                  "n_selected": n_sel, "k": k, "tstate": tstate_next}
+        if res_next is not None:
+            stats["residual"] = res_next
         return g_t, age_next, stats
 
     def select_and_merge_tree(self, g_tree, g_prev_tree, age_tree, *,
                               key: Optional[Array] = None,
-                              tstate: Optional[Dict[str, Array]] = None):
+                              tstate: Optional[Dict[str, Array]] = None,
+                              residual: Optional[Array] = None):
         """Pytree façade over the packed backend: pack (g, g_prev, age),
         run the single fused pass, unpack ``(g_t, age')`` back to the tree
         structure (leaf dtypes from the layout).  Returns
-        ``(g_t_tree, age_tree', stats)``."""
+        ``(g_t_tree, age_tree', stats)``.  ``residual`` is a FLAT packed
+        ``(d_packed,)`` buffer (persist it across rounds — re-packing it
+        from a tree every step would defeat error feedback's one-pass
+        cost); its successor stays flat in ``stats["residual"]``."""
         lay = self.layout
         if lay is None:
             raise ValueError("select_and_merge_tree needs the packed "
@@ -463,53 +538,67 @@ class SelectionEngine:
         g = lay.pack(g_tree)
         gp = lay.pack(g_prev_tree)
         ag = lay.pack_age(age_tree)
-        g_t, age_next, stats = self._packed_update(g, gp, ag, key, tstate)
+        g_t, age_next, stats = self._packed_update(g, gp, ag, key, tstate,
+                                                   residual)
         return lay.unpack(g_t, cast=False), lay.unpack(age_next,
                                                        cast=False), stats
 
-    def _sharded_update(self, g, g_prev, age, key):
+    def _sharded_update(self, g, g_prev, age, key, residual=None,
+                        fresh=None):
         cfg = self.cfg
         mesh = self.mesh
         axes = tuple(mesh.axis_names)
         k, _, _ = self.budgets()
         rho, km_frac = self._rho_parts()
         vec = P(axes)
+        if fresh is not None:
+            raise ValueError("the sharded backend has no decoupled one-bit "
+                             "fresh path — route one_bit through the "
+                             "exact/threshold/packed backends")
+        has_res = residual is not None
         use_global = cfg.global_thresholds or cfg.exact_theta
         if use_global:
-            theta_m, theta_a = self.thresholds(g, age)
+            theta_m, theta_a = self.thresholds(g, age, residual=residual)
         else:
             theta_m = theta_a = jnp.float32(0.0)    # placeholder, unused
 
-        def shard_phase(g_l, gp_l, age_l, tm, ta, key_l):
+        def shard_phase(g_l, gp_l, age_l, res_l, tm, ta, key_l):
             my = 0
             for ax in axes:
                 my = my * mesh.shape[ax] + jax.lax.axis_index(ax)
+            score = eff_score(g_l, res_l if has_res else None)
             if not use_global:
                 tm, ta = sampled_thresholds(
-                    g_l, age_l, rho=rho, k_m_frac=km_frac,
+                    score, age_l, rho=rho, k_m_frac=km_frac,
                     sample_cap=cfg.sample_cap)
             # jitter hashes GLOBAL coordinate ids (my * n_local offset) so
             # the mask is the one the unsharded backends would compute
-            mask, _ = threshold_mask(g_l, age_l, tm, ta,
+            mask, _ = threshold_mask(score, age_l, tm, ta,
                                      index_offset=my * g_l.shape[0])
-            fresh = g_l.astype(jnp.float32)
+            fresh_l = score.astype(jnp.float32)
             if cfg.noise_std > 0.0:
                 kk = jax.random.fold_in(key_l, my)
-                fresh = fresh + (cfg.noise_std / cfg.n_clients) * \
+                fresh_l = fresh_l + (cfg.noise_std / cfg.n_clients) * \
                     jax.random.normal(kk, g_l.shape, jnp.float32)
-            g_t, age_next = masked_merge(fresh, gp_l, age_l, mask)
-            return g_t, age_next, jax.lax.psum(mask.sum(), axes)
+            g_t, age_next = masked_merge(fresh_l, gp_l, age_l, mask)
+            res_next = (score - mask * score if has_res
+                        else jnp.zeros((), jnp.float32))
+            return g_t, age_next, res_next, jax.lax.psum(mask.sum(), axes)
 
         fn = compat.shard_map(
             shard_phase, mesh,
-            in_specs=(vec, vec, vec, P(), P(), P()),
-            out_specs=(vec, vec, P()))
+            in_specs=(vec, vec, vec, vec if has_res else P(), P(), P(), P()),
+            out_specs=(vec, vec, vec if has_res else P(), P()))
         if key is None:
             key = jax.random.PRNGKey(0)
-        g_t, age_next, n_sel = fn(g, g_prev, age, theta_m, theta_a, key)
+        res_in = residual if has_res else jnp.zeros((), jnp.float32)
+        g_t, age_next, res_next, n_sel = fn(g, g_prev, age, res_in,
+                                            theta_m, theta_a, key)
         stats = {"n_selected": n_sel, "k": k}
         if use_global:
             stats |= {"theta_m": theta_m, "theta_a": theta_a}
+        if has_res:
+            stats["residual"] = res_next
         return g_t, age_next, stats
 
 

@@ -52,6 +52,13 @@ PAD_AGE = -1.0
 
 LANE = 256          # minimum alignment: the fused kernel's 1-D tile quantum
 
+# trace-time counters: how many pack / unpack tree copies a program traces.
+# The persisted-server-state smoke (benchmarks/packed_bench.py --smoke)
+# asserts a steady-state round packs exactly ONE tree (the fresh grads) and
+# never re-packs g_prev / age from trees — the buffers persist flat.
+PACK_CALLS = 0
+UNPACK_CALLS = 0
+
 
 @dataclasses.dataclass(frozen=True)
 class BlockEntry:
@@ -103,6 +110,8 @@ class PackedLayout:
         leaves with constant fill segments interleaved at the pad slots
         (measured ~6x faster than per-leaf ``jnp.pad`` on CPU XLA — one
         write pass over the buffer either way, but pad lowers poorly)."""
+        global PACK_CALLS
+        PACK_CALLS += 1
         leaves = self.treedef.flatten_up_to(tree)
         parts = []
         for e, leaf in zip(self.table, leaves):
@@ -119,6 +128,8 @@ class PackedLayout:
 
     def unpack(self, flat: Array, cast: bool = True) -> Any:
         """(d_packed,) buffer -> tree of original shapes (static slices)."""
+        global UNPACK_CALLS
+        UNPACK_CALLS += 1
         out = []
         for e in self.table:
             leaf = jax.lax.slice(flat, (e.offset,), (e.offset + e.size,))

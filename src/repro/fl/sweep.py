@@ -60,6 +60,10 @@ class SweepConfig:
     hetero: float = 1.0            # client-optimum spread (non-IID knob)
     fading_mean: float = 1.0       # mu_c (Rayleigh)
     noise_std: float = 0.5         # sigma_z
+    error_feedback: bool = False   # server-side EF: unsent aggregate mass
+                                   # folds back into the next merge (the
+                                   # engine's residual stage, here in the
+                                   # vmapped rank-based form)
 
     @property
     def k(self) -> int:
@@ -92,7 +96,7 @@ def fair_k_mask_dynamic(score: Array, age: Array, k: int, k_m: Array
 
 def _one_round(cfg: SweepConfig, carry, key, policy_id, k_m):
     """One OAC-FL round for one grid point (pure, vmappable)."""
-    w, g_prev, age, w_stars = carry
+    w, g_prev, age, res, w_stars = carry
     key_pol, key_h, key_z = jax.random.split(key, 3)
     # H closed-form local SGD steps on f_n(w) = 0.5 ||w - w*_n||^2:
     #   w_H = w*_n + (1 - eta_l)^H (w - w*_n);  accumulated grad (Eq. 5)
@@ -108,6 +112,12 @@ def _one_round(cfg: SweepConfig, carry, key, policy_id, k_m):
     h = jax.random.rayleigh(key_h, cfg.fading_mean / np.sqrt(np.pi / 2.0),
                             shape=(cfg.n_clients,), dtype=jnp.float32)
     agg = jnp.einsum("n,nd->d", h, grads) / cfg.n_clients
+    if cfg.error_feedback:
+        # server-side EF (the engine's residual stage in vmapped form):
+        # the unsent aggregate mass folds back pre-merge, its noise-free
+        # successor is re-accumulated on the unselected coordinates
+        agg = agg + res
+        res = (1.0 - mask) * agg
     noise = cfg.noise_std / cfg.n_clients * jax.random.normal(
         key_z, (cfg.d,), jnp.float32)
     # Eq. (8) merge + Eq. (9) model step + Eq. (10) AoU
@@ -116,8 +126,9 @@ def _one_round(cfg: SweepConfig, carry, key, policy_id, k_m):
     age_next = (age + 1.0) * (1.0 - mask)
     loss = 0.5 * jnp.mean(jnp.sum((w_next[None, :] - w_stars) ** 2, axis=1))
     metrics = {"loss": loss, "mean_age": age_next.mean(),
-               "max_age": age_next.max(), "frac_fresh": mask.mean()}
-    return (w_next, g_t, age_next, w_stars), metrics
+               "max_age": age_next.max(), "frac_fresh": mask.mean(),
+               "res_norm": jnp.abs(res).mean()}
+    return (w_next, g_t, age_next, res, w_stars), metrics
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -136,6 +147,7 @@ def _run_grid(cfg: SweepConfig, seeds: Array, policy_ids: Array,
                    + cfg.hetero * jax.random.normal(
                        key_init, (cfg.n_clients, cfg.d), jnp.float32))
         carry = (jnp.zeros((cfg.d,), jnp.float32),
+                 jnp.zeros((cfg.d,), jnp.float32),
                  jnp.zeros((cfg.d,), jnp.float32),
                  jnp.zeros((cfg.d,), jnp.float32), w_stars)
 

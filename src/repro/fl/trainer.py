@@ -25,8 +25,9 @@ import numpy as np
 
 from repro.core import oac, packing, quantize
 from repro.core.aou import update_age_by_indices
-from repro.core.engine import EngineConfig, SelectionEngine
+from repro.core.engine import EngineConfig, SelectionEngine, index_jitter
 from repro.core.oac import ChannelConfig
+from repro.kernels import ops
 
 Array = jax.Array
 SDS = jax.ShapeDtypeStruct
@@ -47,15 +48,24 @@ class FLConfig:
                                     # server phase (d >> 1e7 route);
                                     # "packed" adds warm-start thresholds on
                                     # top (quantile pass skipped on
-                                    # steady-state rounds)
+                                    # steady-state rounds).  one_bit and
+                                    # error_feedback run on ALL of them.
     compression_ratio: float = 0.1  # rho = k / d
     k_m_frac: float = 0.75          # k_M / k (paper Sec. V-A)
     r_frac: float = 1.5             # AgeTop-k candidate ratio r / k
     channel: ChannelConfig = oac.PAPER_DEFAULT
-    one_bit: bool = False           # prototype mode (FSK majority vote)
-    error_feedback: bool = False    # beyond-paper: clients accumulate the
-                                    # unsent gradient mass and add it back
-                                    # next round (Stich et al. EF-SGD)
+    one_bit: bool = False           # FSK-MV prototype uplink (Sec. V-B):
+                                    # clients send sign(ǧ), the server
+                                    # majority-votes.  exact scores g_prev;
+                                    # threshold/packed score the vote energy
+                                    # and aggregate via the sign_mv kernel
+    error_feedback: bool = False    # beyond-paper EF-SGD (Stich et al.):
+                                    # the unsent gradient mass folds back
+                                    # next round.  exact: client-side (the
+                                    # residual rides the fading); threshold/
+                                    # packed: server-side — the residual
+                                    # stage of the fused fairk_ef_update
+                                    # kernel, one HBM pass
     seed: int = 0
 
     def budgets(self, d: int, k_m_frac: Optional[float] = None
@@ -72,10 +82,16 @@ class FLConfig:
 
 @dataclasses.dataclass
 class ServerState:
+    """Flat lane-aligned server buffers carried across rounds (the FL sim's
+    single-leaf packed layout: lane=1, no pads).  ``residual`` is the
+    error-feedback accumulator (zeros when EF is off) and ``theta`` the
+    warm-start threshold state (packed backend)."""
     w: Array                        # flat global model (d,)
     g: Array                        # last reconstructed gradient (d,)
     age: Array                      # AoU vector (d,)
     sel_count: Array                # per-entry participation counter (Fig. 5b)
+    residual: Array = None          # EF accumulator (d,)
+    theta: Dict[str, Array] = None  # packing.init_threshold_state()
     round: int = 0
 
 
@@ -90,8 +106,6 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
     if fl.backend not in ("exact", "threshold", "packed"):
         raise ValueError(f"FLConfig.backend must be exact|threshold|packed, "
                          f"got {fl.backend!r}")
-    if fl.backend != "exact" and (fl.one_bit or fl.error_feedback):
-        raise ValueError("one_bit / error_feedback need the exact backend")
 
     def client_update(w_flat: Array, xs: Array, ys: Array) -> Array:
         """H local SGD steps; returns the accumulated gradient (Eq. 5)."""
@@ -113,8 +127,11 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
     engine = SelectionEngine(
         EngineConfig(policy=policy_name, backend=fl.backend,
                      k=k, k_m=k_m, r=r,
+                     # one-bit: the channel perturbs the vote energy (inside
+                     # sign_mv), not the merged values — engine noise off
                      noise_std=(fl.channel.noise_std
-                                if fl.backend != "exact" else 0.0),
+                                if fl.backend != "exact" and not fl.one_bit
+                                else 0.0),
                      n_clients=fl.n_clients,
                      warm_start=(fl.backend == "packed")), d,
         layout=layout)
@@ -126,15 +143,54 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
         key_sel, key_ch = jax.random.split(key)
         grads = clients(w, xs, ys)                       # (N, d)
         if fl.backend in ("threshold", "packed"):
-            # production-scale server phase: dense faded aggregate, then one
-            # fused threshold select+merge pass (selection scores the fresh
-            # aggregate — the threshold route's operating point)
-            h = oac.sample_fading(key_sel, fl.n_clients, fl.channel)
-            fresh = jnp.einsum("n,nd->d", h, grads) / fl.n_clients
-            g_t, age_next, stats = engine.select_and_merge(
-                fresh, g_prev, age, key=key_ch,
-                tstate=tstate if fl.backend == "packed" else None)
-            sel_mask = (age_next == 0.0).astype(jnp.float32)
+            ts = tstate if fl.backend == "packed" else None
+            if fl.one_bit:
+                # FSK-MV uplink (Sec. V-B): clients transmit sign(ǧ_{n,t})
+                # and the server recovers majority-vote signs via the
+                # sign_mv kernel; selection scores the superposed vote
+                # ENERGY (consensus strength — the server-observable
+                # magnitude statistic; stale sign vectors are all-|1| and
+                # carry no magnitude information)
+                grads_eff = (grads + residual[None, :]
+                             if fl.error_feedback else grads)
+                votes = quantize.one_bit(grads_eff)      # (N, d) ±1
+                noise = (fl.channel.noise_std
+                         * jax.random.normal(key_ch, (d,), jnp.float32)
+                         if fl.channel.noise_std > 0.0 else None)
+                energy = votes.sum(axis=0) + (noise if noise is not None
+                                              else 0.0)
+                # noiseless energies are heavily TIED (even integers in
+                # [-N, N]): a quantile threshold inside a tie level would
+                # select the whole level and blow the k budget, so break
+                # |energy| ties with the sub-unit index jitter (levels sit
+                # 2 apart — ordering across levels is preserved; same
+                # Knuth hash the kernels use)
+                score = jnp.abs(energy) + index_jitter(d)
+                fresh_sign = ops.sign_mv(votes, noise=noise)
+                g_t, age_next, stats = engine.select_and_merge(
+                    score, g_prev, age, fresh=fresh_sign, tstate=ts)
+                sel_mask = (age_next == 0.0).astype(jnp.float32)
+                if fl.error_feedback:
+                    # unsent mass of the mean effective gradient — the same
+                    # accounting the exact one-bit path keeps (quantization
+                    # error on sent coords is NOT tracked: the server only
+                    # ever sees signs)
+                    residual = grads_eff.mean(0) * (1.0 - sel_mask)
+            else:
+                # production-scale server phase: dense faded aggregate, then
+                # one fused threshold select+merge pass (selection scores
+                # the fresh aggregate — the threshold route's operating
+                # point).  EF is server-side: the residual folds into the
+                # score/sent values INSIDE the fused kernel and its
+                # successor comes back from the same pass
+                h = oac.sample_fading(key_sel, fl.n_clients, fl.channel)
+                fresh = jnp.einsum("n,nd->d", h, grads) / fl.n_clients
+                g_t, age_next, stats = engine.select_and_merge(
+                    fresh, g_prev, age, key=key_ch, tstate=ts,
+                    residual=residual if fl.error_feedback else None)
+                sel_mask = (age_next == 0.0).astype(jnp.float32)
+                if fl.error_feedback:
+                    residual = stats["residual"]
             w_next = w - fl.global_lr * g_t              # Eq. (9)
             sel_count = sel_count + sel_mask
             return (w_next, g_t, age_next, sel_count, residual, sel_mask,
@@ -170,6 +226,8 @@ def init_server(init_params: Any) -> Tuple[ServerState, Callable]:
         g=jnp.zeros((d,), flat.dtype),
         age=jnp.zeros((d,), jnp.float32),
         sel_count=jnp.zeros((d,), jnp.float32),
+        residual=jnp.zeros((d,), jnp.float32),
+        theta=packing.init_threshold_state(),
     )
     return state, unravel
 
@@ -226,8 +284,7 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
     history: Dict[str, Any] = {"round": [], "acc": [], "mean_aou": [],
                                "max_aou": [], "k": fl.budgets(d)[0], "d": d}
     w, g, age, sel_count = state.w, state.g, state.age, state.sel_count
-    residual = jnp.zeros_like(state.g)
-    tstate = packing.init_threshold_state()
+    residual, tstate = state.residual, state.theta
     history["km_frac"] = []
     for t in range(fl.rounds):
         key, sub = jax.random.split(key)

@@ -13,8 +13,10 @@ Each kernel has a pure-jnp oracle in ``ref.py`` and a dispatching wrapper in
 """
 
 from repro.kernels import ops, ref
-from repro.kernels.ops import (aou_merge, block_topk, fairk_update, sign_mv,
-                               two_stage_topk, global_topk_from_candidates)
+from repro.kernels.ops import (aou_merge, block_topk, fairk_ef_update,
+                               fairk_update, sign_mv, two_stage_topk,
+                               global_topk_from_candidates)
 
-__all__ = ["ops", "ref", "aou_merge", "block_topk", "fairk_update",
-           "sign_mv", "two_stage_topk", "global_topk_from_candidates"]
+__all__ = ["ops", "ref", "aou_merge", "block_topk", "fairk_ef_update",
+           "fairk_update", "sign_mv", "two_stage_topk",
+           "global_topk_from_candidates"]

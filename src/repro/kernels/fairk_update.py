@@ -16,12 +16,25 @@ packed multi-leaf buffer.  They can never be selected (neither stage), and
 their age passes through unchanged so the sentinel survives round trips —
 this is what lets the packed server phase keep interior lane-alignment pads
 inside the buffer across steps without them polluting the selection budget.
+
+Residual (error-feedback) stage.  ``fairk_ef_update_pallas`` extends the
+fused pass with two optional streams while staying ONE HBM round trip:
+
+* ``residual`` — the error-feedback accumulator.  The selection score
+  becomes ``score = g + residual`` (the unsent mass folds back
+  pre-selection), the merged fresh value is ``score`` itself, and the
+  kernel emits ``residual' = score - mask * sent`` from the same pass —
+  the unsent mass on unselected coordinates, the quantization error on
+  selected ones.  Pads pass their residual through unchanged.
+* ``fresh`` — decoupled transmitted values for the one-bit FSK-MV route
+  (kernels.sign_mv): selection scores ``g`` (+ residual) but the merged
+  fresh value is ``fresh`` (the majority-vote signs).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,25 +43,46 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 
-def _fairk_update_kernel(g_ref, gp_ref, age_ref, thetas_ref,
-                         gt_ref, age_out_ref, *, block_size: int):
+def _fairk_kernel(*refs, block_size: int, has_res: bool, has_fresh: bool):
+    """Shared fused body.  Ref order: g, [fresh], g_prev, age, [res],
+    thetas -> g_t, age', [res']."""
+    it = iter(refs)
+    g_ref = next(it)
+    fresh_ref = next(it) if has_fresh else None
+    gp_ref = next(it)
+    age_ref = next(it)
+    res_ref = next(it) if has_res else None
+    thetas_ref = next(it)
+    gt_ref = next(it)
+    age_out_ref = next(it)
+    res_out_ref = next(it) if has_res else None
+
     bid = pl.program_id(0)
     theta_m = thetas_ref[0]
     theta_a = thetas_ref[1]
     g = g_ref[...].astype(jnp.float32)
     age = age_ref[...].astype(jnp.float32)
+    res = res_ref[...].astype(jnp.float32) if has_res else None
+    score = g + res if has_res else g
     # deterministic per-coordinate jitter in [0, 1) (Knuth hash of index)
     idx = (bid * block_size + jax.lax.iota(jnp.uint32, block_size))
     jitter = (idx * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
               ).astype(jnp.float32) / float(1 << 24)
     valid = age >= 0.0                      # age < 0 marks packing pads
-    mask_m = valid & (jnp.abs(g) >= theta_m)
+    mask_m = valid & (jnp.abs(score) >= theta_m)
     mask = mask_m | (valid & (age + jitter >= theta_a) & (~mask_m))
-    keep = 1.0 - mask.astype(jnp.float32)
-    gt_ref[...] = (mask.astype(jnp.float32) * g
-                   + keep * gp_ref[...].astype(jnp.float32))
+    maskf = mask.astype(jnp.float32)
+    keep = 1.0 - maskf
+    sent = fresh_ref[...].astype(jnp.float32) if has_fresh else score
+    gt_ref[...] = maskf * sent + keep * gp_ref[...].astype(jnp.float32)
     age_out_ref[...] = jnp.where(valid,
                                  jnp.minimum((age + 1.0) * keep, 120.0), age)
+    if has_res:
+        res_out_ref[...] = jnp.where(valid, score - maskf * sent, res)
+
+
+_fairk_update_kernel = functools.partial(_fairk_kernel, has_res=False,
+                                         has_fresh=False)
 
 
 @functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
@@ -56,24 +90,61 @@ def fairk_update_pallas(g: Array, g_prev: Array, age: Array, theta_m: Array,
                         theta_a: Array, block_size: int = 65536,
                         interpret: bool = False) -> Tuple[Array, Array]:
     """g/g_prev/age: (d,) -> (g_t (d,), age' (d,)), single fused pass."""
+    g_t, age_out, _ = _fairk_call(g, g_prev, age, theta_m, theta_a,
+                                  residual=None, fresh=None,
+                                  block_size=block_size, interpret=interpret)
+    return g_t, age_out
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def fairk_ef_update_pallas(g: Array, g_prev: Array, age: Array,
+                           theta_m: Array, theta_a: Array,
+                           residual: Optional[Array] = None,
+                           fresh: Optional[Array] = None,
+                           block_size: int = 65536,
+                           interpret: bool = False
+                           ) -> Tuple[Array, Array, Optional[Array]]:
+    """Fused pass with the residual (error-feedback) stage and/or decoupled
+    ``fresh`` values: (g_t, age', residual' | None) — see module docstring."""
+    return _fairk_call(g, g_prev, age, theta_m, theta_a, residual=residual,
+                       fresh=fresh, block_size=block_size,
+                       interpret=interpret)
+
+
+def _fairk_call(g, g_prev, age, theta_m, theta_a, *, residual, fresh,
+                block_size, interpret):
     d = g.shape[0]
     block_size = min(block_size, d)
     if d % block_size:
         raise ValueError(f"d={d} not divisible by block_size={block_size}")
     nb = d // block_size
+    has_res = residual is not None
+    has_fresh = fresh is not None
     thetas = jnp.stack([theta_m.astype(jnp.float32),
                         theta_a.astype(jnp.float32)])
     spec = pl.BlockSpec((block_size,), lambda i: (i,))
-    kernel = functools.partial(_fairk_update_kernel, block_size=block_size)
-    g_t, age_out = pl.pallas_call(
+    kernel = functools.partial(_fairk_kernel, block_size=block_size,
+                               has_res=has_res, has_fresh=has_fresh)
+    f32 = lambda x: x.astype(jnp.float32)
+    inputs = [f32(g)]
+    in_specs = [spec]
+    if has_fresh:
+        inputs.append(f32(fresh))
+        in_specs.append(spec)
+    inputs += [f32(g_prev), f32(age)]
+    in_specs += [spec, spec]
+    if has_res:
+        inputs.append(f32(residual))
+        in_specs.append(spec)
+    inputs.append(thetas)
+    in_specs.append(pl.BlockSpec((2,), lambda i: (0,)))
+    n_out = 3 if has_res else 2
+    out = pl.pallas_call(
         kernel,
         grid=(nb,),
-        in_specs=[spec, spec, spec,
-                  pl.BlockSpec((2,), lambda i: (0,))],
-        out_specs=[spec, spec],
-        out_shape=[jax.ShapeDtypeStruct((d,), jnp.float32),
-                   jax.ShapeDtypeStruct((d,), jnp.float32)],
+        in_specs=in_specs,
+        out_specs=[spec] * n_out,
+        out_shape=[jax.ShapeDtypeStruct((d,), jnp.float32)] * n_out,
         interpret=interpret,
-    )(g.astype(jnp.float32), g_prev.astype(jnp.float32),
-      age.astype(jnp.float32), thetas)
-    return g_t, age_out
+    )(*inputs)
+    return (out[0], out[1], out[2] if has_res else None)

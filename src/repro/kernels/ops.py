@@ -13,10 +13,11 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.packing import PAD_AGE
 from repro.kernels import ref
 from repro.kernels.aou_merge import aou_merge_pallas
 from repro.kernels.block_topk import block_topk_pallas
-from repro.kernels.fairk_update import fairk_update_pallas
+from repro.kernels.fairk_update import fairk_ef_update_pallas
 from repro.kernels.sign_mv import sign_mv_pallas
 
 Array = jax.Array
@@ -44,14 +45,19 @@ def aou_merge(g_new: Array, g_old: Array, age: Array, mask: Array,
                             interpret=(mode == "interpret"))
 
 
-def sign_mv(votes: Array, mode: Optional[str] = None) -> Array:
+def sign_mv(votes: Array, noise: Optional[Array] = None,
+            mode: Optional[str] = None) -> Array:
+    """FSK majority vote over (N, k) one-bit client values -> (k,) signs.
+
+    ``noise`` (optional, (k,)) perturbs the superposed vote energy before
+    the sign — the Sec. V-B channel on the one-bit uplink."""
     mode = mode or ("pallas" if _on_tpu() else "ref")
     if mode == "ref":
-        return ref.sign_mv_ref(votes)
+        return ref.sign_mv_ref(votes, noise)
     # pad k to a lane-aligned block if needed
     n, k = votes.shape
     block = 2048 if k % 2048 == 0 else k
-    return sign_mv_pallas(votes, block_k=block,
+    return sign_mv_pallas(votes, noise, block_k=block,
                           interpret=(mode == "interpret"))
 
 
@@ -89,20 +95,43 @@ FAIRK_UPDATE_CALLS = 0
 def fairk_update(g: Array, g_prev: Array, age: Array, theta_m, theta_a,
                  mode: Optional[str] = None,
                  block_size: int = 65536) -> Tuple[Array, Array]:
-    """Fused threshold-FAIR-k server update (see kernels.fairk_update).
+    """Fused threshold-FAIR-k server update (see kernels.fairk_update) —
+    the degenerate (no residual, no decoupled fresh) case of
+    ``fairk_ef_update`` below; one fused launch either way."""
+    g_t, age_out, _ = fairk_ef_update(g, g_prev, age, theta_m, theta_a,
+                                      mode=mode, block_size=block_size)
+    return g_t, age_out
+
+
+def fairk_ef_update(g: Array, g_prev: Array, age: Array, theta_m, theta_a,
+                    residual: Optional[Array] = None,
+                    fresh: Optional[Array] = None,
+                    mode: Optional[str] = None,
+                    block_size: int = 65536
+                    ) -> Tuple[Array, Array, Optional[Array]]:
+    """Fused FAIR-k server update, optionally with the residual
+    (error-feedback) stage and/or decoupled ``fresh`` values — always ONE
+    pass over HBM.
+
+    ``residual``: selection scores ``g + residual`` (unsent mass folds back
+    pre-selection) and the updated accumulator ``residual' = score -
+    mask * sent`` comes back as the third output (None when no residual).
+    ``fresh``: merged fresh values when they differ from the score source
+    (the one-bit FSK-MV sign vector from ``sign_mv``).
 
     Accepts any length: non-block-aligned inputs (e.g. arbitrary parameter
     leaves routed through the SelectionEngine) are padded to the block grid
     (age pad = PAD_AGE sentinel, so padding can never select) and sliced
     back.  Interior pads of packed buffers (core.packing) use the same
-    sentinel and pass through untouched."""
+    sentinel and pass through untouched (incl. their residual)."""
     global FAIRK_UPDATE_CALLS
     FAIRK_UPDATE_CALLS += 1
     mode = mode or ("pallas" if _on_tpu() else "ref")
     tm = jnp.asarray(theta_m, jnp.float32)
     ta = jnp.asarray(theta_a, jnp.float32)
     if mode == "ref":
-        return ref.fairk_update_ref(g, g_prev, age, tm, ta)
+        return ref.fairk_ef_update_ref(g, g_prev, age, tm, ta,
+                                       residual=residual, fresh=fresh)
     d = g.shape[0]
     # lane-align the block (multiple of 256) so small/odd leaves don't hand
     # Mosaic an unaligned 1-D tile; size it from the trip count so padding
@@ -114,8 +143,15 @@ def fairk_update(g: Array, g_prev: Array, age: Array, theta_m, theta_a,
     pad = nb * block - d
     if pad:
         g, g_prev = (jnp.pad(x, (0, pad)) for x in (g, g_prev))
-        age = jnp.pad(age, (0, pad), constant_values=-1.0)  # PAD_AGE
-    g_t, age_out = fairk_update_pallas(g, g_prev, age, tm, ta,
-                                       block_size=block,
-                                       interpret=(mode == "interpret"))
-    return (g_t[:d], age_out[:d]) if pad else (g_t, age_out)
+        age = jnp.pad(age, (0, pad), constant_values=PAD_AGE)
+        if residual is not None:
+            residual = jnp.pad(residual, (0, pad))
+        if fresh is not None:
+            fresh = jnp.pad(fresh, (0, pad))
+    g_t, age_out, res_out = fairk_ef_update_pallas(
+        g, g_prev, age, tm, ta, residual=residual, fresh=fresh,
+        block_size=block, interpret=(mode == "interpret"))
+    if pad:
+        return (g_t[:d], age_out[:d],
+                res_out[:d] if res_out is not None else None)
+    return g_t, age_out, res_out

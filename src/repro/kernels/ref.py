@@ -3,7 +3,7 @@ the XLA-native fallback used when not running on TPU)."""
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +35,14 @@ def aou_merge_ref(g_new: Array, g_old: Array, age: Array, mask: Array
     return g, age_next
 
 
-def sign_mv_ref(votes: Array) -> Array:
-    """FSK majority vote: votes (N, k) one-bit values -> (k,) signs."""
+def sign_mv_ref(votes: Array, noise: Optional[Array] = None) -> Array:
+    """FSK majority vote: votes (N, k) one-bit values -> (k,) signs.
+
+    ``noise`` (optional, (k,)) is channel noise on the superposed FSK
+    energies: the vote sum is perturbed *before* the sign (Sec. V-B)."""
     s = jnp.where(votes >= 0, 1.0, -1.0).sum(axis=0)
+    if noise is not None:
+        s = s + noise.astype(s.dtype)
     return jnp.where(s >= 0, 1.0, -1.0).astype(votes.dtype)
 
 
@@ -62,3 +67,37 @@ def fairk_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
     age_next = jnp.where(valid, jnp.minimum((age32 + 1.0) * keep, 120.0),
                          age32)
     return g_t, age_next
+
+
+def fairk_ef_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
+                        theta_a: Array, residual: Optional[Array] = None,
+                        fresh: Optional[Array] = None
+                        ) -> Tuple[Array, Array, Optional[Array]]:
+    """Oracle for the fused pass with the residual (error-feedback) stage.
+
+    ``score = g + residual`` drives both threshold stages; the merged fresh
+    value is ``fresh`` when given (one-bit majority-vote signs) else the
+    score itself; ``residual' = score - mask * sent`` — unsent mass on
+    unselected coordinates, quantization error on selected ones.  Pads
+    (``age < 0``) are never selected and pass ``(age, residual)`` through
+    unchanged."""
+    d = g.shape[0]
+    g32 = g.astype(jnp.float32)
+    age32 = age.astype(jnp.float32)
+    res32 = residual.astype(jnp.float32) if residual is not None else None
+    score = g32 + res32 if residual is not None else g32
+    idx = jnp.arange(d, dtype=jnp.uint32)
+    jitter = (idx * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
+              ).astype(jnp.float32) / float(1 << 24)
+    valid = age32 >= 0.0
+    mask_m = valid & (jnp.abs(score) >= theta_m)
+    mask = (mask_m | (valid & (age32 + jitter >= theta_a) & (~mask_m))
+            ).astype(jnp.float32)
+    keep = 1.0 - mask
+    sent = fresh.astype(jnp.float32) if fresh is not None else score
+    g_t = mask * sent + keep * g_prev.astype(jnp.float32)
+    age_next = jnp.where(valid, jnp.minimum((age32 + 1.0) * keep, 120.0),
+                         age32)
+    res_next = (jnp.where(valid, score - mask * sent, res32)
+                if residual is not None else None)
+    return g_t, age_next, res_next

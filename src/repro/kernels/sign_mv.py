@@ -23,20 +23,34 @@ def _sign_mv_kernel(votes_ref, out_ref):
     out_ref[...] = jnp.where(s >= 0, 1.0, -1.0)
 
 
+def _sign_mv_noise_kernel(votes_ref, noise_ref, out_ref):
+    """Noisy variant: channel noise perturbs the superposed FSK energy
+    (the vote sum) before the sign — Sec. V-B's non-coherent detection."""
+    v = votes_ref[...]                            # (N, block_k)
+    s = jnp.where(v >= 0, 1.0, -1.0).sum(axis=0) + noise_ref[...]
+    out_ref[...] = jnp.where(s >= 0, 1.0, -1.0)
+
+
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
-def sign_mv_pallas(votes: Array, block_k: int = 2048,
+def sign_mv_pallas(votes: Array, noise=None, block_k: int = 2048,
                    interpret: bool = False) -> Array:
     n, k = votes.shape
     block_k = min(block_k, k)
     if k % block_k:
         raise ValueError(f"k={k} not divisible by block_k={block_k}")
     nb = k // block_k
+    vote_spec = pl.BlockSpec((n, block_k), lambda i: (0, i))
+    vec_spec = pl.BlockSpec((block_k,), lambda i: (i,))
+    kernel = _sign_mv_kernel if noise is None else _sign_mv_noise_kernel
+    in_specs = [vote_spec] if noise is None else [vote_spec, vec_spec]
+    args = ((votes.astype(jnp.float32),) if noise is None
+            else (votes.astype(jnp.float32), noise.astype(jnp.float32)))
     out = pl.pallas_call(
-        _sign_mv_kernel,
+        kernel,
         grid=(nb,),
-        in_specs=[pl.BlockSpec((n, block_k), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((block_k,), lambda i: (i,)),
+        in_specs=in_specs,
+        out_specs=vec_spec,
         out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
         interpret=interpret,
-    )(votes.astype(jnp.float32))
+    )(*args)
     return out

@@ -131,10 +131,13 @@ def main():
     ap.add_argument("--fl-baseline", action="store_true",
                     help="FL-OAC without compression (full all-reduce)")
     ap.add_argument("--fl-onebit", action="store_true",
-                    help="FL-OAC with one-bit FSK-MV uplink (Sec. V-B)")
+                    help="FL-OAC with the one-bit FSK-MV uplink (Sec. V-B, "
+                         "sign_mv majority vote); the FL simulator's "
+                         "FLConfig.one_bit likewise runs on every backend "
+                         "(exact / threshold / packed)")
     ap.add_argument("--per-leaf-server", action="store_true",
                     help="historical per-leaf OAC server phase (default: "
-                         "packed single fused pass, DESIGN.md §9)")
+                         "persisted packed fused pass, DESIGN.md §9-§10)")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--out", default=os.path.abspath(ART_DIR))
     args = ap.parse_args()

@@ -33,6 +33,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from math import prod as np_prod
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
@@ -62,10 +63,17 @@ class OacServerConfig:
                                    # packed=False, per shard when packed)
     packed: bool = True            # ONE fused FAIR-k pass over the whole
                                    # local pytree (core.packing) instead of
-                                   # the historical per-leaf loop
+                                   # the historical per-leaf loop; server
+                                   # state persists as flat lane-aligned
+                                   # buffers across steps (no per-round
+                                   # re-pack of g_prev / age)
     warm_start: bool = True        # carry (θ_M, θ_A) across rounds; skip
                                    # the quantile pass on steady-state
                                    # rounds (packed path only)
+    error_feedback: bool = False   # fold the unselected gradient mass back
+                                   # next step (EF-SGD): a persisted flat
+                                   # f32 residual buffer rides the fused
+                                   # kernel's residual stage (packed only)
 
 
 @dataclasses.dataclass
@@ -171,10 +179,75 @@ def _leaf_server_update(g: Array, g_prev: Array, age: Array, key: Array,
 # train step
 # ---------------------------------------------------------------------------
 
-def init_server_state(params: Any) -> Dict:
-    """g_prev in bf16, age in int8 (max staleness << 127) — DESIGN.md §5.
-    ``theta`` is the replicated warm-start threshold state (DESIGN.md §9),
-    all-zero = bootstrap on the first round."""
+def _local_shape(shape: Tuple[int, ...], spec, mesh) -> Tuple[int, ...]:
+    """Per-shard shape of a global array under a PartitionSpec (dims that
+    don't divide are never sharded — param_pspecs guarantees it)."""
+    dims = list(shape)
+    for i, entry in enumerate(tuple(spec)):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for ax in axes:
+            n *= mesh.shape[ax]
+        dims[i] //= n
+    return tuple(dims)
+
+
+def server_layout(params_abs: Any, p_specs: Any, mesh
+                  ) -> packing.PackedLayout:
+    """The per-shard ``PackedLayout`` of the persisted packed server state:
+    identical to what ``PackedLayout.from_tree(local_grads)`` builds inside
+    ``shard_map`` (same flatten order, local shard shapes)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params_abs)
+    specs = treedef.flatten_up_to(p_specs)
+    local = [SDS(_local_shape(l.shape, s, mesh), l.dtype)
+             for l, s in zip(leaves, specs)]
+    return packing.PackedLayout.from_tree(
+        jax.tree_util.tree_unflatten(treedef, local))
+
+
+def _mesh_devices(mesh) -> int:
+    n = 1
+    for ax in mesh.axis_names:
+        n *= mesh.shape[ax]
+    return n
+
+
+def init_server_state(params: Any, mesh=None, cfg: ModelConfig = None,
+                      oac: Optional[OacServerConfig] = OacServerConfig()
+                      ) -> Dict:
+    """OAC server state matching ``make_train_step``'s expectations.
+
+    Packed flavour (``oac.packed``, the default — needs ``mesh`` + ``cfg``):
+    the state IS the lane-aligned flat buffers, persisted end-to-end —
+    ``g`` (d,) bf16, ``age`` (d,) int8 with the PAD_AGE sentinel in the
+    lane-alignment pads, optionally ``res`` (d,) f32 (error feedback), and
+    the replicated warm-start ``theta`` vector (DESIGN.md §9-§10), where
+    d = n_devices * d_packed_per_shard.  Only the fresh gradients are
+    packed each step; g_prev/age are never re-packed from trees.
+
+    Per-leaf flavour (``oac is None`` or ``oac.packed=False``): the
+    historical tree state — g_prev bf16 / age int8 per parameter leaf."""
+    if oac is not None and oac.packed:
+        if mesh is None or cfg is None:
+            raise ValueError("packed server state needs (mesh, cfg) to "
+                             "derive the per-shard layout — pass "
+                             "init_server_state(params, mesh, cfg) or use "
+                             "OacServerConfig(packed=False)")
+        p_specs = shlib.param_pspecs(params, cfg, mesh)
+        lay = server_layout(params, p_specs, mesh)
+        n = _mesh_devices(mesh)
+        age_local = np.asarray(lay.init_age(jnp.int8))
+        state = {
+            "g": jnp.zeros((n * lay.d_packed,), jnp.bfloat16),
+            "age": jnp.asarray(np.tile(age_local, n)),
+            "theta": jnp.zeros((len(packing.THRESHOLD_STATE_FIELDS),),
+                               jnp.float32),
+        }
+        if oac.error_feedback:
+            state["res"] = jnp.zeros((n * lay.d_packed,), jnp.float32)
+        return state
     return {
         "g": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
         "age": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.int8), params),
@@ -183,7 +256,17 @@ def init_server_state(params: Any) -> Dict:
     }
 
 
-def abstract_server_state(params_abs: Any) -> Dict:
+def abstract_server_state(params_abs: Any, mesh=None, p_specs: Any = None,
+                          oac: Optional[OacServerConfig] = None) -> Dict:
+    if oac is not None and oac.packed:
+        lay = server_layout(params_abs, p_specs, mesh)
+        d = _mesh_devices(mesh) * lay.d_packed
+        state = {"g": SDS((d,), jnp.bfloat16), "age": SDS((d,), jnp.int8),
+                 "theta": SDS((len(packing.THRESHOLD_STATE_FIELDS),),
+                              jnp.float32)}
+        if oac.error_feedback:
+            state["res"] = SDS((d,), jnp.float32)
+        return state
     return {
         "g": jax.tree.map(lambda p: SDS(p.shape, jnp.bfloat16), params_abs),
         "age": jax.tree.map(lambda p: SDS(p.shape, jnp.int8), params_abs),
@@ -219,8 +302,15 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
     p_specs = shlib.param_pspecs(params_abs, cfg, mesh)
     opt_abs = jax.eval_shape(opt.init, params_abs)
     o_specs = shlib.opt_pspecs(opt_abs, p_specs)
-    srv_abs = abstract_server_state(params_abs)
-    srv_specs = shlib.server_pspecs(p_specs)
+    if oac is not None and oac.error_feedback and not oac.packed:
+        raise ValueError("error_feedback needs the packed server phase "
+                         "(the residual is a flat persisted buffer)")
+    srv_abs = abstract_server_state(params_abs, mesh=mesh, p_specs=p_specs,
+                                    oac=oac)
+    srv_specs = shlib.server_pspecs(
+        p_specs, mesh=mesh,
+        packed=(oac is not None and oac.packed),
+        error_feedback=(oac is not None and oac.error_feedback))
     b_specs = _batch_pspecs(cfg, mb, mesh, micro=True)
     in_specs_batch = train_input_specs(cfg, shape, n_micro, mb)
 
@@ -245,12 +335,26 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         oac = dataclasses.replace(oac, n_clients=n_shards)
         mesh_axes = tuple(mesh.axis_names)
 
+        def _shard_noise_key(seed):
+            """Per-shard channel-noise key: fold the round seed by the
+            shard's linear index so the simulated noise is iid ACROSS
+            shards (an un-folded key would repeat the same noise block on
+            every shard — the global noise vector must not be periodic)."""
+            my = 0
+            for ax in mesh_axes:
+                my = my * mesh.shape[ax] + jax.lax.axis_index(ax)
+            return jax.random.fold_in(jax.random.PRNGKey(seed), my)
+
         def _packed_server_phase(server, grads, seed):
-            """ONE fused FAIR-k pass over the whole local pytree: pack the
-            shard's leaves into a lane-aligned buffer (trace-time layout),
-            estimate/carry globally consistent (θ_M, θ_A) (pmean across
-            shards — two scalars), run a single ``fairk_update``, unpack.
-            Replaces ~n_leaves quantile estimations + kernel launches."""
+            """ONE fused FAIR-k pass over the whole local pytree, against
+            PERSISTED flat server buffers: only the fresh gradients are
+            packed (one tree copy); g_prev (bf16), age (int8, PAD_AGE
+            sentinel in the lane pads) and the optional EF residual stay
+            lane-aligned flat buffers across steps, so the step saves two
+            tree packs + one tree unpack per round vs the PR-2 re-pack
+            path and the buffer donation is fully in place.  (θ_M, θ_A)
+            stay globally consistent (pmean across shards — two scalars);
+            the warm-start state skips the quantile pass when trusted."""
             layout = packing.PackedLayout.from_tree(grads)
             eng = SelectionEngine(
                 EngineConfig(policy="fairk", backend="packed", rho=oac.rho,
@@ -262,16 +366,20 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                              reduce_axes=mesh_axes),
                 layout.d_packed, layout=layout)
             tstate = packing.threshold_state_from_vec(server["theta"])
-            key = (jax.random.PRNGKey(seed)
-                   if oac.noise_std > 0.0 else None)
-            g_t, age_tree, stats = eng.select_and_merge_tree(
-                grads, server["g"], server["age"], key=key, tstate=tstate)
+            key = _shard_noise_key(seed) if oac.noise_std > 0.0 else None
+            g_flat = layout.pack(grads)            # the ONLY pack per step
+            g_t, age_next, stats = eng.select_and_merge(
+                g_flat, server["g"], server["age"], key=key, tstate=tstate,
+                residual=server.get("res"))
             new_server = {
-                "g": jax.tree.map(lambda x: x.astype(jnp.bfloat16), g_t),
-                "age": jax.tree.map(lambda x: x.astype(jnp.int8), age_tree),
+                "g": g_t.astype(jnp.bfloat16),
+                "age": age_next.astype(jnp.int8),
                 "theta": packing.threshold_state_to_vec(stats["tstate"]),
             }
-            return g_t, new_server
+            if "res" in server:
+                new_server["res"] = stats["residual"]
+            # the optimizer consumes per-leaf trees: ONE unpack per step
+            return layout.unpack(g_t, cast=False), new_server
 
         def _per_leaf_server_phase(server, grads, seed):
             """Historical per-leaf loop (oac.packed=False): one threshold
@@ -279,7 +387,7 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
             leaves_g, treedef = jax.tree_util.tree_flatten(grads)
             leaves_gp = treedef.flatten_up_to(server["g"])
             leaves_age = treedef.flatten_up_to(server["age"])
-            key = jax.random.PRNGKey(seed)
+            key = _shard_noise_key(seed)
             g_t, new_gp, new_age = [], [], []
             for i, (g, gp, ag) in enumerate(zip(leaves_g, leaves_gp,
                                                 leaves_age)):
@@ -359,6 +467,7 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         "seq_len": shape.seq_len, "oac": oac is not None,
         "oac_packed": bool(oac.packed) if oac is not None else False,
         "oac_warm_start": bool(oac.warm_start) if oac is not None else False,
+        "oac_ef": bool(oac.error_feedback) if oac is not None else False,
         "optimizer": opt_name or cfg.optimizer, "lr": lr,
         "gather_dtype": gather_dtype,
         "scans": {"microbatch": n_micro, "layers": cfg.n_scan_blocks},

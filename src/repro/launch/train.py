@@ -37,7 +37,11 @@ def main():
     ap.add_argument("--rho", type=float, default=0.1)
     ap.add_argument("--per-leaf-server", action="store_true",
                     help="historical per-leaf OAC server phase (default: "
-                         "packed single fused pass, DESIGN.md §9)")
+                         "persisted packed fused pass, DESIGN.md §9-§10)")
+    ap.add_argument("--ef", action="store_true",
+                    help="error feedback: persist the unselected gradient "
+                         "mass in a flat residual buffer and fold it back "
+                         "next step (packed server phase only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -45,7 +49,8 @@ def main():
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((1, n_dev), ("data", "model"))
     shape = InputShape("custom", args.seq, args.batch, "train")
-    oac = (OacServerConfig(rho=args.rho, packed=not args.per_leaf_server)
+    oac = (OacServerConfig(rho=args.rho, packed=not args.per_leaf_server,
+                           error_feedback=args.ef)
            if args.oac else None)
     bundle = make_train_step(cfg, shape, mesh, n_micro=1, oac=oac, lr=1e-3)
 
@@ -54,10 +59,11 @@ def main():
     from repro.optim import make_optimizer
     opt = make_optimizer(bundle.meta["optimizer"], bundle.meta["lr"])
     opt_state = opt.init(params)
-    server = init_server_state(params)
+    server = init_server_state(params, mesh=mesh, cfg=cfg, oac=oac)
 
-    # donate (params, opt_state, server): the packed server buffers are
-    # consumed and rebuilt every step — donation lets XLA update in place
+    # donate (params, opt_state, server): the persisted packed server
+    # buffers (flat g_prev bf16 / age int8 / EF residual f32) are consumed
+    # and rebuilt every step — donation makes the update fully in place
     step_fn = jax.jit(bundle.fn, donate_argnums=(0, 1, 2))
     print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M-param family "
           f"variant, {args.steps} steps, oac={'on' if args.oac else 'off'}")

@@ -110,11 +110,57 @@ def test_threshold_backend_learns(task):
     assert 0.05 < frac < 0.2, frac
 
 
-def test_threshold_backend_rejects_exact_only_modes():
+def test_all_backends_accept_onebit_and_ef():
+    """Regression: one_bit / error_feedback used to raise on the
+    threshold/packed backends (trainer.py hard gate) — now every backend
+    builds; only unknown backends are rejected."""
     from repro.fl import make_fl_step
-    with pytest.raises(ValueError):
-        make_fl_step(FLConfig(backend="threshold", one_bit=True),
+    for backend in ("exact", "threshold", "packed"):
+        make_fl_step(FLConfig(backend=backend, one_bit=True,
+                              error_feedback=True),
                      lambda w: w, lambda p, x, y: 0.0, 16)
+    with pytest.raises(ValueError):
+        make_fl_step(FLConfig(backend="sharded"), lambda w: w,
+                     lambda p, x, y: 0.0, 16)
+
+
+def test_threshold_backend_error_feedback_learns(task):
+    """Server-side EF on the fused threshold route trains and keeps the
+    rho budget (the residual folds back through the fused kernel pass)."""
+    h = _run(task, "fairk", rounds=60, backend="threshold",
+             error_feedback=True)
+    assert np.isfinite(h["acc"][-1])
+    assert h["acc"][-1] > 0.45
+    frac = h["sel_count"].sum() / (h["sel_count"].shape[0] * 60)
+    assert 0.05 < frac < 0.2, frac
+
+
+def test_packed_backend_one_bit_learns(task):
+    """FSK-MV one-bit uplink on the packed backend: sign_mv majority votes
+    merge through the fused pass; vote-energy scoring keeps the budget."""
+    h = _run(task, "fairk", rounds=40, backend="packed", one_bit=True,
+             global_lr=0.002)
+    assert np.isfinite(h["acc"][-1])
+    assert h["acc"][-1] > 0.3
+    frac = h["sel_count"].sum() / (h["sel_count"].shape[0] * 40)
+    assert 0.04 < frac < 0.25, frac
+
+
+def test_one_bit_threshold_noiseless_keeps_budget(task):
+    """Regression: noiseless vote energies take ~N/2 discrete values, so a
+    quantile threshold inside a tie level used to select the whole level
+    and blow the rho budget — the index-jitter tie-break keeps it."""
+    params0, loss_fn, eval_fn, sample_round = task
+    fl = FLConfig(n_clients=8, local_steps=3, batch_size=10, rounds=20,
+                  policy="fairk", compression_ratio=0.1,
+                  backend="threshold", one_bit=True,
+                  local_lr=0.05, global_lr=0.002,
+                  channel=ChannelConfig(fading="none", mean=1.0,
+                                        noise_std=0.0))
+    h = train(fl, params0, loss_fn, sample_round, eval_fn=eval_fn,
+              eval_every=20)
+    frac = h["sel_count"].sum() / (h["sel_count"].shape[0] * 20)
+    assert 0.05 < frac < 0.2, frac
 
 
 def test_error_feedback_improves_fairk(task):

@@ -1,0 +1,129 @@
+"""Persisted packed server state (launch.steps, DESIGN.md §10).
+
+The server state of the big-model trainer is now the lane-aligned flat
+buffers themselves — g_prev bf16 / age int8 (PAD_AGE sentinel in the lane
+pads) / optional EF residual f32 — carried across steps.  These tests pin:
+
+* ``server_layout`` (built outside shard_map from abstract local shapes)
+  matches the layout ``PackedLayout.from_tree(local_grads)`` builds inside;
+* ``init_server_state`` / ``abstract_server_state`` agree with the input
+  specs ``make_train_step`` expects, for all (packed, error_feedback)
+  flavours;
+* two real steps execute with finite loss, budget-tracking selection, the
+  pad sentinel intact, and (EF) a live residual buffer.
+
+The zero-re-pack-per-round structural claim is asserted by
+``benchmarks/packed_bench.py --smoke`` (trace-time pack/unpack counters);
+multi-device execution is covered by tests/test_sharded.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core import packing
+from repro.launch import sharding as shlib
+from repro.launch.steps import (OacServerConfig, abstract_params,
+                                abstract_server_state, init_server_state,
+                                make_train_step, server_layout)
+
+
+class _FakeMesh:
+    """Just enough mesh for the static local-shape math."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def test_server_layout_local_shapes():
+    """The layout built from (params_abs, p_specs, mesh) must describe the
+    per-shard leaves — dims sharded by a spec axis divide by its size."""
+    from jax.sharding import PartitionSpec as P
+    mesh = _FakeMesh({"data": 2, "model": 4})
+    params = [jax.ShapeDtypeStruct((16, 8), jnp.float32),
+              jax.ShapeDtypeStruct((100,), jnp.float32)]
+    specs = [P("model", ("data",)), P()]
+    lay = server_layout(params, specs, mesh)
+    assert [e.shape for e in lay.table] == [(4, 4), (100,)]
+    assert lay.d_valid == 16 + 100
+    assert lay.d_packed % packing.LANE == 0
+
+
+@pytest.mark.parametrize("ef", [False, True])
+def test_init_matches_abstract_and_specs(ef):
+    cfg = get_config("mamba2-370m", reduced_variant=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    oac = OacServerConfig(error_feedback=ef)
+    params_abs = abstract_params(cfg)
+    p_specs = shlib.param_pspecs(params_abs, cfg, mesh)
+    srv_abs = abstract_server_state(params_abs, mesh=mesh, p_specs=p_specs,
+                                    oac=oac)
+    params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_abs)
+    srv = init_server_state(params, mesh=mesh, cfg=cfg, oac=oac)
+    assert set(srv) == set(srv_abs) == (
+        {"g", "age", "theta", "res"} if ef else {"g", "age", "theta"})
+    for k in srv:
+        assert srv[k].shape == srv_abs[k].shape, k
+        assert srv[k].dtype == srv_abs[k].dtype, k
+    # age init: zeros on valid coords, PAD_AGE sentinel in the lane pads
+    lay = server_layout(params_abs, p_specs, mesh)
+    valid = np.asarray(lay.valid_mask())
+    ages = np.asarray(srv["age"])
+    assert (ages[valid] == 0).all() and (ages[~valid] == packing.PAD_AGE).all()
+
+
+def test_packed_init_requires_mesh_and_cfg():
+    params = {"w": jnp.zeros((8,), jnp.float32)}
+    with pytest.raises(ValueError):
+        init_server_state(params)                  # packed default needs mesh
+    srv = init_server_state(params, oac=OacServerConfig(packed=False))
+    assert srv["g"]["w"].shape == (8,)             # per-leaf tree flavour
+
+
+def test_per_leaf_rejects_error_feedback():
+    cfg = get_config("mamba2-370m", reduced_variant=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError):
+        make_train_step(cfg, InputShape("t", 64, 2, "train"), mesh,
+                        oac=OacServerConfig(packed=False,
+                                            error_feedback=True))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("ef", [False, True])
+def test_two_steps_execute_with_persisted_buffers(ef):
+    from repro.data.tokens import lm_batch
+    from repro.models import transformer as tr
+    from repro.optim import make_optimizer
+    cfg = get_config("mamba2-370m", reduced_variant=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = InputShape("t", 64, 2, "train")
+    oac = OacServerConfig(error_feedback=ef)
+    bundle = make_train_step(cfg, shape, mesh, oac=oac)
+    params = tr.init_lm(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer(bundle.meta["optimizer"], 3e-3)
+    opt_state = opt.init(params)
+    server = init_server_state(params, mesh=mesh, cfg=cfg, oac=oac)
+    step = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                   out_shardings=bundle.out_shardings,
+                   donate_argnums=(0, 1, 2))
+    nm = bundle.meta["n_micro"]
+    with mesh:
+        for t in range(2):
+            toks, labels = lm_batch(t, 2, 64, cfg.vocab)
+            batch = {"tokens": jnp.asarray(toks).reshape(nm, 2 // nm, 64),
+                     "labels": jnp.asarray(labels).reshape(nm, 2 // nm, 64)}
+            params, opt_state, server, loss = step(
+                params, opt_state, server, batch, jnp.asarray(t, jnp.int32))
+    assert np.isfinite(float(loss))
+    ages = np.asarray(server["age"])
+    valid = ages >= 0
+    frac_fresh = (ages[valid] == 0).mean()
+    assert 0.03 < frac_fresh < 0.3                 # rho = 0.1 target
+    assert (ages[~valid] == packing.PAD_AGE).all()
+    assert float(np.asarray(server["theta"])[4]) == 1.0   # init flag set
+    if ef:
+        assert float(jnp.abs(server["res"]).sum()) > 0.0

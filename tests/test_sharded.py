@@ -39,7 +39,8 @@ shape = InputShape("t", 128, 8, "train")
 bundle = make_train_step(cfg, shape, mesh)
 params = tr.init_lm(jax.random.PRNGKey(0), cfg)
 opt = make_optimizer(bundle.meta["optimizer"], 3e-3)
-opt_state, server = opt.init(params), init_server_state(params)
+opt_state = opt.init(params)
+server = init_server_state(params, mesh=mesh, cfg=cfg)
 step = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                out_shardings=bundle.out_shardings)
 nm = bundle.meta["n_micro"]
@@ -52,10 +53,12 @@ with mesh:
         params, opt_state, server, loss = step(params, opt_state, server,
                                                batch, jnp.asarray(t, jnp.int32))
         losses.append(float(loss))
+# persisted packed server state: flat int8 age buffer, PAD_AGE (-1) pads
 ages = np.concatenate([np.asarray(a).ravel()
                        for a in jax.tree.leaves(server["age"])])
+valid = ages >= 0
 print(json.dumps({"first": losses[0], "last": losses[-1],
-                  "frac_fresh": float((ages == 0).mean()),
+                  "frac_fresh": float((ages[valid] == 0).mean()),
                   "max_age": int(ages.max())}))
 """)
     res = json.loads(out.strip().splitlines()[-1])

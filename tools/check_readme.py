@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Docs gate: smoke-execute the README's quickstart commands.
+
+Extracts every fenced ```bash block from README.md and runs each command
+line from the repo root, so the quickstart can never rot.  Conventions:
+
+* lines ending with ``[ci-skip]`` (inside a trailing comment) are listed
+  but not executed — for heavy entry points documented alongside the
+  quickstart;
+* comment-only and blank lines are ignored;
+* a non-zero exit from any executed command fails the gate.
+
+  python tools/check_readme.py [--readme README.md] [--timeout 1200]
+"""
+
+import argparse
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+BASH_BLOCK = re.compile(r"```bash\n(.*?)```", re.DOTALL)
+
+
+def extract_commands(readme_text):
+    """(command, skipped) pairs, in document order."""
+    out = []
+    for block in BASH_BLOCK.findall(readme_text):
+        for raw in block.splitlines():
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            out.append((line, "[ci-skip]" in line))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--readme", default="README.md")
+    ap.add_argument("--timeout", type=int, default=1200,
+                    help="per-command timeout (seconds)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the extracted commands and exit")
+    args = ap.parse_args()
+
+    root = Path(__file__).resolve().parent.parent
+    commands = extract_commands((root / args.readme).read_text())
+    if not commands:
+        print(f"[check_readme] FAIL: no bash blocks found in {args.readme}")
+        return 1
+    if args.list:
+        for cmd, skipped in commands:
+            print(("skip " if skipped else "run  ") + cmd)
+        return 0
+
+    failures = []
+    for cmd, skipped in commands:
+        if skipped:
+            print(f"[check_readme] skip: {cmd}")
+            continue
+        print(f"[check_readme] run : {cmd}", flush=True)
+        t0 = time.time()
+        proc = subprocess.run(["bash", "-c", cmd], cwd=root,
+                              timeout=args.timeout,
+                              capture_output=True, text=True)
+        dt = time.time() - t0
+        if proc.returncode != 0:
+            failures.append(cmd)
+            print(f"[check_readme] FAIL ({dt:.0f}s, rc={proc.returncode}):"
+                  f"\n--- stdout ---\n{proc.stdout[-2000:]}"
+                  f"\n--- stderr ---\n{proc.stderr[-2000:]}")
+        else:
+            print(f"[check_readme] OK   ({dt:.0f}s)")
+    if failures:
+        print(f"[check_readme] {len(failures)} quickstart command(s) "
+              f"broken:")
+        for c in failures:
+            print("  ", c)
+        return 1
+    n_run = sum(1 for _, s in commands if not s)
+    print(f"[check_readme] all {n_run} executed command(s) OK "
+          f"({len(commands) - n_run} ci-skip)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
