@@ -1,3 +1,6 @@
-from repro.checkpoint.io import latest_step, restore, save
+from repro.checkpoint.io import (latest_server_step, latest_step, restore,
+                                 restore_server_state, save,
+                                 save_server_state)
 
-__all__ = ["latest_step", "restore", "save"]
+__all__ = ["latest_step", "restore", "save", "save_server_state",
+           "restore_server_state", "latest_server_step"]

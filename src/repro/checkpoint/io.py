@@ -2,6 +2,14 @@
 
 Arrays are stored flat under path-encoded keys; structure (dict/list/tuple
 nesting and scalar leaves) round-trips exactly.  Atomic via tmp+rename.
+
+``save_server_state`` / ``restore_server_state`` additionally checkpoint
+the PERSISTED packed server buffers of the big-model trainer
+(launch.steps: flat bf16 ``g`` / int8 ``age`` / f32 ``res`` + the
+replicated ``theta`` vector) together with the ``PackedLayout`` block
+table, so a restart resumes the server phase bit-exactly — bf16 has no
+native numpy dtype, so those buffers ride as uint16 raw views with a
+dtype tag in the JSON metadata record.
 """
 
 from __future__ import annotations
@@ -10,10 +18,13 @@ import json
 import os
 import re
 import tempfile
-from typing import Any, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core import packing
 
 _SEP = "/"
 
@@ -92,6 +103,92 @@ def restore(path: str, like: Any = None) -> Any:
     if like is not None:
         root = _fix_tuples(root, like)
     return root
+
+
+# ---------------------------------------------------------------------------
+# packed server-state checkpoints (flat buffers + layout metadata)
+# ---------------------------------------------------------------------------
+
+_BF16 = "bfloat16"
+
+
+def save_server_state(path: str, server: Dict[str, Any],
+                      layout: Optional["packing.PackedLayout"] = None,
+                      step: Optional[int] = None) -> str:
+    """Save a flat packed server-state dict (launch.steps flavour).
+
+    ``server`` maps names to flat arrays (any mix of bf16/int8/f32 —
+    bf16 is stored as a uint16 raw view and restored bit-exactly);
+    ``layout`` (optional) records the ``PackedLayout`` block table so the
+    restoring process can verify its freshly built layout addresses the
+    same buffer geometry (``packing.layout_matches``).  If ``step`` is
+    given, writes ``<path>/server_<step>.npz``.  Atomic via tmp+rename."""
+    if step is not None:
+        os.makedirs(path, exist_ok=True)
+        path = os.path.join(path, f"server_{step:08d}.npz")
+    arrays, dtypes = {}, {}
+    for name, val in server.items():
+        arr = np.asarray(jax.device_get(val))
+        if arr.dtype == jnp.bfloat16:
+            dtypes[name] = _BF16
+            arr = arr.view(np.uint16)
+        else:
+            dtypes[name] = str(arr.dtype)
+        arrays[name] = arr
+    meta = {"dtypes": dtypes,
+            "layout": (packing.layout_to_meta(layout)
+                       if layout is not None else None)}
+    fd, tmp = tempfile.mkstemp(
+        dir=os.path.dirname(os.path.abspath(path)) or ".", suffix=".npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, __server_meta__=np.asarray(json.dumps(meta)),
+                 **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return path
+
+
+def restore_server_state(path: str,
+                         layout: Optional["packing.PackedLayout"] = None
+                         ) -> Tuple[Dict[str, np.ndarray],
+                                    Optional[Dict[str, Any]]]:
+    """Load a ``save_server_state`` checkpoint: (server dict, layout meta).
+
+    Dtypes (incl. bf16) restore bit-exactly.  If ``layout`` is given, the
+    saved block table must match it (``ValueError`` otherwise — restoring
+    flat buffers onto a different leaf layout would silently scramble
+    every parameter)."""
+    data = np.load(path)
+    meta = json.loads(str(data["__server_meta__"][()]))
+    server = {}
+    for name in data.files:
+        if name == "__server_meta__":
+            continue
+        arr = data[name]
+        tag = meta["dtypes"][name]
+        server[name] = (arr.view(jnp.bfloat16) if tag == _BF16
+                        else arr.astype(np.dtype(tag), copy=False))
+    lay_meta = meta.get("layout")
+    if layout is not None:
+        if lay_meta is None:
+            raise ValueError(f"{path} was saved without layout metadata — "
+                             "cannot verify buffer geometry")
+        if not packing.layout_matches(layout, lay_meta):
+            raise ValueError(f"{path} holds buffers for a different "
+                             "PackedLayout (leaf shapes/offsets differ); "
+                             "refusing to restore onto this model")
+    return server, lay_meta
+
+
+def latest_server_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"server_(\d+)\.npz", f))]
+    return max(steps) if steps else None
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

@@ -118,6 +118,11 @@ def sampled_thresholds(g: Array, age: Array, *, rho: float, k_m_frac: float,
                        ) -> Tuple[Array, Array]:
     """(θ_M, θ_A) from strided-sample quantiles (no global sort).
 
+    This is a read pass over (a strided sample of) the gradient buffer —
+    on the fused-stats path it is replaced by ``packing.hist_thresholds``
+    over the kernel-emitted histograms, and the trace counter below is
+    what ``packed_bench --smoke`` uses to prove the replacement.
+
     ``sample_ids`` (static int32 positions, e.g. ``PackedLayout.sample_ids``)
     restricts the sample to those coordinates — REQUIRED on packed buffers,
     where pad zeros in the sample would bias θ_M low (jitter still hashes
@@ -127,6 +132,7 @@ def sampled_thresholds(g: Array, age: Array, *, rho: float, k_m_frac: float,
     θ_M is estimated on ``|g + residual|`` — the residual is sampled at the
     same positions and added sample-wise, so no d-length effective-gradient
     temp is materialised for the estimate."""
+    packing.G_READS += 1
     age32 = age.astype(jnp.float32)
     if sample_ids is None:
         g_s = strided_sample(g.astype(jnp.float32), sample_cap)
@@ -150,6 +156,7 @@ def exact_thresholds(g: Array, age: Array, *, k: int, k_m: int
     inputs: θ_M sits strictly between the k_m-th and (k_m+1)-th largest
     |g|, θ_A between the k_a-th and (k_a+1)-th largest jittered age *among
     the magnitude-stage complement*.  O(d log d) — parity/testing path."""
+    packing.G_READS += 1
     d = g.shape[0]
     k_a = k - k_m
     mag = jnp.abs(g.astype(jnp.float32))
@@ -229,6 +236,18 @@ class EngineConfig:
     noise_std: float = 0.0               # channel noise on fresh coords
     n_clients: int = 1                   # N in Eq. (7) (noise / N scaling)
     kernel_mode: Optional[str] = None    # None auto | pallas | interpret | ref
+    # -- fused selection statistics -----------------------------------------
+    # Emit n_sel / n_sel_m and the magnitude/age histograms from INSIDE the
+    # fused kernel (ops.fairk_stats_update) instead of recomputing them as
+    # extra read passes, and — with warm_start — re-estimate thresholds
+    # from the carried histograms (packing.hist_thresholds) instead of the
+    # sampled-quantile bootstrap whenever the trust region trips.  The
+    # fused kernel becomes the ONLY read of the gradient buffer per round;
+    # the very first round (no histogram yet) transmits everything once
+    # (θ = 0) and self-heals from the realised statistics.  Off by default:
+    # the legacy two-pass accounting bootstraps from the CURRENT round's
+    # quantiles, which round-0-sensitive callers may prefer.
+    fused_stats: bool = False
     # -- packed backend only ------------------------------------------------
     warm_start: bool = False             # carry (θ, counts) across rounds and
                                          # skip the quantile pass when warm
@@ -357,7 +376,15 @@ class SelectionEngine:
         ``fresh`` (one-bit FSK-MV, exact/threshold/packed): transmitted
         values when they differ from the score source — pass the
         ``kernels.sign_mv`` majority-vote signs while scoring the vote
-        energy in ``g``."""
+        energy in ``g``.
+
+        With ``fused_stats=True`` the stats additionally carry
+        ``n_sel_m`` and the ``mag_hist`` / ``age_hist`` selection
+        histograms on every backend (emitted by the fused kernel on
+        threshold/packed, psum'd per-shard partials on sharded, jnp on
+        exact), and ``tstate`` is honoured by the sharded backend too —
+        its per-shard thresholds then warm-start from last round's
+        reduced statistics instead of bootstrapping every round."""
         if g.shape != (self.d,):
             raise ValueError(f"expected shape ({self.d},), got {g.shape}")
         if self.cfg.noise_std > 0.0 and key is None:
@@ -372,7 +399,8 @@ class SelectionEngine:
         if backend == "packed":
             return self._packed_update(g, g_prev, age, key, tstate,
                                        residual, fresh)
-        return self._sharded_update(g, g_prev, age, key, residual, fresh)
+        return self._sharded_update(g, g_prev, age, key, residual, fresh,
+                                    tstate)
 
     def _noisy(self, fresh: Array, key: Optional[Array]) -> Array:
         cfg = self.cfg
@@ -383,7 +411,7 @@ class SelectionEngine:
         return fresh.astype(jnp.float32) + noise
 
     def _exact_update(self, g, g_prev, age, key, residual=None, fresh=None):
-        k, _, _ = self.budgets()
+        k, k_m, _ = self.budgets()
         key_sel = key_noise = None
         if key is not None:
             key_sel, key_noise = jax.random.split(key)
@@ -394,6 +422,17 @@ class SelectionEngine:
         g_t, age_next = masked_merge(self._noisy(sent, key_noise), g_prev,
                                      age, mask)
         stats = {"idx": idx, "n_selected": jnp.float32(k), "k": k}
+        if self.cfg.fused_stats:
+            # the index-form FAIR-k magnitude stage selects exactly k_M
+            # coordinates; the histograms come from the same jnp helper
+            # the kernel oracle uses, so they are bit-comparable to the
+            # threshold/packed backends' kernel-emitted ones
+            from repro.kernels import ref    # deferred: kernels import core
+            mag_hist, age_hist = ref.strided_hists_ref(
+                score, age_next, age.astype(jnp.float32) >= 0.0,
+                packing.hist_stride(self.d))
+            stats |= {"n_sel_m": jnp.float32(k_m), "mag_hist": mag_hist,
+                      "age_hist": age_hist}
         if residual is not None:
             # noise-free accounting (the channel error is not observable by
             # the clients) — identical formula to the fused kernel's stage
@@ -405,30 +444,93 @@ class SelectionEngine:
         from repro.kernels import ops          # deferred: kernels import core
         k, _, _ = self.budgets()
         theta_m, theta_a = self.thresholds(g, age, residual=residual)
-        g_t, age_next, res_next = ops.fairk_ef_update(
-            g, g_prev, age, theta_m, theta_a, residual=residual,
-            fresh=fresh, mode=self.cfg.kernel_mode)
-        # selected coordinates are exactly the age-reset ones (Eq. 10)
-        sel = (age_next == 0.0).astype(jnp.float32)
-        n_sel = sel.sum()
+        if self.cfg.fused_stats:
+            g_t, age_next, res_next, kstats = ops.fairk_stats_update(
+                g, g_prev, age, theta_m, theta_a, residual=residual,
+                fresh=fresh, mode=self.cfg.kernel_mode)
+            n_sel = kstats["n_sel"]
+            extra = {"n_sel_m": kstats["n_sel_m"],
+                     "mag_hist": kstats["mag_hist"],
+                     "age_hist": kstats["age_hist"]}
+        else:
+            g_t, age_next, res_next = ops.fairk_ef_update(
+                g, g_prev, age, theta_m, theta_a, residual=residual,
+                fresh=fresh, mode=self.cfg.kernel_mode)
+            # selected coordinates are exactly the age-reset ones (Eq. 10)
+            n_sel = (age_next == 0.0).astype(jnp.float32).sum()
+            extra = {}
         if self.cfg.noise_std > 0.0:
             # selection saw the clean aggregate; the channel perturbs only
             # the fresh (transmitted) coordinates — one extra masked pass on
             # top of the fused kernel, equivalent to merging g + noise
+            sel = (age_next == 0.0).astype(jnp.float32)
             g_t = g_t + sel * (self.cfg.noise_std / self.cfg.n_clients) * \
                 jax.random.normal(key, g.shape, jnp.float32)
         stats = {"theta_m": theta_m, "theta_a": theta_a,
-                 "n_selected": n_sel, "k": k}
+                 "n_selected": n_sel, "k": k, **extra}
         if res_next is not None:
             stats["residual"] = res_next
         return g_t, age_next, stats
+
+    def _stats_thresholds(self, tstate) -> Tuple[Array, Array, Array]:
+        """(θ_M, θ_A, streak') from the carried statistics ALONE — zero
+        reads of the gradient buffer (the fused-stats steady state).
+
+        Warm branch: last round's thresholds with the budget-tracking
+        correction, once the prediction streak is established.  Otherwise
+        (trust region tripped, cold-start drift, or the very first
+        rounds): thresholds re-estimated from the kernel-emitted
+        histograms (``packing.hist_thresholds``) — the replacement for
+        the sampled-quantile bootstrap pass.  Both branches are a handful
+        of scalar/128-bin flops, so a plain ``where`` suffices where the
+        legacy path needed ``lax.cond`` to dodge the quantile pass."""
+        cfg = self.cfg
+        k, k_m, _ = self.budgets()
+        rho, km_frac = self._rho_parts()
+        hist_tm, hist_ta = packing.hist_thresholds(
+            tstate["mag_hist"], tstate["age_hist"], rho=rho,
+            k_m_frac=km_frac)
+        pred_tm, pred_ta = packing.warm_corrected_thresholds(
+            tstate, k=k, k_m=k_m, alpha=cfg.warm_alpha, clip=cfg.warm_clip)
+        on_track = self._on_track(tstate, k)
+        use_warm = on_track & (tstate["streak"] >= cfg.warm_streak)
+        tm = jnp.where(use_warm, pred_tm, hist_tm)
+        ta = jnp.where(use_warm, pred_ta, hist_ta)
+        # streak: the warm predictor must keep agreeing with the
+        # hist-measured thresholds (same gates as the legacy sampled path)
+        streak = self._streak_update(tstate, on_track, tm, ta, pred_tm,
+                                     pred_ta)
+        return tm, ta, streak
+
+    def _on_track(self, tstate, k) -> Array:
+        """Trust gate 1: last round's realised count stayed inside the
+        budget tolerance (shared by the fused and legacy warm paths)."""
+        return ((tstate["init"] > 0.0)
+                & (jnp.abs(tstate["n_sel"] - k) <= self.cfg.warm_tol * k))
+
+    def _streak_update(self, tstate, on_track, tm, ta, pred_tm, pred_ta
+                       ) -> Array:
+        """Trust gate 2: the warm predictor must keep agreeing with the
+        measured thresholds (sampled quantiles on the legacy path, the
+        histogram estimates on the fused path) — ONE formula so the two
+        paths can never drift apart."""
+        both = lambda a, b: jnp.isinf(a) & jnp.isinf(b)
+        ratio_tol = 1.0 + self.cfg.warm_tol
+        pred_ok = (
+            (both(ta, pred_ta) | (jnp.abs(ta - pred_ta) <= 0.75))
+            & (both(tm, pred_tm)
+               | ((pred_tm <= tm * ratio_tol) & (pred_tm * ratio_tol >= tm))))
+        return jnp.where(on_track & pred_ok, tstate["streak"] + 1.0, 0.0)
 
     def _packed_thresholds(self, g, age, tstate, residual=None):
         """(θ_M, θ_A, streak') for a packed buffer: pad-excluding sampled
         quantiles, or — when warm — last round's thresholds with the
         budget-tracking correction (no quantile pass at all on steady-state
-        rounds, via lax.cond).  ``residual`` folds into the magnitude
-        statistic (score = g + residual; pads carry residual 0)."""
+        rounds, via lax.cond).  With ``fused_stats`` the bootstrap itself
+        disappears from the trace: re-estimation runs on the carried
+        in-kernel histograms (``_stats_thresholds``).  ``residual`` folds
+        into the magnitude statistic (score = g + residual; pads carry
+        residual 0)."""
         cfg = self.cfg
         k, k_m, _ = self.budgets()
         streak = jnp.float32(0.0)
@@ -437,6 +539,8 @@ class SelectionEngine:
             # top-k, so the order statistics are those of the valid coords
             return (*exact_thresholds(eff_score(g, residual), age,
                                       k=k, k_m=k_m), streak)
+        if cfg.fused_stats and cfg.warm_start and tstate is not None:
+            return self._stats_thresholds(tstate)
         rho, km_frac = self._rho_parts()
 
         def bootstrap(_):
@@ -466,56 +570,80 @@ class SelectionEngine:
         #    quantile pass stops executing (lax.cond).
         pred_tm, pred_ta = packing.warm_corrected_thresholds(
             tstate, k=k, k_m=k_m, alpha=cfg.warm_alpha, clip=cfg.warm_clip)
-        on_track = ((tstate["init"] > 0.0)
-                    & (jnp.abs(tstate["n_sel"] - k) <= cfg.warm_tol * k))
+        on_track = self._on_track(tstate, k)
         use_warm = on_track & (tstate["streak"] >= cfg.warm_streak)
         tm, ta = jax.lax.cond(use_warm, lambda _: (pred_tm, pred_ta),
                               bootstrap, None)
-        both = lambda a, b: jnp.isinf(a) & jnp.isinf(b)
-        ratio_tol = 1.0 + cfg.warm_tol
-        pred_ok = (
-            (both(ta, pred_ta) | (jnp.abs(ta - pred_ta) <= 0.75))
-            & (both(tm, pred_tm)
-               | ((pred_tm <= tm * ratio_tol) & (pred_tm * ratio_tol >= tm))))
-        streak = jnp.where(on_track & pred_ok, tstate["streak"] + 1.0, 0.0)
+        streak = self._streak_update(tstate, on_track, tm, ta, pred_tm,
+                                     pred_ta)
         return tm, ta, streak
 
     def _packed_update(self, g, g_prev, age, key, tstate, residual=None,
                        fresh=None):
         """One fused FAIR-k pass over the whole packed pytree buffer.
 
-        Exactly one quantile estimation (or none, when warm) and exactly one
+        Exactly one quantile estimation (or none: warm rounds correct the
+        carried thresholds, and with ``fused_stats`` even re-estimation
+        runs on the kernel-emitted histograms) and exactly one
         ``fairk_update`` launch for the entire model — vs one of each per
-        leaf on the historical per-leaf path.  The residual (error-feedback)
-        stage and the one-bit ``fresh`` values ride the same fused pass."""
+        leaf on the historical per-leaf path.  The residual
+        (error-feedback) stage, the one-bit ``fresh`` values and (with
+        ``fused_stats``) the counts/histogram statistics all ride the
+        same fused pass, so the steady-state round reads the gradient
+        buffer exactly once."""
         from repro.kernels import ops          # deferred: kernels import core
         cfg = self.cfg
         k, _, _ = self.budgets()
         theta_m, theta_a, streak = self._packed_thresholds(g, age, tstate,
                                                            residual)
-        g_t, age_next, res_next = ops.fairk_ef_update(
-            g, g_prev, age, theta_m, theta_a, residual=residual,
-            fresh=fresh, mode=cfg.kernel_mode)
-        # selected coordinates are exactly the age-reset ones (Eq. 10);
-        # pads keep the negative sentinel so they never count
-        sel = (age_next == 0.0).astype(jnp.float32)
-        n_sel = sel.sum()
-        # stat read only: XLA fuses |score| >= θ into the reduction over
-        # the already-resident (g, residual) buffers (an in-kernel mask_m
-        # count would need a cross-block scalar output — ROADMAP)
-        n_sel_m = (sel * (jnp.abs(eff_score(g, residual)) >= theta_m)).sum()
+        if cfg.fused_stats:
+            # counts AND histograms come out of the kernel itself — the
+            # fused launch is the only read of (g, residual) this round
+            g_t, age_next, res_next, kstats = ops.fairk_stats_update(
+                g, g_prev, age, theta_m, theta_a, residual=residual,
+                fresh=fresh, mode=cfg.kernel_mode)
+            n_sel, n_sel_m = kstats["n_sel"], kstats["n_sel_m"]
+            mag_hist, age_hist = kstats["mag_hist"], kstats["age_hist"]
+        else:
+            g_t, age_next, res_next = ops.fairk_ef_update(
+                g, g_prev, age, theta_m, theta_a, residual=residual,
+                fresh=fresh, mode=cfg.kernel_mode)
+            # legacy two-pass accounting: selected coordinates are exactly
+            # the age-reset ones (Eq. 10; pads keep the negative sentinel
+            # so they never count), and the magnitude-stage count re-reads
+            # (g, residual) — the extra pass fused_stats eliminates
+            packing.G_READS += 1
+            sel = (age_next == 0.0).astype(jnp.float32)
+            n_sel = sel.sum()
+            n_sel_m = (sel * (jnp.abs(eff_score(g, residual))
+                              >= theta_m)).sum()
+            mag_hist = age_hist = None
         if cfg.reduce_axes:
             # per-shard mean keeps counts comparable to the local budgets
+            # (and the carried tstate identical on every shard)
             n_sel = jax.lax.pmean(n_sel, cfg.reduce_axes)
             n_sel_m = jax.lax.pmean(n_sel_m, cfg.reduce_axes)
+            if mag_hist is not None:
+                mag_hist = jax.lax.pmean(mag_hist, cfg.reduce_axes)
+                age_hist = jax.lax.pmean(age_hist, cfg.reduce_axes)
         if cfg.noise_std > 0.0:
+            sel = (age_next == 0.0).astype(jnp.float32)
             g_t = g_t + sel * (cfg.noise_std / cfg.n_clients) * \
                 jax.random.normal(key, g.shape, jnp.float32)
         tstate_next = {"theta_m": theta_m, "theta_a": theta_a,
                        "n_sel_m": n_sel_m, "n_sel": n_sel,
-                       "init": jnp.float32(1.0), "streak": streak}
+                       "init": jnp.float32(1.0), "streak": streak,
+                       "mag_hist": (mag_hist if mag_hist is not None else
+                                    jnp.zeros((packing.STATS_MAG_BINS,),
+                                              jnp.float32)),
+                       "age_hist": (age_hist if age_hist is not None else
+                                    jnp.zeros((packing.STATS_AGE_BINS,),
+                                              jnp.float32))}
         stats = {"theta_m": theta_m, "theta_a": theta_a,
                  "n_selected": n_sel, "k": k, "tstate": tstate_next}
+        if mag_hist is not None:
+            stats |= {"n_sel_m": n_sel_m, "mag_hist": mag_hist,
+                      "age_hist": age_hist}
         if res_next is not None:
             stats["residual"] = res_next
         return g_t, age_next, stats
@@ -544,7 +672,7 @@ class SelectionEngine:
                                                        cast=False), stats
 
     def _sharded_update(self, g, g_prev, age, key, residual=None,
-                        fresh=None):
+                        fresh=None, tstate=None):
         cfg = self.cfg
         mesh = self.mesh
         axes = tuple(mesh.axis_names)
@@ -556,25 +684,44 @@ class SelectionEngine:
                              "fresh path — route one_bit through the "
                              "exact/threshold/packed backends")
         has_res = residual is not None
+        fused = cfg.fused_stats
+        # warm sharded rounds: the threshold decision consumes only the
+        # carried (replicated) statistics — psum'd per-shard partials from
+        # last round — so it runs OUTSIDE shard_map and the historical
+        # every-round per-shard bootstrap disappears entirely.  The
+        # resulting (θ_M, θ_A) are globally consistent by construction.
+        warm = fused and cfg.warm_start and tstate is not None
         use_global = cfg.global_thresholds or cfg.exact_theta
-        if use_global:
+        streak = jnp.float32(0.0)
+        if warm:
+            theta_m, theta_a, streak = self._stats_thresholds(tstate)
+        elif use_global:
             theta_m, theta_a = self.thresholds(g, age, residual=residual)
         else:
             theta_m = theta_a = jnp.float32(0.0)    # placeholder, unused
+        per_shard_boot = not (warm or use_global)
+        n_local = g.shape[0] // _mesh_size(mesh)
+        stride = packing.hist_stride(self.d)
+        # per-block partials only sum to the unsharded sample when the
+        # shard length is a stride multiple; else fall back to local
+        # stride 1 (counts stay exact either way — only hist sample
+        # density changes, and hist thresholds are scale-free)
+        if n_local % stride:
+            stride = 1
 
         def shard_phase(g_l, gp_l, age_l, res_l, tm, ta, key_l):
             my = 0
             for ax in axes:
                 my = my * mesh.shape[ax] + jax.lax.axis_index(ax)
             score = eff_score(g_l, res_l if has_res else None)
-            if not use_global:
+            if per_shard_boot:
                 tm, ta = sampled_thresholds(
                     score, age_l, rho=rho, k_m_frac=km_frac,
                     sample_cap=cfg.sample_cap)
             # jitter hashes GLOBAL coordinate ids (my * n_local offset) so
             # the mask is the one the unsharded backends would compute
-            mask, _ = threshold_mask(score, age_l, tm, ta,
-                                     index_offset=my * g_l.shape[0])
+            mask, mask_m = threshold_mask(score, age_l, tm, ta,
+                                          index_offset=my * g_l.shape[0])
             fresh_l = score.astype(jnp.float32)
             if cfg.noise_std > 0.0:
                 kk = jax.random.fold_in(key_l, my)
@@ -583,20 +730,40 @@ class SelectionEngine:
             g_t, age_next = masked_merge(fresh_l, gp_l, age_l, mask)
             res_next = (score - mask * score if has_res
                         else jnp.zeros((), jnp.float32))
-            return g_t, age_next, res_next, jax.lax.psum(mask.sum(), axes)
+            n_sel = jax.lax.psum(mask.sum(), axes)
+            if fused:
+                from repro.kernels import ref      # deferred import
+                mh_l, ah_l = ref.strided_hists_ref(
+                    score, age_next, age_l >= 0.0, stride)
+                part = (jax.lax.psum(mask_m.sum(), axes),
+                        jax.lax.psum(mh_l, axes), jax.lax.psum(ah_l, axes))
+            else:
+                part = (jnp.zeros((), jnp.float32),
+                        jnp.zeros((packing.STATS_MAG_BINS,), jnp.float32),
+                        jnp.zeros((packing.STATS_AGE_BINS,), jnp.float32))
+            return g_t, age_next, res_next, n_sel, part
 
         fn = compat.shard_map(
             shard_phase, mesh,
             in_specs=(vec, vec, vec, vec if has_res else P(), P(), P(), P()),
-            out_specs=(vec, vec, vec if has_res else P(), P()))
+            out_specs=(vec, vec, vec if has_res else P(), P(),
+                       (P(), P(), P())))
         if key is None:
             key = jax.random.PRNGKey(0)
         res_in = residual if has_res else jnp.zeros((), jnp.float32)
-        g_t, age_next, res_next, n_sel = fn(g, g_prev, age, res_in,
-                                            theta_m, theta_a, key)
+        g_t, age_next, res_next, n_sel, part = fn(g, g_prev, age, res_in,
+                                                  theta_m, theta_a, key)
+        n_sel_m, mag_hist, age_hist = part
         stats = {"n_selected": n_sel, "k": k}
-        if use_global:
+        if use_global or warm:
             stats |= {"theta_m": theta_m, "theta_a": theta_a}
+        if fused:
+            stats |= {"n_sel_m": n_sel_m, "mag_hist": mag_hist,
+                      "age_hist": age_hist}
+            stats["tstate"] = {
+                "theta_m": theta_m, "theta_a": theta_a, "n_sel_m": n_sel_m,
+                "n_sel": n_sel, "init": jnp.float32(1.0), "streak": streak,
+                "mag_hist": mag_hist, "age_hist": age_hist}
         if has_res:
             stats["residual"] = res_next
         return g_t, age_next, stats

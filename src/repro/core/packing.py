@@ -59,6 +59,16 @@ LANE = 256          # minimum alignment: the fused kernel's 1-D tile quantum
 PACK_CALLS = 0
 UNPACK_CALLS = 0
 
+# trace-time counter: how many full read passes over the packed gradient
+# buffer a program traces.  Incremented by every primitive that streams the
+# whole (or a strided sample of the) gradient buffer from HBM: the fused
+# ``fairk_update`` launches (kernels/ops.py), the sampled-quantile /
+# order-statistic threshold estimators (core/engine.py) and the legacy
+# two-pass count accounting.  The fused-statistics smoke
+# (``packed_bench --smoke``) asserts a steady-state round traces exactly
+# ONE such read (the kernel itself) vs 3 on the pre-fused path.
+G_READS = 0
+
 
 @dataclasses.dataclass(frozen=True)
 class BlockEntry:
@@ -166,35 +176,190 @@ class PackedLayout:
 
 
 # ---------------------------------------------------------------------------
+# in-kernel selection statistics: histogram spec
+# ---------------------------------------------------------------------------
+
+# The fused kernel (kernels/fairk_update.py) emits, besides the selected
+# counts, two small histograms per round — the raw material for
+# re-estimating (θ_M, θ_A) WITHOUT re-reading the gradient buffer:
+#
+#   * magnitude histogram — |score| on quarter-octave log2 bins: bin b
+#     covers log2|x| in [(b + MAG_LO_OCT·MAG_BINS_PER_OCT)/MAG_BINS_PER_OCT
+#     + ...), i.e. 2^-24 .. 2^8 over 128 bins.  Out-of-range magnitudes
+#     clamp to the end bins.
+#   * age histogram — the POST-update AoU on unit integer bins (ages are
+#     integers ≤ AGE_CAP = 120 < 128, so the binning is exact).  The
+#     post-update vector IS the next round's input age distribution, so a
+#     θ_A estimated from it has no staleness lag; within an integer atom
+#     the index jitter is sub-uniform, which is what the fractional
+#     interpolation in ``hist_thresholds`` assumes.
+#
+# Histograms are computed on a deterministic strided sample (every
+# ``hist_stride(d)``-th coordinate — the same discipline the quantile
+# bootstrap uses via ``strided_sample``) with pad coordinates carrying
+# weight zero.  The stride is a power of two ≤ LANE so it divides every
+# lane-aligned kernel block: the per-block partial histograms then sum
+# bit-exactly to the single-pass histogram the ref oracle computes.
+STATS_MAG_BINS = 128
+STATS_AGE_BINS = 128
+MAG_BINS_PER_OCT = 4.0
+MAG_LO_OCT = -24.0           # bin 0 lower edge = 2^MAG_LO_OCT
+STATS_SAMPLE_CAP = 1 << 15   # target histogram sample count
+
+
+def hist_stride(d: int) -> int:
+    """Power-of-two sample stride ≤ LANE for a d-coordinate buffer."""
+    stride = 1
+    while stride < LANE and d // (2 * stride) >= STATS_SAMPLE_CAP:
+        stride *= 2
+    return stride
+
+
+def mag_bin(mag: Array) -> Array:
+    """f32 magnitude -> f32 bin index in [0, STATS_MAG_BINS) (clip before
+    any integer cast: log2(0) = -inf must land in bin 0, not wrap)."""
+    raw = jnp.floor(MAG_BINS_PER_OCT * jnp.log2(mag)
+                    - MAG_BINS_PER_OCT * MAG_LO_OCT)
+    return jnp.clip(raw, 0.0, STATS_MAG_BINS - 1)
+
+
+def age_bin(age: Array) -> Array:
+    """f32 age -> f32 unit bin index (exact for integer ages ≤ AGE_CAP)."""
+    return jnp.clip(jnp.floor(age), 0.0, STATS_AGE_BINS - 1)
+
+
+def _tail_cut(hist: Array, target: Array) -> Tuple[Array, Array]:
+    """Where the top-``target`` mass of ``hist`` ends: (bin index int32,
+    fraction of that bin taken from its top, in [0, 1])."""
+    suffix = jnp.cumsum(hist[::-1])[::-1]                  # S_b = Σ_{b'>=b}
+    suffix_next = jnp.concatenate([suffix[1:],
+                                   jnp.zeros((1,), jnp.float32)])
+    # S is non-increasing: S_b >= target holds exactly for b <= b*
+    bstar = jnp.clip(jnp.sum((suffix >= target).astype(jnp.float32)) - 1.0,
+                     0.0, hist.shape[0] - 1).astype(jnp.int32)
+    need = target - suffix_next[bstar]
+    frac = jnp.clip(need / jnp.maximum(hist[bstar], 1.0), 0.0, 1.0)
+    return bstar, frac
+
+
+def hist_thresholds(mag_hist: Array, age_hist: Array, *, rho: float,
+                    k_m_frac: float) -> Tuple[Array, Array]:
+    """(θ_M, θ_A) from the in-kernel histograms — the re-estimation path
+    that replaces the sampled-quantile bootstrap (zero reads of g).
+
+    Mirrors ``engine.thresholds_from_samples``: θ_M cuts the top
+    ρ·k_m_frac of the magnitude mass (log-linear interpolation inside the
+    cut bin), θ_A the top ρ_A = (ρ − ρ_M)/(1 − ρ_M) of the age mass
+    (linear within the unit atom — the sub-unit index jitter is what the
+    threshold compares against).  An EMPTY histogram (the very first
+    round: nothing has been emitted yet) yields θ = 0 for an active stage
+    — a full-refresh round that transmits everything once, after which the
+    realised histogram takes over.  Degenerate stage budgets give θ = inf
+    exactly like the sampled path."""
+    rho_m = rho * k_m_frac
+    rho_a = (rho - rho_m) / max(1.0 - rho_m, 1e-6)
+    if rho_m > 0.0:
+        total_m = jnp.sum(mag_hist)
+        b, frac = _tail_cut(mag_hist, rho_m * total_m)
+        log2_lo = (b.astype(jnp.float32)
+                   + MAG_LO_OCT * MAG_BINS_PER_OCT) / MAG_BINS_PER_OCT
+        theta_m = jnp.where(total_m > 0.0,
+                            jnp.exp2(log2_lo + (1.0 - frac)
+                                     / MAG_BINS_PER_OCT),
+                            0.0).astype(jnp.float32)
+    else:
+        theta_m = jnp.float32(jnp.inf)
+    if rho_a > 0.0:
+        total_a = jnp.sum(age_hist)
+        b, frac = _tail_cut(age_hist, rho_a * total_a)
+        theta_a = jnp.where(total_a > 0.0,
+                            b.astype(jnp.float32) + 1.0 - frac,
+                            0.0).astype(jnp.float32)
+    else:
+        theta_a = jnp.float32(jnp.inf)
+    return theta_m, theta_a
+
+
+# ---------------------------------------------------------------------------
 # warm-start threshold state
 # ---------------------------------------------------------------------------
 
 # dict-pytree threshold state: carried across rounds by trainers.
 #   theta_m / theta_a : thresholds used last round
 #   n_sel_m / n_sel   : last round's magnitude-stage / total selected counts
-#   init              : 0.0 until the first (bootstrap) round has run
+#                       (emitted by the fused kernel on the fused-stats
+#                       path; a separate masked pass on the legacy path)
+#   init              : 0.0 until the first round has run
 #   streak            : consecutive rounds whose count tracked the budget —
 #                       the engine only trusts warm thresholds after a few
-#                       (cold-start cohorts fail the streak and stay on the
-#                       sampled bootstrap path)
+#                       (cold-start cohorts fail the streak and fall back
+#                       to re-estimation: sampled quantiles on the legacy
+#                       path, the carried histograms on the fused path)
+#   mag_hist/age_hist : last round's in-kernel histograms (zeros until a
+#                       fused-stats round has emitted them)
 def init_threshold_state() -> Dict[str, Array]:
     z = jnp.float32(0.0)
     return {"theta_m": z, "theta_a": z, "n_sel_m": z, "n_sel": z,
-            "init": z, "streak": z}
+            "init": z, "streak": z,
+            "mag_hist": jnp.zeros((STATS_MAG_BINS,), jnp.float32),
+            "age_hist": jnp.zeros((STATS_AGE_BINS,), jnp.float32)}
 
 
 THRESHOLD_STATE_FIELDS = ("theta_m", "theta_a", "n_sel_m", "n_sel",
                           "init", "streak")
+THRESHOLD_STATE_SIZE = (len(THRESHOLD_STATE_FIELDS)
+                        + STATS_MAG_BINS + STATS_AGE_BINS)
 
 
 def threshold_state_to_vec(ts: Dict[str, Array]) -> Array:
-    """(6,) f32 encoding, for server-state dicts that want one array."""
-    return jnp.stack([ts[f] for f in THRESHOLD_STATE_FIELDS]
-                     ).astype(jnp.float32)
+    """(THRESHOLD_STATE_SIZE,) f32 encoding — the six scalars followed by
+    the two histograms — for server-state dicts that want one array."""
+    scalars = jnp.stack([ts[f] for f in THRESHOLD_STATE_FIELDS])
+    return jnp.concatenate([
+        scalars, ts["mag_hist"], ts["age_hist"]]).astype(jnp.float32)
 
 
 def threshold_state_from_vec(vec: Array) -> Dict[str, Array]:
-    return {f: vec[i] for i, f in enumerate(THRESHOLD_STATE_FIELDS)}
+    ns = len(THRESHOLD_STATE_FIELDS)
+    ts = {f: vec[i] for i, f in enumerate(THRESHOLD_STATE_FIELDS)}
+    if vec.shape[0] >= THRESHOLD_STATE_SIZE:       # scalar-only legacy vecs
+        ts["mag_hist"] = vec[ns:ns + STATS_MAG_BINS]
+        ts["age_hist"] = vec[ns + STATS_MAG_BINS:THRESHOLD_STATE_SIZE]
+    else:
+        ts["mag_hist"] = jnp.zeros((STATS_MAG_BINS,), jnp.float32)
+        ts["age_hist"] = jnp.zeros((STATS_AGE_BINS,), jnp.float32)
+    return ts
+
+
+# ---------------------------------------------------------------------------
+# layout (de)serialisation — checkpointing the packed server buffers
+# ---------------------------------------------------------------------------
+
+def layout_to_meta(layout: "PackedLayout") -> Dict[str, Any]:
+    """JSON-serialisable description of the block table (no treedef — the
+    restoring process rebuilds the layout from its own param tree and
+    verifies compatibility with ``layout_matches``)."""
+    return {
+        "lane": layout.lane,
+        "d_packed": layout.d_packed,
+        "d_valid": layout.d_valid,
+        "entries": [[e.offset, e.size, e.pad, list(e.shape),
+                     str(np.dtype(e.dtype))] for e in layout.table],
+    }
+
+
+def layout_matches(layout: "PackedLayout", meta: Dict[str, Any]) -> bool:
+    """True when ``layout`` describes the same buffer geometry as a saved
+    ``layout_to_meta`` dict (offsets, sizes, pads, shapes and dtypes)."""
+    if (layout.lane != meta["lane"] or layout.d_packed != meta["d_packed"]
+            or layout.d_valid != meta["d_valid"]
+            or len(layout.table) != len(meta["entries"])):
+        return False
+    for e, m in zip(layout.table, meta["entries"]):
+        if [e.offset, e.size, e.pad, list(e.shape),
+                str(np.dtype(e.dtype))] != m:
+            return False
+    return True
 
 
 def warm_corrected_thresholds(ts: Dict[str, Array], *, k: int, k_m: int,

@@ -47,9 +47,12 @@ class FLConfig:
                                     # runs the sampled-quantile fused-kernel
                                     # server phase (d >> 1e7 route);
                                     # "packed" adds warm-start thresholds on
-                                    # top (quantile pass skipped on
-                                    # steady-state rounds).  one_bit and
-                                    # error_feedback run on ALL of them.
+                                    # top, re-estimated from the kernel's
+                                    # fused statistics — the fused pass is
+                                    # the round's ONLY read of the buffer
+                                    # (round 0 transmits everything once).
+                                    # one_bit and error_feedback run on ALL
+                                    # of them.
     compression_ratio: float = 0.1  # rho = k / d
     k_m_frac: float = 0.75          # k_M / k (paper Sec. V-A)
     r_frac: float = 1.5             # AgeTop-k candidate ratio r / k
@@ -133,6 +136,11 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                                 if fl.backend != "exact" and not fl.one_bit
                                 else 0.0),
                      n_clients=fl.n_clients,
+                     # kernel-emitted counts/histograms on the kernel
+                     # routes; on packed this also moves the warm-start
+                     # re-estimation onto the carried histograms, making
+                     # the fused pass the round's only read of the buffer
+                     fused_stats=(fl.backend != "exact"),
                      warm_start=(fl.backend == "packed")), d,
         layout=layout)
 
@@ -157,8 +165,11 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                 noise = (fl.channel.noise_std
                          * jax.random.normal(key_ch, (d,), jnp.float32)
                          if fl.channel.noise_std > 0.0 else None)
-                energy = votes.sum(axis=0) + (noise if noise is not None
-                                              else 0.0)
+                # ONE reduction over the (N, d) vote matrix: sign_mv
+                # emits the majority signs AND the superposed energy it
+                # detected them from (the old route re-reduced the votes
+                # a second time just to score the energy)
+                fresh_sign, energy = ops.sign_mv(votes, noise=noise)
                 # noiseless energies are heavily TIED (even integers in
                 # [-N, N]): a quantile threshold inside a tie level would
                 # select the whole level and blow the k budget, so break
@@ -166,7 +177,6 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                 # 2 apart — ordering across levels is preserved; same
                 # Knuth hash the kernels use)
                 score = jnp.abs(energy) + index_jitter(d)
-                fresh_sign = ops.sign_mv(votes, noise=noise)
                 g_t, age_next, stats = engine.select_and_merge(
                     score, g_prev, age, fresh=fresh_sign, tstate=ts)
                 sel_mask = (age_next == 0.0).astype(jnp.float32)

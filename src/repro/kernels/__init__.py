@@ -4,9 +4,13 @@
   scalable FAIR-k selection over ~1e8-coordinate gradients).
 * ``aou_merge``   — fused Eq. (8) gradient merge + Eq. (10) AoU update
   (single HBM pass over the server's d-length state).
-* ``sign_mv``     — FSK majority-vote aggregation (one-bit prototype path).
+* ``sign_mv``     — FSK majority-vote aggregation (one-bit prototype path);
+  returns ``(signs, energy)`` from ONE reduction over the vote matrix.
 * ``fairk_update`` — fused threshold-FAIR-k server phase (mask + Eq. 8 merge
   + Eq. 10 age update in one HBM pass; the sharded trainer's hot loop).
+  ``fairk_stats_update`` additionally emits the selection statistics
+  (counts + magnitude/age histograms) from the same pass — the server
+  round's ONLY read of the gradient buffer (DESIGN.md §11).
 
 Each kernel has a pure-jnp oracle in ``ref.py`` and a dispatching wrapper in
 ``ops.py`` (pallas on TPU / interpret in kernel tests / XLA ref elsewhere).
@@ -14,9 +18,9 @@ Each kernel has a pure-jnp oracle in ``ref.py`` and a dispatching wrapper in
 
 from repro.kernels import ops, ref
 from repro.kernels.ops import (aou_merge, block_topk, fairk_ef_update,
-                               fairk_update, sign_mv, two_stage_topk,
-                               global_topk_from_candidates)
+                               fairk_stats_update, fairk_update, sign_mv,
+                               two_stage_topk, global_topk_from_candidates)
 
 __all__ = ["ops", "ref", "aou_merge", "block_topk", "fairk_ef_update",
-           "fairk_update", "sign_mv", "two_stage_topk",
-           "global_topk_from_candidates"]
+           "fairk_stats_update", "fairk_update", "sign_mv",
+           "two_stage_topk", "global_topk_from_candidates"]

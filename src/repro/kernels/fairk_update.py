@@ -29,6 +29,17 @@ fused pass with two optional streams while staying ONE HBM round trip:
 * ``fresh`` — decoupled transmitted values for the one-bit FSK-MV route
   (kernels.sign_mv): selection scores ``g`` (+ residual) but the merged
   fresh value is ``fresh`` (the majority-vote signs).
+
+Fused selection statistics.  ``fairk_stats_update_pallas`` additionally
+emits one small per-block accumulator row — pad-aware partial counts of
+the selected (``n_sel``) and magnitude-stage (``n_sel_m``) coordinates
+plus strided-sample log-magnitude / age histograms (bin spec:
+``core.packing``) — reduced once over the grid after the launch.  This
+makes the fused kernel the ONLY read of the gradient buffer per
+steady-state server round: the counts that the warm-start controller
+consumes used to be a separate masked pass over ``(g, residual)``, and
+the histograms let thresholds be re-estimated without the
+sampled-quantile bootstrap pass whenever the trust region trips.
 """
 
 from __future__ import annotations
@@ -40,12 +51,48 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.packing import (STATS_AGE_BINS, STATS_MAG_BINS, age_bin,
+                                mag_bin)
+
 Array = jax.Array
 
+# layout of the per-block stats row (f32): [n_sel, n_sel_m,
+# mag_hist(STATS_MAG_BINS), age_hist(STATS_AGE_BINS), zero pad].  The row
+# is padded to a lane multiple so the (nb, STATS_WIDTH) output tiles
+# cleanly on TPU.
+STATS_N_SEL = 0
+STATS_N_SEL_M = 1
+STATS_MAG_OFF = 2
+STATS_AGE_OFF = STATS_MAG_OFF + STATS_MAG_BINS
+_STATS_USED = STATS_AGE_OFF + STATS_AGE_BINS
+STATS_WIDTH = -(-_STATS_USED // 128) * 128
 
-def _fairk_kernel(*refs, block_size: int, has_res: bool, has_fresh: bool):
+# per-chunk one-hot width bound for the in-kernel histogram accumulation:
+# bounds the (chunk, bins) intermediate to ~1 MB of VMEM
+_HIST_CHUNK = 2048
+
+
+def _hist_accumulate(bins: Array, weights: Array, n_bins: int) -> Array:
+    """Exact integer-count histogram of ``bins`` (f32 indices) with 0/1
+    ``weights`` via chunked one-hot reduction — scatter-free, so it lowers
+    on the TPU VPU and in interpret mode alike.  Counts are integers well
+    below 2^24, so f32 accumulation is exact regardless of order."""
+    n = bins.shape[0]
+    ids = jax.lax.iota(jnp.float32, n_bins)
+    acc = jnp.zeros((n_bins,), jnp.float32)
+    for s in range(0, n, _HIST_CHUNK):
+        b = bins[s:s + _HIST_CHUNK]
+        w = weights[s:s + _HIST_CHUNK]
+        acc = acc + jnp.sum(
+            jnp.where(b[:, None] == ids[None, :], w[:, None], 0.0), axis=0)
+    return acc
+
+
+def _fairk_kernel(*refs, block_size: int, has_res: bool, has_fresh: bool,
+                  stats_stride: int = 0):
     """Shared fused body.  Ref order: g, [fresh], g_prev, age, [res],
-    thetas -> g_t, age', [res']."""
+    thetas -> g_t, age', [res'], [stats row]."""
+    emit_stats = stats_stride > 0
     it = iter(refs)
     g_ref = next(it)
     fresh_ref = next(it) if has_fresh else None
@@ -56,6 +103,7 @@ def _fairk_kernel(*refs, block_size: int, has_res: bool, has_fresh: bool):
     gt_ref = next(it)
     age_out_ref = next(it)
     res_out_ref = next(it) if has_res else None
+    stats_ref = next(it) if emit_stats else None
 
     bid = pl.program_id(0)
     theta_m = thetas_ref[0]
@@ -75,10 +123,25 @@ def _fairk_kernel(*refs, block_size: int, has_res: bool, has_fresh: bool):
     keep = 1.0 - maskf
     sent = fresh_ref[...].astype(jnp.float32) if has_fresh else score
     gt_ref[...] = maskf * sent + keep * gp_ref[...].astype(jnp.float32)
-    age_out_ref[...] = jnp.where(valid,
-                                 jnp.minimum((age + 1.0) * keep, 120.0), age)
+    age_next = jnp.where(valid, jnp.minimum((age + 1.0) * keep, 120.0), age)
+    age_out_ref[...] = age_next
     if has_res:
         res_out_ref[...] = jnp.where(valid, score - maskf * sent, res)
+    if emit_stats:
+        # strided histogram sample: block_size is a multiple of the
+        # (power-of-two) stride, so per-block positions == the global
+        # [::stride] sample and the partial rows sum bit-exactly to the
+        # ref oracle's single-pass histograms.  Pads weigh zero.
+        w = valid[::stats_stride].astype(jnp.float32)
+        m_bins = mag_bin(jnp.abs(score[::stats_stride]))
+        a_bins = age_bin(age_next[::stats_stride])
+        row = jnp.concatenate([
+            jnp.stack([jnp.sum(maskf), jnp.sum(mask_m.astype(jnp.float32))]),
+            _hist_accumulate(m_bins, w, STATS_MAG_BINS),
+            _hist_accumulate(a_bins, w, STATS_AGE_BINS),
+            jnp.zeros((STATS_WIDTH - _STATS_USED,), jnp.float32),
+        ])
+        stats_ref[...] = row.reshape(1, STATS_WIDTH)
 
 
 _fairk_update_kernel = functools.partial(_fairk_kernel, has_res=False,
@@ -90,9 +153,10 @@ def fairk_update_pallas(g: Array, g_prev: Array, age: Array, theta_m: Array,
                         theta_a: Array, block_size: int = 65536,
                         interpret: bool = False) -> Tuple[Array, Array]:
     """g/g_prev/age: (d,) -> (g_t (d,), age' (d,)), single fused pass."""
-    g_t, age_out, _ = _fairk_call(g, g_prev, age, theta_m, theta_a,
-                                  residual=None, fresh=None,
-                                  block_size=block_size, interpret=interpret)
+    g_t, age_out, _, _ = _fairk_call(g, g_prev, age, theta_m, theta_a,
+                                     residual=None, fresh=None,
+                                     block_size=block_size,
+                                     interpret=interpret, stats_stride=0)
     return g_t, age_out
 
 
@@ -106,17 +170,42 @@ def fairk_ef_update_pallas(g: Array, g_prev: Array, age: Array,
                            ) -> Tuple[Array, Array, Optional[Array]]:
     """Fused pass with the residual (error-feedback) stage and/or decoupled
     ``fresh`` values: (g_t, age', residual' | None) — see module docstring."""
+    g_t, age_out, res_out, _ = _fairk_call(
+        g, g_prev, age, theta_m, theta_a, residual=residual, fresh=fresh,
+        block_size=block_size, interpret=interpret, stats_stride=0)
+    return g_t, age_out, res_out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "interpret",
+                                    "stats_stride"))
+def fairk_stats_update_pallas(g: Array, g_prev: Array, age: Array,
+                              theta_m: Array, theta_a: Array,
+                              residual: Optional[Array] = None,
+                              fresh: Optional[Array] = None,
+                              block_size: int = 65536,
+                              interpret: bool = False,
+                              stats_stride: int = 1
+                              ) -> Tuple[Array, Array, Optional[Array],
+                                         Array]:
+    """Fused pass that also emits the per-block selection-statistics rows:
+    (g_t, age', residual' | None, stats (nb, STATS_WIDTH)).  Reduce the
+    rows with ``stats.sum(0)`` — one tiny (nb, 384) reduction replaces the
+    full extra read passes of the two-pass accounting."""
     return _fairk_call(g, g_prev, age, theta_m, theta_a, residual=residual,
                        fresh=fresh, block_size=block_size,
-                       interpret=interpret)
+                       interpret=interpret, stats_stride=stats_stride)
 
 
 def _fairk_call(g, g_prev, age, theta_m, theta_a, *, residual, fresh,
-                block_size, interpret):
+                block_size, interpret, stats_stride=0):
     d = g.shape[0]
     block_size = min(block_size, d)
     if d % block_size:
         raise ValueError(f"d={d} not divisible by block_size={block_size}")
+    if stats_stride and block_size % stats_stride:
+        raise ValueError(f"block_size={block_size} not divisible by "
+                         f"stats_stride={stats_stride}")
     nb = d // block_size
     has_res = residual is not None
     has_fresh = fresh is not None
@@ -124,7 +213,8 @@ def _fairk_call(g, g_prev, age, theta_m, theta_a, *, residual, fresh,
                         theta_a.astype(jnp.float32)])
     spec = pl.BlockSpec((block_size,), lambda i: (i,))
     kernel = functools.partial(_fairk_kernel, block_size=block_size,
-                               has_res=has_res, has_fresh=has_fresh)
+                               has_res=has_res, has_fresh=has_fresh,
+                               stats_stride=stats_stride)
     f32 = lambda x: x.astype(jnp.float32)
     inputs = [f32(g)]
     in_specs = [spec]
@@ -138,13 +228,20 @@ def _fairk_call(g, g_prev, age, theta_m, theta_a, *, residual, fresh,
         in_specs.append(spec)
     inputs.append(thetas)
     in_specs.append(pl.BlockSpec((2,), lambda i: (0,)))
-    n_out = 3 if has_res else 2
+    out_specs = [spec] * (3 if has_res else 2)
+    out_shape = [jax.ShapeDtypeStruct((d,), jnp.float32)] * len(out_specs)
+    if stats_stride:
+        out_specs.append(pl.BlockSpec((1, STATS_WIDTH), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((nb, STATS_WIDTH),
+                                              jnp.float32))
     out = pl.pallas_call(
         kernel,
         grid=(nb,),
         in_specs=in_specs,
-        out_specs=[spec] * n_out,
-        out_shape=[jax.ShapeDtypeStruct((d,), jnp.float32)] * n_out,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(*inputs)
-    return (out[0], out[1], out[2] if has_res else None)
+    res_out = out[2] if has_res else None
+    stats = out[-1] if stats_stride else None
+    return out[0], out[1], res_out, stats

@@ -13,11 +13,15 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.core.packing import PAD_AGE
 from repro.kernels import ref
 from repro.kernels.aou_merge import aou_merge_pallas
 from repro.kernels.block_topk import block_topk_pallas
-from repro.kernels.fairk_update import fairk_ef_update_pallas
+from repro.kernels.fairk_update import (STATS_AGE_OFF, STATS_MAG_OFF,
+                                        STATS_N_SEL, STATS_N_SEL_M,
+                                        fairk_ef_update_pallas,
+                                        fairk_stats_update_pallas)
 from repro.kernels.sign_mv import sign_mv_pallas
 
 Array = jax.Array
@@ -46,17 +50,28 @@ def aou_merge(g_new: Array, g_old: Array, age: Array, mask: Array,
 
 
 def sign_mv(votes: Array, noise: Optional[Array] = None,
-            mode: Optional[str] = None) -> Array:
-    """FSK majority vote over (N, k) one-bit client values -> (k,) signs.
+            mode: Optional[str] = None) -> Tuple[Array, Array]:
+    """FSK majority vote over (N, k) one-bit client values ->
+    ``(signs, energy)``, both (k,).
 
     ``noise`` (optional, (k,)) perturbs the superposed vote energy before
-    the sign — the Sec. V-B channel on the one-bit uplink."""
+    the sign — the Sec. V-B channel on the one-bit uplink.  ``energy`` is
+    that (noisy) superposition itself: the one-bit routes score selection
+    on |energy| (consensus strength), and emitting it from the same
+    reduction removes the second full pass over the (N, k) vote matrix
+    callers used to pay."""
     mode = mode or ("pallas" if _on_tpu() else "ref")
     if mode == "ref":
         return ref.sign_mv_ref(votes, noise)
-    # pad k to a lane-aligned block if needed
+    # largest lane-multiple block <= 2048 that tiles k exactly — a huge
+    # non-2048-aligned k (e.g. a whole packed buffer from the one-bit
+    # update_phase) must NOT degenerate to a single (n, k) VMEM tile
     n, k = votes.shape
-    block = 2048 if k % 2048 == 0 else k
+    for block in (2048, 1024, 512, 256, 128):
+        if k % block == 0:
+            break
+    else:
+        block = k
     return sign_mv_pallas(votes, noise, block_k=block,
                           interpret=(mode == "interpret"))
 
@@ -126,17 +141,31 @@ def fairk_ef_update(g: Array, g_prev: Array, age: Array, theta_m, theta_a,
     sentinel and pass through untouched (incl. their residual)."""
     global FAIRK_UPDATE_CALLS
     FAIRK_UPDATE_CALLS += 1
+    packing.G_READS += 1
     mode = mode or ("pallas" if _on_tpu() else "ref")
     tm = jnp.asarray(theta_m, jnp.float32)
     ta = jnp.asarray(theta_a, jnp.float32)
     if mode == "ref":
         return ref.fairk_ef_update_ref(g, g_prev, age, tm, ta,
                                        residual=residual, fresh=fresh)
+    g, g_prev, age, residual, fresh, block, d = _block_pad(
+        g, g_prev, age, residual, fresh, block_size)
+    g_t, age_out, res_out = fairk_ef_update_pallas(
+        g, g_prev, age, tm, ta, residual=residual, fresh=fresh,
+        block_size=block, interpret=(mode == "interpret"))
+    if g.shape[0] != d:
+        return (g_t[:d], age_out[:d],
+                res_out[:d] if res_out is not None else None)
+    return g_t, age_out, res_out
+
+
+def _block_pad(g, g_prev, age, residual, fresh, block_size):
+    """Lane-align the block (multiple of 256) so small/odd leaves don't
+    hand Mosaic an unaligned 1-D tile; size it from the trip count so
+    padding stays < 256 * nb instead of block-1 (d = block_size + 1 must
+    not double the HBM traffic of this bandwidth-bound pass).  Pads carry
+    the PAD_AGE sentinel, so they can neither select nor count."""
     d = g.shape[0]
-    # lane-align the block (multiple of 256) so small/odd leaves don't hand
-    # Mosaic an unaligned 1-D tile; size it from the trip count so padding
-    # stays < 256 * nb instead of block-1 (d = block_size + 1 must not
-    # double the HBM traffic of this bandwidth-bound pass)
     nb = -(-d // block_size)              # trip count at the requested block
     per_block = -(-d // nb)
     block = -(-per_block // 256) * 256    # lane-aligned actual block
@@ -148,10 +177,51 @@ def fairk_ef_update(g: Array, g_prev: Array, age: Array, theta_m, theta_a,
             residual = jnp.pad(residual, (0, pad))
         if fresh is not None:
             fresh = jnp.pad(fresh, (0, pad))
-    g_t, age_out, res_out = fairk_ef_update_pallas(
+    return g, g_prev, age, residual, fresh, block, d
+
+
+def fairk_stats_update(g: Array, g_prev: Array, age: Array, theta_m,
+                       theta_a, residual: Optional[Array] = None,
+                       fresh: Optional[Array] = None,
+                       mode: Optional[str] = None,
+                       block_size: int = 65536
+                       ) -> Tuple[Array, Array, Optional[Array], dict]:
+    """``fairk_ef_update`` that ALSO emits the selection statistics from
+    the same pass: (g_t, age', residual' | None, stats) where stats holds
+    the pad-aware exact counts ``n_sel`` / ``n_sel_m`` and the strided
+    ``mag_hist`` / ``age_hist`` (bin spec: ``core.packing``) — everything
+    the warm-start threshold controller consumes, with NO additional read
+    of the gradient buffer (the legacy accounting paid a masked count
+    pass over ``(g, residual)`` plus, on re-estimation rounds, the
+    sampled-quantile bootstrap pass).
+
+    The histogram sample stride derives from the ORIGINAL d (pre
+    block-alignment padding) so kernel and ref modes sample identical
+    positions; the counts are full (not sampled)."""
+    global FAIRK_UPDATE_CALLS
+    FAIRK_UPDATE_CALLS += 1
+    packing.G_READS += 1
+    mode = mode or ("pallas" if _on_tpu() else "ref")
+    tm = jnp.asarray(theta_m, jnp.float32)
+    ta = jnp.asarray(theta_a, jnp.float32)
+    stride = packing.hist_stride(g.shape[0])
+    if mode == "ref":
+        return ref.fairk_stats_update_ref(g, g_prev, age, tm, ta,
+                                          residual=residual, fresh=fresh,
+                                          stats_stride=stride)
+    g, g_prev, age, residual, fresh, block, d = _block_pad(
+        g, g_prev, age, residual, fresh, block_size)
+    g_t, age_out, res_out, rows = fairk_stats_update_pallas(
         g, g_prev, age, tm, ta, residual=residual, fresh=fresh,
-        block_size=block, interpret=(mode == "interpret"))
-    if pad:
+        block_size=block, interpret=(mode == "interpret"),
+        stats_stride=stride)
+    vec = rows.sum(axis=0)                 # one tiny (nb, 384) reduction
+    stats = {"n_sel": vec[STATS_N_SEL], "n_sel_m": vec[STATS_N_SEL_M],
+             "mag_hist": vec[STATS_MAG_OFF:STATS_MAG_OFF
+                             + packing.STATS_MAG_BINS],
+             "age_hist": vec[STATS_AGE_OFF:STATS_AGE_OFF
+                             + packing.STATS_AGE_BINS]}
+    if g.shape[0] != d:
         return (g_t[:d], age_out[:d],
-                res_out[:d] if res_out is not None else None)
-    return g_t, age_out, res_out
+                res_out[:d] if res_out is not None else None, stats)
+    return g_t, age_out, res_out, stats

@@ -8,7 +8,36 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
+
 Array = jax.Array
+
+
+def strided_hists_ref(score: Array, age_next: Array, valid: Array,
+                      stride: int) -> Tuple[Array, Array]:
+    """(mag_hist, age_hist) over the deterministic ``[::stride]`` sample —
+    the single-pass mirror of the kernel's per-block partial histograms
+    (identical sample positions because the kernel block size is a
+    multiple of the stride; identical integer counts because f32 sums of
+    small integers are exact in any order).
+
+    ``age_next`` is the POST-update AoU (the next round's input age
+    distribution — no staleness lag for θ_A re-estimation); pads weigh
+    zero via ``valid``.  Implemented scatter-free: the sampled bin
+    indices are sorted once and the counts read off with ``searchsorted``
+    (XLA CPU scatter is ~70x slower at bench sizes)."""
+    w = valid[::stride]
+    m_bins = jnp.where(w, packing.mag_bin(jnp.abs(score[::stride])), -1.0)
+    a_bins = jnp.where(w, packing.age_bin(age_next[::stride]), -1.0)
+    return (_searchsorted_hist(m_bins, packing.STATS_MAG_BINS),
+            _searchsorted_hist(a_bins, packing.STATS_AGE_BINS))
+
+
+def _searchsorted_hist(bins: Array, n_bins: int) -> Array:
+    """Exact integer counts of f32 integer bin indices (−1 = excluded)."""
+    edges = jnp.arange(n_bins + 1, dtype=jnp.float32) - 0.5
+    cuts = jnp.searchsorted(jnp.sort(bins), edges)
+    return jnp.diff(cuts).astype(jnp.float32)
 
 
 def block_topk_ref(x: Array, block_size: int, m: int) -> Tuple[Array, Array]:
@@ -35,15 +64,20 @@ def aou_merge_ref(g_new: Array, g_old: Array, age: Array, mask: Array
     return g, age_next
 
 
-def sign_mv_ref(votes: Array, noise: Optional[Array] = None) -> Array:
-    """FSK majority vote: votes (N, k) one-bit values -> (k,) signs.
+def sign_mv_ref(votes: Array, noise: Optional[Array] = None
+                ) -> Tuple[Array, Array]:
+    """FSK majority vote: votes (N, k) one-bit values -> (signs, energy),
+    both (k,).
 
-    ``noise`` (optional, (k,)) is channel noise on the superposed FSK
-    energies: the vote sum is perturbed *before* the sign (Sec. V-B)."""
+    ``energy`` is the superposed vote sum (plus ``noise``, when given —
+    channel noise perturbs the FSK energies *before* the sign, Sec. V-B)
+    and ``signs`` its sign.  Returning the energy lets the one-bit route
+    score selection on vote consensus strength without reducing the
+    (N, k) vote matrix a second time."""
     s = jnp.where(votes >= 0, 1.0, -1.0).sum(axis=0)
     if noise is not None:
         s = s + noise.astype(s.dtype)
-    return jnp.where(s >= 0, 1.0, -1.0).astype(votes.dtype)
+    return jnp.where(s >= 0, 1.0, -1.0).astype(votes.dtype), s
 
 
 def fairk_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
@@ -101,3 +135,58 @@ def fairk_ef_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
     res_next = (jnp.where(valid, score - mask * sent, res32)
                 if residual is not None else None)
     return g_t, age_next, res_next
+
+
+def fairk_stats_update_ref(g: Array, g_prev: Array, age: Array,
+                           theta_m: Array, theta_a: Array,
+                           residual: Optional[Array] = None,
+                           fresh: Optional[Array] = None,
+                           stats_stride: int = 1
+                           ) -> Tuple[Array, Array, Optional[Array],
+                                      "dict"]:
+    """Oracle for the fused pass WITH the selection-statistics outputs:
+    (g_t, age', residual' | None, stats dict).
+
+    ``stats`` carries pad-aware exact counts ``n_sel`` (all selected) /
+    ``n_sel_m`` (magnitude stage — identical to the legacy two-pass
+    ``(age'==0) & (|score| >= θ_M)`` accounting because the age stage
+    only admits coordinates with ``|score| < θ_M``) and the strided
+    ``mag_hist`` / ``age_hist`` (see ``strided_hists_ref``)."""
+    g_t, age_next, res_next = fairk_ef_update_ref(
+        g, g_prev, age, theta_m, theta_a, residual=residual, fresh=fresh)
+    d = g.shape[0]
+    g32 = g.astype(jnp.float32)
+    res32 = residual.astype(jnp.float32) if residual is not None else None
+    score = g32 + res32 if residual is not None else g32
+    # histogram pipeline recomputed on the strided INPUT samples: every op
+    # is elementwise, so the sampled values are bit-identical to slicing
+    # the full intermediates, while XLA only streams d/stride elements
+    # (slicing the full `score`/`age_next` would anchor d-length temps)
+    s = stats_stride
+    score_s = score[::s]
+    age_s = age.astype(jnp.float32)[::s]
+    valid_s = age_s >= 0.0
+    idx_s = jnp.arange(0, d, s, dtype=jnp.uint32)
+    jitter_s = (idx_s * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
+                ).astype(jnp.float32) / float(1 << 24)
+    mask_m_s = valid_s & (jnp.abs(score_s) >= theta_m)
+    mask_s = (mask_m_s | (valid_s & (age_s + jitter_s >= theta_a)
+                          & (~mask_m_s))).astype(jnp.float32)
+    age_next_s = jnp.where(
+        valid_s, jnp.minimum((age_s + 1.0) * (1.0 - mask_s), 120.0), age_s)
+    m_bins = jnp.where(valid_s, packing.mag_bin(jnp.abs(score_s)), -1.0)
+    a_bins = jnp.where(valid_s, packing.age_bin(age_next_s), -1.0)
+    # counts derive from the materialized age output + one re-read of the
+    # score inputs — identical integers to reducing the masks directly,
+    # but XLA CPU then reuses the output buffer instead of materializing
+    # two d-length bool temps (the pallas kernel reduces in-register and
+    # has neither cost)
+    sel_b = age_next == 0.0
+    stats = {"n_sel": jnp.count_nonzero(sel_b).astype(jnp.float32),
+             "n_sel_m": jnp.count_nonzero(
+                 sel_b & (jnp.abs(score) >= theta_m)).astype(jnp.float32),
+             "mag_hist": _searchsorted_hist(m_bins,
+                                            packing.STATS_MAG_BINS),
+             "age_hist": _searchsorted_hist(a_bins,
+                                            packing.STATS_AGE_BINS)}
+    return g_t, age_next, res_next, stats

@@ -1,14 +1,19 @@
 """Pallas kernel: FSK majority-vote aggregation (prototype path, Sec. V-B).
 
-votes (N, k) one-bit client values -> (k,) majority signs.  Each grid step
-loads a (N, block_k) tile into VMEM, reduces over the client axis on the
-VPU and writes the sign.  N is small (clients), so the tile is tall-thin;
+votes (N, k) one-bit client values -> (k,) majority signs PLUS the (k,)
+superposed vote energy they were detected from.  Each grid step loads a
+(N, block_k) tile into VMEM, reduces over the client axis on the VPU once
+and writes both outputs — the energy used to be recomputed by callers as
+a second full reduction over the vote matrix (the selection score of the
+one-bit route is the consensus strength |energy|), which doubled the HBM
+traffic of the uplink.  N is small (clients), so the tile is tall-thin;
 block_k a multiple of 128 keeps lanes full.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,23 +22,26 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 
-def _sign_mv_kernel(votes_ref, out_ref):
+def _sign_mv_kernel(votes_ref, out_ref, energy_ref):
     v = votes_ref[...]                            # (N, block_k)
     s = jnp.where(v >= 0, 1.0, -1.0).sum(axis=0)
+    energy_ref[...] = s
     out_ref[...] = jnp.where(s >= 0, 1.0, -1.0)
 
 
-def _sign_mv_noise_kernel(votes_ref, noise_ref, out_ref):
+def _sign_mv_noise_kernel(votes_ref, noise_ref, out_ref, energy_ref):
     """Noisy variant: channel noise perturbs the superposed FSK energy
     (the vote sum) before the sign — Sec. V-B's non-coherent detection."""
     v = votes_ref[...]                            # (N, block_k)
     s = jnp.where(v >= 0, 1.0, -1.0).sum(axis=0) + noise_ref[...]
+    energy_ref[...] = s
     out_ref[...] = jnp.where(s >= 0, 1.0, -1.0)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
-def sign_mv_pallas(votes: Array, noise=None, block_k: int = 2048,
-                   interpret: bool = False) -> Array:
+def sign_mv_pallas(votes: Array, noise: Optional[Array] = None,
+                   block_k: int = 2048,
+                   interpret: bool = False) -> Tuple[Array, Array]:
     n, k = votes.shape
     block_k = min(block_k, k)
     if k % block_k:
@@ -45,12 +53,12 @@ def sign_mv_pallas(votes: Array, noise=None, block_k: int = 2048,
     in_specs = [vote_spec] if noise is None else [vote_spec, vec_spec]
     args = ((votes.astype(jnp.float32),) if noise is None
             else (votes.astype(jnp.float32), noise.astype(jnp.float32)))
-    out = pl.pallas_call(
+    signs, energy = pl.pallas_call(
         kernel,
         grid=(nb,),
         in_specs=in_specs,
-        out_specs=vec_spec,
-        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        out_specs=[vec_spec, vec_spec],
+        out_shape=[jax.ShapeDtypeStruct((k,), jnp.float32)] * 2,
         interpret=interpret,
     )(*args)
-    return out
+    return signs, energy

@@ -137,7 +137,7 @@ def main():
                          "(exact / threshold / packed)")
     ap.add_argument("--per-leaf-server", action="store_true",
                     help="historical per-leaf OAC server phase (default: "
-                         "persisted packed fused pass, DESIGN.md §9-§10)")
+                         "persisted packed fused pass with in-kernel selection statistics, DESIGN.md §9-§11)")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--out", default=os.path.abspath(ART_DIR))
     args = ap.parse_args()

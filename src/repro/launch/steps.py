@@ -70,10 +70,32 @@ class OacServerConfig:
     warm_start: bool = True        # carry (θ_M, θ_A) across rounds; skip
                                    # the quantile pass on steady-state
                                    # rounds (packed path only)
+    fused_stats: bool = True       # emit the warm-start counts and the
+                                   # threshold-re-estimation histograms
+                                   # from INSIDE the fused kernel
+                                   # (DESIGN.md §11): the kernel becomes
+                                   # the round's only read of the packed
+                                   # gradient buffer.  Step 0 transmits
+                                   # everything once (no histogram yet).
+                                   # False restores the legacy two-pass
+                                   # accounting + quantile bootstrap.
     error_feedback: bool = False   # fold the unselected gradient mass back
                                    # next step (EF-SGD): a persisted flat
                                    # f32 residual buffer rides the fused
                                    # kernel's residual stage (packed only)
+    one_bit: bool = False          # one-bit uplink for the server phase:
+                                   # the merged fresh values are the SIGNS
+                                   # of the effective gradient, detected by
+                                   # the sign_mv kernel from the (noisy)
+                                   # energy (Sec. V-B).  Unlike the FL sim
+                                   # (per-client votes) the trainer's
+                                   # backward has already superposed the
+                                   # data shards, so the vote matrix is the
+                                   # single aggregate row; selection still
+                                   # scores |g + residual| (the server has
+                                   # the magnitudes).  Combine with
+                                   # error_feedback so the quantization
+                                   # error is re-injected (packed only).
 
 
 @dataclasses.dataclass
@@ -242,7 +264,7 @@ def init_server_state(params: Any, mesh=None, cfg: ModelConfig = None,
         state = {
             "g": jnp.zeros((n * lay.d_packed,), jnp.bfloat16),
             "age": jnp.asarray(np.tile(age_local, n)),
-            "theta": jnp.zeros((len(packing.THRESHOLD_STATE_FIELDS),),
+            "theta": jnp.zeros((packing.THRESHOLD_STATE_SIZE,),
                                jnp.float32),
         }
         if oac.error_feedback:
@@ -251,8 +273,7 @@ def init_server_state(params: Any, mesh=None, cfg: ModelConfig = None,
     return {
         "g": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
         "age": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.int8), params),
-        "theta": jnp.zeros((len(packing.THRESHOLD_STATE_FIELDS),),
-                           jnp.float32),
+        "theta": jnp.zeros((packing.THRESHOLD_STATE_SIZE,), jnp.float32),
     }
 
 
@@ -262,7 +283,7 @@ def abstract_server_state(params_abs: Any, mesh=None, p_specs: Any = None,
         lay = server_layout(params_abs, p_specs, mesh)
         d = _mesh_devices(mesh) * lay.d_packed
         state = {"g": SDS((d,), jnp.bfloat16), "age": SDS((d,), jnp.int8),
-                 "theta": SDS((len(packing.THRESHOLD_STATE_FIELDS),),
+                 "theta": SDS((packing.THRESHOLD_STATE_SIZE,),
                               jnp.float32)}
         if oac.error_feedback:
             state["res"] = SDS((d,), jnp.float32)
@@ -270,7 +291,7 @@ def abstract_server_state(params_abs: Any, mesh=None, p_specs: Any = None,
     return {
         "g": jax.tree.map(lambda p: SDS(p.shape, jnp.bfloat16), params_abs),
         "age": jax.tree.map(lambda p: SDS(p.shape, jnp.int8), params_abs),
-        "theta": SDS((len(packing.THRESHOLD_STATE_FIELDS),), jnp.float32),
+        "theta": SDS((packing.THRESHOLD_STATE_SIZE,), jnp.float32),
     }
 
 
@@ -305,6 +326,9 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
     if oac is not None and oac.error_feedback and not oac.packed:
         raise ValueError("error_feedback needs the packed server phase "
                          "(the residual is a flat persisted buffer)")
+    if oac is not None and oac.one_bit and not oac.packed:
+        raise ValueError("one_bit needs the packed server phase (the sign "
+                         "vector is detected on the flat packed buffer)")
     srv_abs = abstract_server_state(params_abs, mesh=mesh, p_specs=p_specs,
                                     oac=oac)
     srv_specs = shlib.server_pspecs(
@@ -353,24 +377,53 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
             lane-aligned flat buffers across steps, so the step saves two
             tree packs + one tree unpack per round vs the PR-2 re-pack
             path and the buffer donation is fully in place.  (θ_M, θ_A)
-            stay globally consistent (pmean across shards — two scalars);
-            the warm-start state skips the quantile pass when trusted."""
+            stay globally consistent (pmean across shards); with
+            ``fused_stats`` (default) the warm-start counts and the
+            threshold-re-estimation histograms come OUT of the fused
+            kernel, so the steady-state round reads the packed gradient
+            buffer exactly once — no separate count pass, no quantile
+            bootstrap."""
             layout = packing.PackedLayout.from_tree(grads)
             eng = SelectionEngine(
                 EngineConfig(policy="fairk", backend="packed", rho=oac.rho,
                              k_m_frac=oac.k_m_frac,
                              sample_cap=oac.sample_cap,
-                             noise_std=oac.noise_std,
+                             noise_std=(0.0 if oac.one_bit
+                                        else oac.noise_std),
                              n_clients=oac.n_clients,
                              warm_start=oac.warm_start,
+                             fused_stats=oac.fused_stats,
                              reduce_axes=mesh_axes),
                 layout.d_packed, layout=layout)
             tstate = packing.threshold_state_from_vec(server["theta"])
             key = _shard_noise_key(seed) if oac.noise_std > 0.0 else None
             g_flat = layout.pack(grads)            # the ONLY pack per step
+            fresh = None
+            if oac.one_bit:
+                # one-bit uplink: the transmitted values are the SIGNS of
+                # the effective gradient, detected by the sign_mv kernel
+                # from the (noisy) energy — with EF the sign is taken on
+                # score = g + residual, the same fold the fused kernel
+                # applies, so residual' = score - mask*sign accumulates
+                # the quantization error.  Channel noise rides the vote
+                # energy (engine noise off), like the FL sim's route.
+                from repro.kernels import ops
+                eff = g_flat
+                if "res" in server:
+                    eff = eff + server["res"]
+                # unscaled sigma_z on the superposed energy — the same
+                # convention as the FL sim's one-bit route (the noise
+                # perturbs the detection statistic once; it does NOT
+                # average down over clients like the coherent channel)
+                noise = (oac.noise_std
+                         * jax.random.normal(_shard_noise_key(seed),
+                                             g_flat.shape, jnp.float32)
+                         if oac.noise_std > 0.0 else None)
+                fresh, _ = ops.sign_mv(eff[None, :], noise=noise)
+                key = None
             g_t, age_next, stats = eng.select_and_merge(
                 g_flat, server["g"], server["age"], key=key, tstate=tstate,
-                residual=server.get("res"))
+                residual=server.get("res"), fresh=fresh)
             new_server = {
                 "g": g_t.astype(jnp.bfloat16),
                 "age": age_next.astype(jnp.int8),
@@ -468,6 +521,9 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         "oac_packed": bool(oac.packed) if oac is not None else False,
         "oac_warm_start": bool(oac.warm_start) if oac is not None else False,
         "oac_ef": bool(oac.error_feedback) if oac is not None else False,
+        "oac_fused_stats": bool(oac.fused_stats) if oac is not None
+        else False,
+        "oac_one_bit": bool(oac.one_bit) if oac is not None else False,
         "optimizer": opt_name or cfg.optimizer, "lr": lr,
         "gather_dtype": gather_dtype,
         "scans": {"microbatch": n_micro, "layers": cfg.n_scan_blocks},

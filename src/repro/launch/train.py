@@ -37,11 +37,19 @@ def main():
     ap.add_argument("--rho", type=float, default=0.1)
     ap.add_argument("--per-leaf-server", action="store_true",
                     help="historical per-leaf OAC server phase (default: "
-                         "persisted packed fused pass, DESIGN.md §9-§10)")
+                         "persisted packed fused pass with in-kernel selection statistics, DESIGN.md §9-§11)")
     ap.add_argument("--ef", action="store_true",
                     help="error feedback: persist the unselected gradient "
                          "mass in a flat residual buffer and fold it back "
                          "next step (packed server phase only)")
+    ap.add_argument("--one-bit", action="store_true",
+                    help="one-bit server uplink: merge sign_mv-detected "
+                         "signs of the effective gradient (combine with "
+                         "--ef; packed server phase only)")
+    ap.add_argument("--legacy-stats", action="store_true",
+                    help="disable the fused in-kernel selection statistics "
+                         "(restores the two-pass count accounting + "
+                         "sampled-quantile bootstrap)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -50,7 +58,8 @@ def main():
     mesh = jax.make_mesh((1, n_dev), ("data", "model"))
     shape = InputShape("custom", args.seq, args.batch, "train")
     oac = (OacServerConfig(rho=args.rho, packed=not args.per_leaf_server,
-                           error_feedback=args.ef)
+                           error_feedback=args.ef, one_bit=args.one_bit,
+                           fused_stats=not args.legacy_stats)
            if args.oac else None)
     bundle = make_train_step(cfg, shape, mesh, n_micro=1, oac=oac, lr=1e-3)
 

@@ -82,15 +82,42 @@ class TestSignMV:
     def test_matches_oracle(self, n, k):
         rng = np.random.default_rng(n * k)
         votes = jnp.asarray(np.sign(rng.normal(size=(n, k))).astype("f4"))
-        out_k = ops.sign_mv(votes, mode="interpret")
-        out_r = ref.sign_mv_ref(votes)
-        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+        signs_k, energy_k = ops.sign_mv(votes, mode="interpret")
+        signs_r, energy_r = ref.sign_mv_ref(votes)
+        np.testing.assert_array_equal(np.asarray(signs_k),
+                                      np.asarray(signs_r))
+        np.testing.assert_array_equal(np.asarray(energy_k),
+                                      np.asarray(energy_r))
+        # the energy IS the superposed vote sum — no second reduction
+        np.testing.assert_array_equal(np.asarray(energy_k),
+                                      np.asarray(votes.sum(axis=0)))
+
+    @pytest.mark.parametrize("mode", ["ref", "interpret"])
+    def test_noisy_energy_consistency(self, mode):
+        """With channel noise the energy is perturbed BEFORE the sign
+        (Sec. V-B non-coherent detection): signs == sign(energy) and
+        energy == clean vote sum + noise, kernel == oracle."""
+        rng = np.random.default_rng(7)
+        votes = jnp.asarray(np.sign(rng.normal(size=(9, 1024))).astype("f4"))
+        noise = jnp.asarray((3.0 * rng.normal(size=1024)).astype("f4"))
+        signs, energy = ops.sign_mv(votes, noise=noise, mode=mode)
+        signs_r, energy_r = ref.sign_mv_ref(votes, noise)
+        np.testing.assert_allclose(np.asarray(energy),
+                                   np.asarray(votes.sum(0) + noise),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(
+            np.asarray(signs), np.where(np.asarray(energy) >= 0, 1.0, -1.0))
+        np.testing.assert_array_equal(np.asarray(signs),
+                                      np.asarray(signs_r))
+        np.testing.assert_allclose(np.asarray(energy),
+                                   np.asarray(energy_r), rtol=1e-6)
 
     def test_majority_semantics(self):
         votes = jnp.asarray(np.vstack([np.ones((3, 128)),
                                        -np.ones((2, 128))]).astype("f4"))
-        out = ops.sign_mv(votes, mode="interpret")
-        np.testing.assert_array_equal(np.asarray(out), 1.0)
+        signs, energy = ops.sign_mv(votes, mode="interpret")
+        np.testing.assert_array_equal(np.asarray(signs), 1.0)
+        np.testing.assert_array_equal(np.asarray(energy), 1.0)  # 3 - 2
 
 
 class TestFairKUpdate:

@@ -1,0 +1,107 @@
+"""Benchmark-regression gate for the packed server phase (CI).
+
+Compares the freshly produced ``benchmarks/artifacts/packed_bench.json``
+against the committed baseline ``benchmarks/BENCH_packed.json`` and fails
+when
+
+* any structural counter broke — the fused-stats steady-state round must
+  trace exactly ONE read of the packed gradient buffer (vs 3 on the
+  pre-fused path), one fused kernel launch, and (1 pack, 1 unpack) tree
+  copies; or
+* a guarded speedup RATIO regressed by more than ``--tol`` (default 15%)
+  relative to the baseline.  Ratios — not absolute wall-clock — are
+  compared because CI runners and the baseline machine differ in speed;
+  a ratio is the machine-portable statement "variant A costs X times
+  variant B on the same box".  Refresh the baseline (commit the artifact
+  of a quiet-machine run) when the guarded set or the bench itself
+  changes materially.
+
+  PYTHONPATH=src python -m benchmarks.packed_bench          # artifact
+  python tools/check_bench_regression.py [--tol 0.15]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = os.path.join(ROOT, "benchmarks", "artifacts",
+                        "packed_bench.json")
+BASELINE = os.path.join(ROOT, "benchmarks", "BENCH_packed.json")
+
+# structural counters: exact match required
+STRUCTURAL = {
+    "g_reads_fused_stats": 1,       # the tentpole: ONE read of g per round
+    "g_reads_persisted": 3,         # what the pre-fused path pays
+    "fused_calls_packed": 1,
+    "copies_fused_stats": [1, 1],
+    "copies_persisted": [1, 1],
+}
+
+# speedup ratios guarded against the committed baseline (lower = worse).
+# Only the fused-round ratios are guarded: they compare near-identical
+# program shapes on the same box, so they travel across runner hardware.
+# The per-leaf-loop ratios (speedup_packed ~6x, speedup_persisted ~9x)
+# are dominated by Python-dispatch/fusion behavior that varies wildly
+# between machines — they stay in the artifact for the record but would
+# make the gate flaky if guarded.
+GUARDED_RATIOS = (
+    "fused_vs_packed_warm",         # fused round vs current packed-backend
+                                    # steady state (the >= 1.5x claim)
+    "speedup_fused_stats",          # fused round vs persisted re-estimation
+                                    # (3-read) round
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get(
+                        "BENCH_REGRESSION_TOLERANCE", 0.15)),
+                    help="allowed relative regression of each guarded "
+                         "ratio vs the baseline (default 0.15)")
+    ap.add_argument("--artifact", default=ARTIFACT)
+    ap.add_argument("--baseline", default=BASELINE)
+    args = ap.parse_args()
+
+    with open(args.artifact) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures = []
+    for key, want in STRUCTURAL.items():
+        got = cur.get(key)
+        if isinstance(want, list):
+            ok = got is not None and list(got) == want
+        else:
+            ok = got == want
+        if not ok:
+            failures.append(f"STRUCTURAL {key}: expected {want}, got {got}")
+    for key in GUARDED_RATIOS:
+        b, c = base.get(key), cur.get(key)
+        if b is None or c is None:
+            failures.append(f"RATIO {key}: missing (baseline={b}, "
+                            f"current={c})")
+            continue
+        floor = b * (1.0 - args.tol)
+        status = "OK" if c >= floor else "REGRESSED"
+        print(f"[bench-regression] {key}: current={c:.3f} "
+              f"baseline={b:.3f} floor={floor:.3f} {status}")
+        if c < floor:
+            failures.append(f"RATIO {key}: {c:.3f} < {floor:.3f} "
+                            f"(baseline {b:.3f} - {args.tol:.0%})")
+
+    if failures:
+        print("\n[bench-regression] FAILED:")
+        for msg in failures:
+            print("  -", msg)
+        return 1
+    print(f"[bench-regression] OK: structural counters intact, "
+          f"{len(GUARDED_RATIOS)} ratios within {args.tol:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
