@@ -1,11 +1,14 @@
 """Beyond-paper extension — FAIR-k-auto: adapt the magnitude share k_M/k
-online from the measured gradient concentration (Gini of |g_t|, checked
-every 10 rounds).
+online, fully in-graph (core/controller.py, DESIGN.md §12).
 
 Motivation: Fig. 4's two synthetic regimes show the optimal k_M/k depends on
 the gradient spectrum (flat -> low k_M; heavy-tailed -> high k_M).  The
-controller removes that last tuning knob: it matches the best fixed setting
-in both regimes without knowing which one it is in."""
+controller removes that last tuning knob by regulating the measured
+staleness quantile against the Lemma-1 stationary prediction — a sticky
+spectrum starves the age stage (staler than predicted -> lower k_M), a
+well-mixed one doesn't (fresher -> higher k_M).  Unlike the historical
+host-side Gini heuristic it costs zero device syncs and zero recompiles:
+the split rides as traced controller state through ONE compiled step."""
 
 import time
 
@@ -31,8 +34,11 @@ def run(fast: bool = True):
                   eval_every=rounds)
         us = (time.perf_counter() - t0) / rounds * 1e6
         tag = f"{policy}_km{kmf}"
-        path = sorted(set(h.get("km_frac", [])))
+        km = h.get("km_frac", [])
+        path = {"start": round(km[0], 3), "end": round(km[-1], 3),
+                "min": round(min(km), 3), "max": round(max(km), 3)}
         detail[tag] = {"acc": h["acc"][-1], "km_path": path}
         rows.append((f"ext/fairk_auto/{tag}", us,
-                     f"acc={h['acc'][-1]:.3f};km_path={path}"))
+                     f"acc={h['acc'][-1]:.3f};"
+                     f"km={path['start']}->{path['end']}"))
     return rows, detail

@@ -1,0 +1,278 @@
+"""In-graph adaptive budget controller: the age histogram drives k_M online.
+
+The paper's Sec. V-A shows the magnitude/timeliness split ``k_M/k`` is THE
+knob trading freshness against importance — and its Sec. IV-B Markov
+analysis (Lemma 1, ``core.markov``) predicts exactly what the staleness
+distribution SHOULD look like for a given split.  Since PR 4 the fused
+server kernel emits the empirical staleness pmf every round for free (the
+``age_hist`` row of ``ops.fairk_stats_update``), so closing the loop
+costs a few hundred scalar flops:
+
+    measure   the empirical staleness quantile from the EMA'd age
+              histogram (the finite-sample π of Lemma 1),
+    predict   the stationary quantile Lemma 1 assigns to the CURRENT
+              split (a static per-(ρ, k_M/k) table, interpolated in-graph
+              over the traced ``k_m_frac``),
+    correct   ``k_m_frac`` by a clipped, damped proportional step: staler
+              than the model predicts (a sticky magnitude stage is
+              starving the age stage) -> shift budget to the age stage;
+              fresher -> spend it on magnitude.
+
+Everything is traced: the controller state rides in the server state
+pytree, the update runs INSIDE the compiled round, and the engine
+consumes ``k_m_frac`` as a traced value (``SelectionEngine.
+select_and_merge(..., k_m_frac=...)``), so adaptation costs zero host
+syncs and zero recompiles — unlike the historical ``fairk_auto`` path,
+which device-synced the full gradient for a host-side Gini statistic and
+cached one recompiled step per discrete k_M level.
+
+Following the age-aware partial-update line (Du et al., "Age-Aware
+Partial Gradient Update Strategy for Federated Learning Over the Air";
+Elshazly & Arafa's edge-blind age-aware aggregation — PAPERS.md), the
+controller only consumes statistics the server already observes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+
+Array = jax.Array
+
+# trace-time counter: how many controller updates a program traces.  The
+# no-recompile acceptance claim (``packed_bench --smoke``) executes one
+# jitted adaptive round at several k_m_frac operating points and asserts
+# this advanced exactly ONCE — the split rides as data, never as a new
+# compilation.
+UPDATE_TRACES = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Adaptive-``k_m_frac`` control law settings.
+
+    The regulated quantity is the ``target_quantile`` of the staleness
+    pmf; its setpoint is either the Lemma-1 stationary prediction for the
+    current split (``target_age=None`` — the self-calibrating default) or
+    a fixed age in rounds.  ``gain``/``max_step``/``damping`` shape the
+    clipped proportional step on ``k_m_frac``; ``ema`` smooths the
+    per-round histograms before the quantile is read off."""
+    target_quantile: float = 0.9   # which staleness quantile to regulate
+    target_age: Optional[float] = None  # rounds; None -> Lemma-1 table
+    gain: float = 0.15             # proportional gain on the relative error
+    max_step: float = 0.02         # |Δk_m_frac| bound per actuation
+    damping: float = 0.5           # step EMA (limit-cycle suppression)
+    deadband: float = 0.1          # relative error below which no step is
+                                   # taken (the plateau of Sec. V-A makes
+                                   # parking anywhere inside it free)
+    period: int = 5                # rounds between actuations: the
+                                   # staleness quantile answers a split
+                                   # change only ~1/ρ_A rounds later, so
+                                   # stepping every round overshoots into
+                                   # a rail-to-rail limit cycle — the EMA
+                                   # keeps integrating every round either
+                                   # way
+    ema: float = 0.9               # histogram EMA decay
+    min_frac: float = 0.05         # k_m_frac clamp (both stages stay alive)
+    max_frac: float = 0.95
+    k0_frac: float = 0.25          # assumed exchange rate k_0/k_M (Sec. IV-B)
+    chain_d: int = 128             # scaled Lemma-1 chain size (staleness is
+                                   # scale-free in (ρ, k_M/k), Sec. IV-B)
+    table_points: int = 7          # k_m_frac grid of the target table
+
+
+# controller state: a dict pytree carried across rounds next to the
+# threshold state.  ``k_m_frac`` is the live split (what the engine
+# consumes as its traced magnitude budget), ``prev_step`` the damped step
+# memory, ``init`` flips to 1 after the first observed histogram (the
+# controller never steps off a round-0 full-refresh histogram), ``tick``
+# counts rounds since the last actuation, and ``age_ema``/``mag_ema``
+# the EMA'd in-kernel histograms.  Convention: ``mag_ema`` tracks the
+# kernel-emitted |score| histogram and ONLY it — call sites without a
+# fused kernel pass (the exact FL route, the sweep lanes) pass
+# ``mag_hist=None`` and leave it untouched.  The control law reads only
+# ``age_ema``; the magnitude EMA rides along as the spectrum diagnostic
+# (and the hook for concentration-aware targets) at zero extra cost —
+# the kernel emits the histogram either way.
+CTRL_SCALAR_FIELDS = ("k_m_frac", "prev_step", "init", "tick")
+CONTROLLER_STATE_SIZE = (len(CTRL_SCALAR_FIELDS)
+                         + packing.STATS_AGE_BINS + packing.STATS_MAG_BINS)
+
+
+def init_controller_state(k_m_frac=0.75) -> Dict[str, Array]:
+    z = jnp.float32(0.0)
+    return {"k_m_frac": jnp.asarray(k_m_frac, jnp.float32),
+            "prev_step": z, "init": z, "tick": z,
+            "age_ema": jnp.zeros((packing.STATS_AGE_BINS,), jnp.float32),
+            "mag_ema": jnp.zeros((packing.STATS_MAG_BINS,), jnp.float32)}
+
+
+def controller_state_to_vec(cs: Dict[str, Array]) -> Array:
+    """(CONTROLLER_STATE_SIZE,) f32 encoding — scalars, then the two EMA
+    histograms — for server-state dicts that want one flat array (the
+    launch trainer persists and checkpoints it this way)."""
+    scalars = jnp.stack([jnp.asarray(cs[f], jnp.float32)
+                         for f in CTRL_SCALAR_FIELDS])
+    return jnp.concatenate([scalars, cs["age_ema"], cs["mag_ema"]]
+                           ).astype(jnp.float32)
+
+
+def controller_state_from_vec(vec: Array) -> Dict[str, Array]:
+    ns = len(CTRL_SCALAR_FIELDS)
+    cs = {f: vec[i] for i, f in enumerate(CTRL_SCALAR_FIELDS)}
+    cs["age_ema"] = vec[ns:ns + packing.STATS_AGE_BINS]
+    cs["mag_ema"] = vec[ns + packing.STATS_AGE_BINS:CONTROLLER_STATE_SIZE]
+    return cs
+
+
+# ---------------------------------------------------------------------------
+# staleness pmf / quantile from the in-kernel age histogram
+# ---------------------------------------------------------------------------
+
+def staleness_pmf(age_hist: Array) -> Array:
+    """Empirical staleness pmf over the unit age bins — the finite-sample
+    counterpart of Lemma 1's stationary π (the histogram is already binned
+    on the chain's state space, ``docs/REPRODUCTION.md``)."""
+    h = jnp.asarray(age_hist, jnp.float32)
+    return h / jnp.maximum(h.sum(), 1.0)
+
+
+def pmf_quantile(pmf: Array, q: float) -> Array:
+    """Inverse cdf of a unit-bin pmf at ``q``, linearly interpolated inside
+    the cut bin (the same sub-unit convention ``packing.hist_thresholds``
+    uses for θ_A — within an integer atom the index jitter is uniform)."""
+    pmf = jnp.asarray(pmf, jnp.float32)
+    cdf = jnp.cumsum(pmf)
+    b = jnp.clip(jnp.sum((cdf < q).astype(jnp.float32)),
+                 0.0, pmf.shape[0] - 1).astype(jnp.int32)
+    prev = jnp.where(b > 0, cdf[jnp.maximum(b - 1, 0)], 0.0)
+    frac = jnp.clip((q - prev) / jnp.maximum(pmf[b], 1e-9), 0.0, 1.0)
+    return b.astype(jnp.float32) + frac
+
+
+# ---------------------------------------------------------------------------
+# Lemma-1 target table (static, built once per (ρ, config) at trace time)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _lemma1_quantile(d: int, k: int, k_m: int, k0: int, q: float) -> float:
+    """Stationary staleness quantile of the Sec. IV-B chain (cached — the
+    table rebuild on re-traces must not re-run the power iteration)."""
+    from repro.core import markov                  # analysis-only import
+    chain = markov.FairKChain(d=d, k=k, k_m=k_m, k0=k0)
+    support, pmf = markov.aou_distribution(chain)
+    cum = np.cumsum(pmf)
+    idx = int((cum < q).sum())
+    idx = min(idx, len(pmf) - 1)
+    prev = float(cum[idx - 1]) if idx > 0 else 0.0
+    frac = float(np.clip((q - prev) / max(float(pmf[idx]), 1e-12), 0.0, 1.0))
+    return float(support[idx]) + frac
+
+
+def lemma1_target_table(cfg: ControllerConfig, rho: float
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """(fracs, target quantiles): Lemma 1 evaluated on a scaled-down chain
+    at each ``k_m_frac`` grid point.  Staleness in rounds depends on the
+    RATIOS (ρ, k_M/k, k_0/k_M), not on d — e.g. the support bound
+    T = ⌈(d − k_M)/(k − k_M)⌉ ≈ (1 − ρ·f)/(ρ(1 − f)) — so a small chain
+    prices the target for any model size.
+
+    Validity bounds: the chain needs ρ ≤ 0.5 (the paper's own restriction
+    — larger ρ is priced AT 0.5) and at least 2 magnitude slots per grid
+    point, so the chain dimension grows as ~20/ρ (capped at 256 to bound
+    the power-iteration cost).  Below ρ ≈ 0.08 the low-``k_m_frac`` grid
+    points quantise coarsely (k_m_c pinned at 2) and the interpolated
+    setpoint is approximate there — pin ``target_age`` explicitly when
+    regulating a very sparse budget at an extreme split."""
+    d_c = int(min(256, max(cfg.chain_d, round(20.0 / max(rho, 1e-3)))))
+    k_c = int(np.clip(round(rho * d_c), 3, d_c // 2))
+    fracs = np.linspace(cfg.min_frac, cfg.max_frac, cfg.table_points)
+    targets = []
+    for f in fracs:
+        k_m_c = int(np.clip(round(f * k_c), 2, k_c - 1))
+        k0_c = int(np.clip(round(cfg.k0_frac * k_m_c), 1, k_m_c - 1))
+        t = _lemma1_quantile(d_c, k_c, k_m_c, k0_c, cfg.target_quantile)
+        targets.append(min(t, packing.STATS_AGE_BINS - 2.0))
+    return fracs.astype(np.float32), np.asarray(targets, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# the controller
+# ---------------------------------------------------------------------------
+
+class BudgetController:
+    """Clipped proportional regulation of ``k_m_frac`` on the staleness
+    quantile.  Construct once per (ρ, config) — the Lemma-1 target table
+    is static data baked at build time; ``update`` is a pure traced
+    function of ``(state, age_hist, mag_hist)``."""
+
+    def __init__(self, cfg: ControllerConfig = ControllerConfig(), *,
+                 rho: float):
+        self.cfg = cfg
+        self.rho = float(rho)
+        if cfg.target_age is None:
+            fracs, targets = lemma1_target_table(cfg, self.rho)
+            self._fracs = jnp.asarray(fracs)
+            self._targets = jnp.asarray(targets)
+        else:
+            self._fracs = self._targets = None
+
+    def init_state(self, k_m_frac=0.75) -> Dict[str, Array]:
+        return init_controller_state(k_m_frac)
+
+    def target_for(self, k_m_frac: Array) -> Array:
+        """Setpoint for the regulated staleness quantile at the current
+        split: the Lemma-1 stationary prediction (in-graph interpolation
+        over the static table, so the setpoint moves WITH the traced
+        split) or the fixed ``target_age``."""
+        if self.cfg.target_age is not None:
+            return jnp.float32(self.cfg.target_age)
+        return jnp.interp(jnp.asarray(k_m_frac, jnp.float32),
+                          self._fracs, self._targets)
+
+    def update(self, state: Dict[str, Array], age_hist: Array,
+               mag_hist: Optional[Array] = None) -> Dict[str, Array]:
+        """One in-graph controller step from this round's kernel-emitted
+        histograms.  Staler than the setpoint -> negative step (more age
+        budget); fresher -> positive (more magnitude budget).  The step is
+        clipped at ``max_step`` and EMA-damped; the very first observation
+        only seeds the histogram EMA (a round-0 full-refresh histogram —
+        everything at age 0 — must not slam the split to ``max_frac``)."""
+        global UPDATE_TRACES
+        UPDATE_TRACES += 1
+        cfg = self.cfg
+        seen = state["init"] > 0.0
+        a_new = jnp.asarray(age_hist, jnp.float32)
+        age_ema = jnp.where(seen, cfg.ema * state["age_ema"]
+                            + (1.0 - cfg.ema) * a_new, a_new)
+        if mag_hist is not None:
+            m_new = jnp.asarray(mag_hist, jnp.float32)
+            mag_ema = jnp.where(seen, cfg.ema * state["mag_ema"]
+                                + (1.0 - cfg.ema) * m_new, m_new)
+        else:
+            mag_ema = state["mag_ema"]
+        q_meas = pmf_quantile(staleness_pmf(age_ema), cfg.target_quantile)
+        q_tgt = self.target_for(state["k_m_frac"])
+        err = (q_meas - q_tgt) / jnp.maximum(q_tgt, 1.0)
+        # deadband: inside the Sec. V-A plateau every split is free, so a
+        # small relative error buys nothing but actuation noise
+        err = jnp.sign(err) * jnp.maximum(jnp.abs(err) - cfg.deadband, 0.0)
+        tick = state["tick"] + 1.0
+        act = seen & (age_ema.sum() > 0.0) & (tick >= cfg.period)
+        raw = jnp.clip(-cfg.gain * err, -cfg.max_step, cfg.max_step)
+        step = cfg.damping * state["prev_step"] + (1.0 - cfg.damping) * raw
+        step = jnp.where(act, step, 0.0)
+        k_m_frac = jnp.clip(state["k_m_frac"] + step,
+                            cfg.min_frac, cfg.max_frac)
+        return {"k_m_frac": k_m_frac,
+                "prev_step": jnp.where(act, step, state["prev_step"]),
+                "init": jnp.float32(1.0),
+                "tick": jnp.where(act, 0.0, tick),
+                "age_ema": age_ema, "mag_ema": mag_ema}

@@ -96,22 +96,36 @@ def strided_sample(x: Array, cap: int) -> Array:
 
 
 def thresholds_from_samples(mag_s: Array, age_eff_s: Array, *, rho: float,
-                            k_m_frac: float) -> Tuple[Array, Array]:
+                            k_m_frac) -> Tuple[Array, Array]:
     """(θ_M, θ_A) quantiles from pre-drawn samples of |g| and jittered age.
 
     θ_M ≈ the (1 − ρ·k_m_frac) quantile of |g|; θ_A sizes the age stage to
     the residual budget over the whole vector (the complement correction is
-    the (1 − ρ_M) denominator)."""
+    the (1 − ρ_M) denominator).  ``k_m_frac`` may be a traced scalar (the
+    adaptive-budget controller, core/controller.py): the degenerate-stage
+    short-circuits then become ``where``s on quantiles computed either
+    way — same values, data-dependent instead of trace-dependent."""
     rho_m = rho * k_m_frac
-    rho_a = (rho - rho_m) / max(1.0 - rho_m, 1e-6)
-    theta_m = (jnp.quantile(mag_s, 1.0 - rho_m)
-               if rho_m > 0.0 else jnp.float32(jnp.inf))
-    theta_a = (jnp.quantile(age_eff_s, 1.0 - rho_a)
-               if rho_a > 0.0 else jnp.float32(jnp.inf))
+    if isinstance(rho_m, (int, float)):
+        rho_a = (rho - rho_m) / max(1.0 - rho_m, 1e-6)
+        theta_m = (jnp.quantile(mag_s, 1.0 - rho_m)
+                   if rho_m > 0.0 else jnp.float32(jnp.inf))
+        theta_a = (jnp.quantile(age_eff_s, 1.0 - rho_a)
+                   if rho_a > 0.0 else jnp.float32(jnp.inf))
+        return theta_m.astype(jnp.float32), theta_a.astype(jnp.float32)
+    rho_m = jnp.asarray(rho_m, jnp.float32)
+    rho_a = (rho - rho_m) / jnp.maximum(1.0 - rho_m, 1e-6)
+    theta_m = jnp.where(rho_m > 0.0,
+                        jnp.quantile(mag_s, jnp.clip(1.0 - rho_m, 0.0, 1.0)),
+                        jnp.inf)
+    theta_a = jnp.where(rho_a > 0.0,
+                        jnp.quantile(age_eff_s,
+                                     jnp.clip(1.0 - rho_a, 0.0, 1.0)),
+                        jnp.inf)
     return theta_m.astype(jnp.float32), theta_a.astype(jnp.float32)
 
 
-def sampled_thresholds(g: Array, age: Array, *, rho: float, k_m_frac: float,
+def sampled_thresholds(g: Array, age: Array, *, rho: float, k_m_frac,
                        sample_cap: int,
                        sample_ids: Optional[Array] = None,
                        residual: Optional[Array] = None
@@ -176,6 +190,86 @@ def exact_thresholds(g: Array, age: Array, *, k: int, k_m: int
     edge = vals[-1] if k_a >= d else vals[k_a]
     theta_a = (vals[k_a - 1] + edge) / 2.0
     return theta_m, theta_a
+
+
+def exact_thresholds_dynamic(g: Array, age: Array, *, k: int, k_m
+                             ) -> Tuple[Array, Array]:
+    """``exact_thresholds`` with a *traced* magnitude budget ``k_m``
+    (int32 in [0, k]; ``k`` stays static — the adaptive controller only
+    moves the split).  Identical thresholds to the static version at the
+    same ``k_m``: both read the midpoints between the ranked order
+    statistics, here gathered at a dynamic rank out of one static
+    ``top_k(·, k + 1)`` whose leading values match the static call's."""
+    packing.G_READS += 1
+    d = g.shape[0]
+    kk = min(k + 1, d)
+    km = jnp.clip(jnp.asarray(k_m, jnp.int32), 0, k)
+    mag = jnp.abs(g.astype(jnp.float32))
+    vals = jax.lax.top_k(mag, kk)[0]
+    hi = vals[jnp.maximum(km - 1, 0)]
+    edge = vals[jnp.minimum(km, kk - 1)]
+    theta_m = jnp.where(km == 0, jnp.inf, (hi + edge) / 2.0
+                        ).astype(jnp.float32)
+    mask_m = mag >= theta_m
+    k_a = k - km
+    age_eff = age.astype(jnp.float32) + index_jitter(d)
+    rest = jnp.where(mask_m, -jnp.inf, age_eff)
+    avals = jax.lax.top_k(rest, kk)[0]
+    ahi = avals[jnp.maximum(k_a - 1, 0)]
+    aedge = avals[jnp.minimum(k_a, kk - 1)]
+    theta_a = jnp.where(k_a == 0, jnp.inf, (ahi + aedge) / 2.0
+                        ).astype(jnp.float32)
+    return theta_m, theta_a
+
+
+# ---------------------------------------------------------------------------
+# rank-based FAIR-k: the traced-k_m mask form (shared with fl/sweep.py)
+# ---------------------------------------------------------------------------
+
+def rank_desc(x: Array) -> Array:
+    """rank[i] = number of entries strictly ranked above x[i] (descending,
+    ties toward lower index — matching ``lax.top_k``)."""
+    d = x.shape[0]
+    order = jnp.argsort(-x, stable=True)
+    return jnp.zeros((d,), jnp.int32).at[order].set(
+        jnp.arange(d, dtype=jnp.int32))
+
+
+def fair_k_masks_dynamic(score: Array, age: Array, k: int, k_m
+                         ) -> Tuple[Array, Array]:
+    """Rank-based FAIR-k (Eq. 11) with a *traced* magnitude budget ``k_m``:
+    (mask, mask_m) float32, exactly ``k`` ones in ``mask``.  The exact
+    index policies concatenate top-k vectors of static lengths, so a
+    traced split selects by rank instead —
+
+        mask_M = rank(score)        < k_m
+        mask_A = rank(age ⊙ ¬mask_M) < k − k_m
+
+    — the identical coordinate set (rank and top-k agree on tie-free
+    inputs; ties break toward lower index in both).  ``score`` is the
+    magnitude-stage statistic (|g| for FAIR-k, random for Rand-k)."""
+    mask_m = rank_desc(score) < k_m
+    # age stage on the complement; -1 can never win (ages are >= 0) and
+    # the index tie-break mirrors lax.top_k via the stable argsort
+    age_rest = jnp.where(mask_m, -1.0, age.astype(jnp.float32))
+    mask_a = rank_desc(age_rest) < (k - k_m)
+    return ((mask_m | mask_a).astype(jnp.float32),
+            mask_m.astype(jnp.float32))
+
+
+def fair_k_mask_dynamic(score: Array, age: Array, k: int, k_m) -> Array:
+    """The combined FAIR-k mask of ``fair_k_masks_dynamic`` (the form the
+    vmapped sweep grid consumes)."""
+    return fair_k_masks_dynamic(score, age, k, k_m)[0]
+
+
+def traced_km(k: int, k_m_frac) -> Array:
+    """``k_m = round(k_m_frac · k)`` as traced int32 — THE rounding/clip
+    convention of the traced-split stack (the engine backends, the FL
+    trainer's exact-adaptive route and the sweep lanes all call this one
+    function, so the bit-exact traced==static parity can never drift)."""
+    return jnp.round(jnp.clip(jnp.asarray(k_m_frac, jnp.float32),
+                              0.0, 1.0) * k).astype(jnp.int32)
 
 
 def threshold_mask(g: Array, age: Array, theta_m: Array, theta_a: Array,
@@ -326,6 +420,19 @@ class SelectionEngine:
         k, k_m, _ = self.budgets()
         return k / self.d_budget, (k_m / k if k else 0.0)
 
+    def _km_traced(self, k_m_frac) -> Array:
+        """Traced magnitude budget: ``k`` stays static (the controller
+        only moves the split), ``k_m = round(k_m_frac · k)`` rides as
+        int32 data — changing it can never trigger a recompile."""
+        return traced_km(self.budgets()[0], k_m_frac)
+
+    def _km_frac_eff(self, km: Array) -> Array:
+        """The realised split ``k_m/k`` of a traced budget — mirrors the
+        static ``_rho_parts`` rounding so traced and static runs at the
+        same nominal fraction derive identical thresholds."""
+        k, _, _ = self.budgets()
+        return km.astype(jnp.float32) / k if k else jnp.float32(0.0)
+
     # -- selection ----------------------------------------------------------
 
     def select(self, key: Optional[Array], g: Array, age: Array) -> Array:
@@ -339,14 +446,27 @@ class SelectionEngine:
                                         k=k, k_m=k_m, r=r)
 
     def thresholds(self, g: Array, age: Array,
-                   residual: Optional[Array] = None) -> Tuple[Array, Array]:
+                   residual: Optional[Array] = None,
+                   k_m_frac=None) -> Tuple[Array, Array]:
         """(θ_M, θ_A) per config (order-statistic or sampled-quantile).
-        ``residual`` folds into the magnitude statistic (score = g + res)."""
+        ``residual`` folds into the magnitude statistic (score = g + res);
+        ``k_m_frac`` (optional traced scalar) overrides the static split."""
         k, k_m, _ = self.budgets()
+        if k_m_frac is None:
+            if self.cfg.exact_theta:
+                return exact_thresholds(eff_score(g, residual), age,
+                                        k=k, k_m=k_m)
+            rho, km_frac = self._rho_parts()
+            return sampled_thresholds(g, age, rho=rho, k_m_frac=km_frac,
+                                      sample_cap=self.cfg.sample_cap,
+                                      residual=residual)
+        km = self._km_traced(k_m_frac)
         if self.cfg.exact_theta:
-            return exact_thresholds(eff_score(g, residual), age, k=k, k_m=k_m)
-        rho, km_frac = self._rho_parts()
-        return sampled_thresholds(g, age, rho=rho, k_m_frac=km_frac,
+            return exact_thresholds_dynamic(eff_score(g, residual), age,
+                                            k=k, k_m=km)
+        rho, _ = self._rho_parts()
+        return sampled_thresholds(g, age, rho=rho,
+                                  k_m_frac=self._km_frac_eff(km),
                                   sample_cap=self.cfg.sample_cap,
                                   residual=residual)
 
@@ -356,7 +476,8 @@ class SelectionEngine:
                          key: Optional[Array] = None,
                          tstate: Optional[Dict[str, Array]] = None,
                          residual: Optional[Array] = None,
-                         fresh: Optional[Array] = None
+                         fresh: Optional[Array] = None,
+                         k_m_frac=None
                          ) -> Tuple[Array, Array, Dict[str, Any]]:
         """One server phase: select on ``g``, merge fresh ``g`` over stale
         ``g_prev`` (Eq. 8), advance AoU (Eq. 10).  Returns f32
@@ -384,23 +505,36 @@ class SelectionEngine:
         threshold/packed, psum'd per-shard partials on sharded, jnp on
         exact), and ``tstate`` is honoured by the sharded backend too —
         its per-shard thresholds then warm-start from last round's
-        reduced statistics instead of bootstrapping every round."""
+        reduced statistics instead of bootstrapping every round.
+
+        ``k_m_frac`` (optional, any backend): a *traced* magnitude split
+        overriding the static ``cfg.k_m_frac`` — the adaptive budget
+        controller (core/controller.py) feeds its live split through
+        here.  ``k`` stays static; only the stage split rides as data, so
+        per-round ``k_m_frac`` changes never recompile.  FAIR-k only (the
+        Remark-1 policies pin the split; the other three need index
+        arithmetic with static stage sizes)."""
         if g.shape != (self.d,):
             raise ValueError(f"expected shape ({self.d},), got {g.shape}")
         if self.cfg.noise_std > 0.0 and key is None:
             raise ValueError("noise_std > 0 needs a PRNG key (identical "
                              "noise every round is not a channel)")
+        if k_m_frac is not None and self.cfg.policy != "fairk":
+            raise ValueError(
+                f"traced k_m_frac adapts the FAIR-k split only — policy "
+                f"{self.cfg.policy!r} pins or ignores it")
         backend = self.cfg.backend
         if backend == "exact":
-            return self._exact_update(g, g_prev, age, key, residual, fresh)
+            return self._exact_update(g, g_prev, age, key, residual, fresh,
+                                      k_m_frac)
         if backend == "threshold":
             return self._threshold_update(g, g_prev, age, key, residual,
-                                          fresh)
+                                          fresh, k_m_frac)
         if backend == "packed":
             return self._packed_update(g, g_prev, age, key, tstate,
-                                       residual, fresh)
+                                       residual, fresh, k_m_frac)
         return self._sharded_update(g, g_prev, age, key, residual, fresh,
-                                    tstate)
+                                    tstate, k_m_frac)
 
     def _noisy(self, fresh: Array, key: Optional[Array]) -> Array:
         cfg = self.cfg
@@ -410,18 +544,28 @@ class SelectionEngine:
             key, fresh.shape, jnp.float32)
         return fresh.astype(jnp.float32) + noise
 
-    def _exact_update(self, g, g_prev, age, key, residual=None, fresh=None):
+    def _exact_update(self, g, g_prev, age, key, residual=None, fresh=None,
+                      k_m_frac=None):
         k, k_m, _ = self.budgets()
         key_sel = key_noise = None
         if key is not None:
             key_sel, key_noise = jax.random.split(key)
         score = eff_score(g, residual)
-        idx = self.select(key_sel, score, age)
-        mask = selection.mask_from_indices(idx, self.d)
+        if k_m_frac is None:
+            idx = self.select(key_sel, score, age)
+            mask = selection.mask_from_indices(idx, self.d)
+            stats = {"idx": idx, "n_selected": jnp.float32(k), "k": k}
+        else:
+            # traced split: the index-form top-k concatenation has static
+            # stage lengths, so select by RANK instead — the identical
+            # coordinate set (ties toward lower index in both)
+            km = self._km_traced(k_m_frac)
+            k_m = km.astype(jnp.float32)
+            mask, _ = fair_k_masks_dynamic(jnp.abs(score), age, k, km)
+            stats = {"n_selected": jnp.float32(k), "k": k, "k_m": km}
         sent = score if fresh is None else fresh.astype(jnp.float32)
         g_t, age_next = masked_merge(self._noisy(sent, key_noise), g_prev,
                                      age, mask)
-        stats = {"idx": idx, "n_selected": jnp.float32(k), "k": k}
         if self.cfg.fused_stats:
             # the index-form FAIR-k magnitude stage selects exactly k_M
             # coordinates; the histograms come from the same jnp helper
@@ -431,8 +575,8 @@ class SelectionEngine:
             mag_hist, age_hist = ref.strided_hists_ref(
                 score, age_next, age.astype(jnp.float32) >= 0.0,
                 packing.hist_stride(self.d))
-            stats |= {"n_sel_m": jnp.float32(k_m), "mag_hist": mag_hist,
-                      "age_hist": age_hist}
+            stats |= {"n_sel_m": jnp.asarray(k_m, jnp.float32),
+                      "mag_hist": mag_hist, "age_hist": age_hist}
         if residual is not None:
             # noise-free accounting (the channel error is not observable by
             # the clients) — identical formula to the fused kernel's stage
@@ -440,10 +584,11 @@ class SelectionEngine:
         return g_t, age_next, stats
 
     def _threshold_update(self, g, g_prev, age, key, residual=None,
-                          fresh=None):
+                          fresh=None, k_m_frac=None):
         from repro.kernels import ops          # deferred: kernels import core
         k, _, _ = self.budgets()
-        theta_m, theta_a = self.thresholds(g, age, residual=residual)
+        theta_m, theta_a = self.thresholds(g, age, residual=residual,
+                                           k_m_frac=k_m_frac)
         if self.cfg.fused_stats:
             g_t, age_next, res_next, kstats = ops.fairk_stats_update(
                 g, g_prev, age, theta_m, theta_a, residual=residual,
@@ -472,7 +617,8 @@ class SelectionEngine:
             stats["residual"] = res_next
         return g_t, age_next, stats
 
-    def _stats_thresholds(self, tstate) -> Tuple[Array, Array, Array]:
+    def _stats_thresholds(self, tstate, k_m_frac=None
+                          ) -> Tuple[Array, Array, Array]:
         """(θ_M, θ_A, streak') from the carried statistics ALONE — zero
         reads of the gradient buffer (the fused-stats steady state).
 
@@ -483,10 +629,16 @@ class SelectionEngine:
         histograms (``packing.hist_thresholds``) — the replacement for
         the sampled-quantile bootstrap pass.  Both branches are a handful
         of scalar/128-bin flops, so a plain ``where`` suffices where the
-        legacy path needed ``lax.cond`` to dodge the quantile pass."""
+        legacy path needed ``lax.cond`` to dodge the quantile pass.
+        ``k_m_frac`` (traced) reroutes every budget reference through the
+        live split — the adaptive controller's round costs the SAME
+        scalar program."""
         cfg = self.cfg
         k, k_m, _ = self.budgets()
         rho, km_frac = self._rho_parts()
+        if k_m_frac is not None:
+            k_m = self._km_traced(k_m_frac)
+            km_frac = self._km_frac_eff(k_m)
         hist_tm, hist_ta = packing.hist_thresholds(
             tstate["mag_hist"], tstate["age_hist"], rho=rho,
             k_m_frac=km_frac)
@@ -522,7 +674,8 @@ class SelectionEngine:
                | ((pred_tm <= tm * ratio_tol) & (pred_tm * ratio_tol >= tm))))
         return jnp.where(on_track & pred_ok, tstate["streak"] + 1.0, 0.0)
 
-    def _packed_thresholds(self, g, age, tstate, residual=None):
+    def _packed_thresholds(self, g, age, tstate, residual=None,
+                           k_m_frac=None):
         """(θ_M, θ_A, streak') for a packed buffer: pad-excluding sampled
         quantiles, or — when warm — last round's thresholds with the
         budget-tracking correction (no quantile pass at all on steady-state
@@ -530,18 +683,26 @@ class SelectionEngine:
         disappears from the trace: re-estimation runs on the carried
         in-kernel histograms (``_stats_thresholds``).  ``residual`` folds
         into the magnitude statistic (score = g + residual; pads carry
-        residual 0)."""
+        residual 0).  ``k_m_frac`` (traced) replaces the static split in
+        every branch."""
         cfg = self.cfg
         k, k_m, _ = self.budgets()
         streak = jnp.float32(0.0)
         if cfg.exact_theta:
             # pads (|g|=0, age=PAD_AGE+jitter < 0) can never enter either
             # top-k, so the order statistics are those of the valid coords
+            if k_m_frac is not None:
+                return (*exact_thresholds_dynamic(
+                    eff_score(g, residual), age, k=k,
+                    k_m=self._km_traced(k_m_frac)), streak)
             return (*exact_thresholds(eff_score(g, residual), age,
                                       k=k, k_m=k_m), streak)
         if cfg.fused_stats and cfg.warm_start and tstate is not None:
-            return self._stats_thresholds(tstate)
+            return self._stats_thresholds(tstate, k_m_frac)
         rho, km_frac = self._rho_parts()
+        if k_m_frac is not None:
+            k_m = self._km_traced(k_m_frac)
+            km_frac = self._km_frac_eff(k_m)
 
         def bootstrap(_):
             tm, ta = sampled_thresholds(
@@ -579,7 +740,7 @@ class SelectionEngine:
         return tm, ta, streak
 
     def _packed_update(self, g, g_prev, age, key, tstate, residual=None,
-                       fresh=None):
+                       fresh=None, k_m_frac=None):
         """One fused FAIR-k pass over the whole packed pytree buffer.
 
         Exactly one quantile estimation (or none: warm rounds correct the
@@ -595,7 +756,8 @@ class SelectionEngine:
         cfg = self.cfg
         k, _, _ = self.budgets()
         theta_m, theta_a, streak = self._packed_thresholds(g, age, tstate,
-                                                           residual)
+                                                           residual,
+                                                           k_m_frac)
         if cfg.fused_stats:
             # counts AND histograms come out of the kernel itself — the
             # fused launch is the only read of (g, residual) this round
@@ -651,7 +813,8 @@ class SelectionEngine:
     def select_and_merge_tree(self, g_tree, g_prev_tree, age_tree, *,
                               key: Optional[Array] = None,
                               tstate: Optional[Dict[str, Array]] = None,
-                              residual: Optional[Array] = None):
+                              residual: Optional[Array] = None,
+                              k_m_frac=None):
         """Pytree façade over the packed backend: pack (g, g_prev, age),
         run the single fused pass, unpack ``(g_t, age')`` back to the tree
         structure (leaf dtypes from the layout).  Returns
@@ -667,12 +830,13 @@ class SelectionEngine:
         gp = lay.pack(g_prev_tree)
         ag = lay.pack_age(age_tree)
         g_t, age_next, stats = self._packed_update(g, gp, ag, key, tstate,
-                                                   residual)
+                                                   residual,
+                                                   k_m_frac=k_m_frac)
         return lay.unpack(g_t, cast=False), lay.unpack(age_next,
                                                        cast=False), stats
 
     def _sharded_update(self, g, g_prev, age, key, residual=None,
-                        fresh=None, tstate=None):
+                        fresh=None, tstate=None, k_m_frac=None):
         cfg = self.cfg
         mesh = self.mesh
         axes = tuple(mesh.axis_names)
@@ -685,6 +849,12 @@ class SelectionEngine:
                              "exact/threshold/packed backends")
         has_res = residual is not None
         fused = cfg.fused_stats
+        # traced split: the replicated scalar rides into shard_map as an
+        # operand so the per-shard bootstrap sizes its quantiles from the
+        # live value (the warm/global branches consume it outside)
+        dyn_km = k_m_frac is not None
+        kmf_op = (self._km_frac_eff(self._km_traced(k_m_frac)) if dyn_km
+                  else jnp.float32(km_frac))
         # warm sharded rounds: the threshold decision consumes only the
         # carried (replicated) statistics — psum'd per-shard partials from
         # last round — so it runs OUTSIDE shard_map and the historical
@@ -694,9 +864,11 @@ class SelectionEngine:
         use_global = cfg.global_thresholds or cfg.exact_theta
         streak = jnp.float32(0.0)
         if warm:
-            theta_m, theta_a, streak = self._stats_thresholds(tstate)
+            theta_m, theta_a, streak = self._stats_thresholds(tstate,
+                                                              k_m_frac)
         elif use_global:
-            theta_m, theta_a = self.thresholds(g, age, residual=residual)
+            theta_m, theta_a = self.thresholds(g, age, residual=residual,
+                                               k_m_frac=k_m_frac)
         else:
             theta_m = theta_a = jnp.float32(0.0)    # placeholder, unused
         per_shard_boot = not (warm or use_global)
@@ -709,14 +881,15 @@ class SelectionEngine:
         if n_local % stride:
             stride = 1
 
-        def shard_phase(g_l, gp_l, age_l, res_l, tm, ta, key_l):
+        def shard_phase(g_l, gp_l, age_l, res_l, tm, ta, kmf_l, key_l):
             my = 0
             for ax in axes:
                 my = my * mesh.shape[ax] + jax.lax.axis_index(ax)
             score = eff_score(g_l, res_l if has_res else None)
             if per_shard_boot:
                 tm, ta = sampled_thresholds(
-                    score, age_l, rho=rho, k_m_frac=km_frac,
+                    score, age_l, rho=rho,
+                    k_m_frac=kmf_l if dyn_km else km_frac,
                     sample_cap=cfg.sample_cap)
             # jitter hashes GLOBAL coordinate ids (my * n_local offset) so
             # the mask is the one the unsharded backends would compute
@@ -745,14 +918,16 @@ class SelectionEngine:
 
         fn = compat.shard_map(
             shard_phase, mesh,
-            in_specs=(vec, vec, vec, vec if has_res else P(), P(), P(), P()),
+            in_specs=(vec, vec, vec, vec if has_res else P(), P(), P(),
+                      P(), P()),
             out_specs=(vec, vec, vec if has_res else P(), P(),
                        (P(), P(), P())))
         if key is None:
             key = jax.random.PRNGKey(0)
         res_in = residual if has_res else jnp.zeros((), jnp.float32)
         g_t, age_next, res_next, n_sel, part = fn(g, g_prev, age, res_in,
-                                                  theta_m, theta_a, key)
+                                                  theta_m, theta_a, kmf_op,
+                                                  key)
         n_sel_m, mag_hist, age_hist = part
         stats = {"n_selected": n_sel, "k": k}
         if use_global or warm:

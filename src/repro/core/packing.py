@@ -242,8 +242,29 @@ def _tail_cut(hist: Array, target: Array) -> Tuple[Array, Array]:
     return bstar, frac
 
 
+def _hist_theta_m(mag_hist: Array, rho_m) -> Array:
+    """Finite-stage θ_M from the magnitude histogram (log-linear
+    interpolation inside the cut bin; empty histogram -> 0)."""
+    total_m = jnp.sum(mag_hist)
+    b, frac = _tail_cut(mag_hist, rho_m * total_m)
+    log2_lo = (b.astype(jnp.float32)
+               + MAG_LO_OCT * MAG_BINS_PER_OCT) / MAG_BINS_PER_OCT
+    return jnp.where(total_m > 0.0,
+                     jnp.exp2(log2_lo + (1.0 - frac) / MAG_BINS_PER_OCT),
+                     0.0).astype(jnp.float32)
+
+
+def _hist_theta_a(age_hist: Array, rho_a) -> Array:
+    """Finite-stage θ_A from the age histogram (linear inside the unit
+    atom; empty histogram -> 0)."""
+    total_a = jnp.sum(age_hist)
+    b, frac = _tail_cut(age_hist, rho_a * total_a)
+    return jnp.where(total_a > 0.0, b.astype(jnp.float32) + 1.0 - frac,
+                     0.0).astype(jnp.float32)
+
+
 def hist_thresholds(mag_hist: Array, age_hist: Array, *, rho: float,
-                    k_m_frac: float) -> Tuple[Array, Array]:
+                    k_m_frac) -> Tuple[Array, Array]:
     """(θ_M, θ_A) from the in-kernel histograms — the re-estimation path
     that replaces the sampled-quantile bootstrap (zero reads of g).
 
@@ -255,28 +276,25 @@ def hist_thresholds(mag_hist: Array, age_hist: Array, *, rho: float,
     round: nothing has been emitted yet) yields θ = 0 for an active stage
     — a full-refresh round that transmits everything once, after which the
     realised histogram takes over.  Degenerate stage budgets give θ = inf
-    exactly like the sampled path."""
+    exactly like the sampled path.
+
+    ``k_m_frac`` may be a *traced* scalar (the adaptive budget
+    controller): the same estimator with the degenerate-stage
+    short-circuits as ``where``s on data."""
     rho_m = rho * k_m_frac
-    rho_a = (rho - rho_m) / max(1.0 - rho_m, 1e-6)
-    if rho_m > 0.0:
-        total_m = jnp.sum(mag_hist)
-        b, frac = _tail_cut(mag_hist, rho_m * total_m)
-        log2_lo = (b.astype(jnp.float32)
-                   + MAG_LO_OCT * MAG_BINS_PER_OCT) / MAG_BINS_PER_OCT
-        theta_m = jnp.where(total_m > 0.0,
-                            jnp.exp2(log2_lo + (1.0 - frac)
-                                     / MAG_BINS_PER_OCT),
-                            0.0).astype(jnp.float32)
-    else:
-        theta_m = jnp.float32(jnp.inf)
-    if rho_a > 0.0:
-        total_a = jnp.sum(age_hist)
-        b, frac = _tail_cut(age_hist, rho_a * total_a)
-        theta_a = jnp.where(total_a > 0.0,
-                            b.astype(jnp.float32) + 1.0 - frac,
-                            0.0).astype(jnp.float32)
-    else:
-        theta_a = jnp.float32(jnp.inf)
+    if isinstance(rho_m, (int, float)):
+        rho_a = (rho - rho_m) / max(1.0 - rho_m, 1e-6)
+        theta_m = (_hist_theta_m(mag_hist, rho_m) if rho_m > 0.0
+                   else jnp.float32(jnp.inf))
+        theta_a = (_hist_theta_a(age_hist, rho_a) if rho_a > 0.0
+                   else jnp.float32(jnp.inf))
+        return theta_m, theta_a
+    rho_m = jnp.asarray(rho_m, jnp.float32)
+    rho_a = (rho - rho_m) / jnp.maximum(1.0 - rho_m, 1e-6)
+    theta_m = jnp.where(rho_m > 0.0, _hist_theta_m(mag_hist, rho_m),
+                        jnp.inf).astype(jnp.float32)
+    theta_a = jnp.where(rho_a > 0.0, _hist_theta_a(age_hist, rho_a),
+                        jnp.inf).astype(jnp.float32)
     return theta_m, theta_a
 
 
@@ -362,7 +380,7 @@ def layout_matches(layout: "PackedLayout", meta: Dict[str, Any]) -> bool:
     return True
 
 
-def warm_corrected_thresholds(ts: Dict[str, Array], *, k: int, k_m: int,
+def warm_corrected_thresholds(ts: Dict[str, Array], *, k: int, k_m,
                               alpha: float = 0.5, clip: float = 2.0,
                               max_age_step: float = 0.5
                               ) -> Tuple[Array, Array]:
@@ -389,21 +407,45 @@ def warm_corrected_thresholds(ts: Dict[str, Array], *, k: int, k_m: int,
 
     Remark-1 degenerate stages (k_m = 0 or k_a = 0 => theta = inf) pass
     through untouched.
+
+    ``k_m`` may be a *traced* value (the adaptive budget controller):
+    the identical corrections with the degenerate-stage branches as
+    ``where``s on data.
     """
-    k_a = k - k_m
-    if k_m > 0:
-        f_m = jnp.clip((jnp.maximum(ts["n_sel_m"], 1.0) / k_m) ** alpha,
-                       1.0 / clip, clip)
-        theta_m = jnp.where(jnp.isinf(ts["theta_m"]), ts["theta_m"],
-                            ts["theta_m"] * f_m)
-    else:
-        theta_m = jnp.float32(jnp.inf)
-    if k_a > 0:
-        n_a = ts["n_sel"] - ts["n_sel_m"]
-        step = jnp.clip((n_a - k_a) / k_a, -1.0, 1.0) * max_age_step
-        theta_a = jnp.where(jnp.isinf(ts["theta_a"]), ts["theta_a"],
-                            ts["theta_a"] + step)
-    else:
-        theta_a = jnp.float32(jnp.inf)
-    return jnp.asarray(theta_m, jnp.float32), jnp.asarray(theta_a,
-                                                          jnp.float32)
+    if isinstance(k_m, (int, np.integer)):
+        k_a = k - k_m
+        if k_m > 0:
+            f_m = jnp.clip((jnp.maximum(ts["n_sel_m"], 1.0) / k_m) ** alpha,
+                           1.0 / clip, clip)
+            theta_m = jnp.where(jnp.isinf(ts["theta_m"]), ts["theta_m"],
+                                ts["theta_m"] * f_m)
+        else:
+            theta_m = jnp.float32(jnp.inf)
+        if k_a > 0:
+            n_a = ts["n_sel"] - ts["n_sel_m"]
+            step = jnp.clip((n_a - k_a) / k_a, -1.0, 1.0) * max_age_step
+            theta_a = jnp.where(jnp.isinf(ts["theta_a"]), ts["theta_a"],
+                                ts["theta_a"] + step)
+        else:
+            theta_a = jnp.float32(jnp.inf)
+        return jnp.asarray(theta_m, jnp.float32), jnp.asarray(theta_a,
+                                                              jnp.float32)
+    k_m_f = jnp.asarray(k_m, jnp.float32)
+    k_a_f = k - k_m_f
+    f_m = jnp.clip((jnp.maximum(ts["n_sel_m"], 1.0)
+                    / jnp.maximum(k_m_f, 1.0)) ** alpha, 1.0 / clip, clip)
+    theta_m = jnp.where(
+        k_m_f > 0.0,
+        jnp.where(jnp.isinf(ts["theta_m"]), ts["theta_m"],
+                  ts["theta_m"] * f_m),
+        jnp.inf)
+    n_a = ts["n_sel"] - ts["n_sel_m"]
+    step = jnp.clip((n_a - k_a_f) / jnp.maximum(k_a_f, 1.0),
+                    -1.0, 1.0) * max_age_step
+    theta_a = jnp.where(
+        k_a_f > 0.0,
+        jnp.where(jnp.isinf(ts["theta_a"]), ts["theta_a"],
+                  ts["theta_a"] + step),
+        jnp.inf)
+    return (jnp.asarray(theta_m, jnp.float32),
+            jnp.asarray(theta_a, jnp.float32))

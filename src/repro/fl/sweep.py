@@ -9,9 +9,12 @@ simulated OAC-FL server (quadratic heterogeneous clients, Rayleigh fading,
 channel noise) and the whole grid advances round-by-round inside a single
 ``lax.scan``.
 
-The trick that makes the grid vmappable is a *rank-based* FAIR-k: the exact
-policies concatenate top-k index vectors whose lengths are static (``k_m``
-cannot be a traced value), so instead we select by rank —
+The trick that makes the grid vmappable is a *rank-based* FAIR-k
+(``core.engine.fair_k_mask_dynamic`` — the same traced-``k_m`` stage the
+SelectionEngine runs, promoted there so the sweep, the trainer and the
+engine can never drift apart): the exact policies concatenate top-k index
+vectors whose lengths are static (``k_m`` cannot be a traced value), so
+instead we select by rank —
 
     mask_M = rank(|score|)      < k_m          (magnitude stage)
     mask_A = rank(age ⊙ ¬mask_M) < k − k_m     (age stage)
@@ -21,6 +24,11 @@ inputs; ties break toward lower index in both) while ``k_m`` rides in as a
 traced per-lane scalar.  Policy identity also rides in as data: a policy id
 switches the magnitude score between |g| (FAIR-k family) and uniform noise
 (Rand-k family), so fairk / topk / roundrobin / randk all share one program.
+
+``fairk_auto`` lanes close the loop: the in-graph ``BudgetController``
+(core/controller.py) carries its state through the scan and re-derives the
+lane's ``k_m`` every round from the lane's own staleness histogram — the
+adaptive policy is just one more vmapped axis of the same compiled program.
 """
 
 from __future__ import annotations
@@ -33,14 +41,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import controller as budget
+from repro.core.engine import (fair_k_mask_dynamic, rank_desc,  # noqa: F401
+                               traced_km)
+from repro.kernels import ref
+
 Array = jax.Array
 
 # policy ids for the traced policy axis (fairk covers topk at k_m=k and
-# roundrobin at k_m=0 — Remark 1)
+# roundrobin at k_m=0 — Remark 1; fairk_auto is fairk with the adaptive
+# flag raised on its lanes)
 POLICY_FAIRK = 0
 POLICY_RANDK = 1
 SWEEP_POLICIES = {"fairk": POLICY_FAIRK, "topk": POLICY_FAIRK,
-                  "roundrobin": POLICY_FAIRK, "randk": POLICY_RANDK}
+                  "roundrobin": POLICY_FAIRK, "randk": POLICY_RANDK,
+                  "fairk_auto": POLICY_FAIRK}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,40 +79,29 @@ class SweepConfig:
                                    # folds back into the next merge (the
                                    # engine's residual stage, here in the
                                    # vmapped rank-based form)
+    controller: budget.ControllerConfig = budget.ControllerConfig()
+                                   # adaptive-lane control law (fairk_auto)
 
     @property
     def k(self) -> int:
         return max(1, int(round(self.rho * self.d)))
 
 
-def _rank_desc(x: Array) -> Array:
-    """rank[i] = number of entries strictly ranked above x[i] (descending,
-    ties toward lower index — matching ``lax.top_k``)."""
-    d = x.shape[0]
-    order = jnp.argsort(-x, stable=True)
-    return jnp.zeros((d,), jnp.int32).at[order].set(
-        jnp.arange(d, dtype=jnp.int32))
+def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
+               any_adaptive: bool, carry, key, policy_id, k_m, adaptive):
+    """One OAC-FL round for one grid point (pure, vmappable).
 
-
-def fair_k_mask_dynamic(score: Array, age: Array, k: int, k_m: Array
-                        ) -> Array:
-    """Rank-based FAIR-k (Eq. 11) with a *traced* magnitude budget ``k_m``.
-
-    Returns a float32 mask with exactly ``k`` ones.  ``score`` is the
-    magnitude-stage statistic (|g| for FAIR-k, random for Rand-k)."""
-    d = score.shape[0]
-    mask_m = (_rank_desc(score) < k_m)
-    # age stage on the complement; -1 can never win (ages are >= 0) and the
-    # index tie-break mirrors lax.top_k via the stable argsort
-    age_rest = jnp.where(mask_m, -1.0, age.astype(jnp.float32))
-    mask_a = _rank_desc(age_rest) < (k - k_m)
-    return (mask_m | mask_a).astype(jnp.float32)
-
-
-def _one_round(cfg: SweepConfig, carry, key, policy_id, k_m):
-    """One OAC-FL round for one grid point (pure, vmappable)."""
-    w, g_prev, age, res, w_stars = carry
+    ``any_adaptive`` is STATIC (does the grid contain fairk_auto lanes at
+    all?): purely static grids trace no histogram/controller work.  The
+    per-lane ``adaptive`` flag is data — within a mixed grid every lane
+    runs the same program and static lanes gate the controller out."""
+    w, g_prev, age, res, cs, w_stars = carry
     key_pol, key_h, key_z = jax.random.split(key, 3)
+    # adaptive lanes re-derive the split from their carried controller
+    # state; static lanes keep the grid's k_m
+    k_m_eff = (jnp.where(adaptive > 0, traced_km(cfg.k, cs["k_m_frac"]),
+                         k_m)
+               if any_adaptive else k_m)
     # H closed-form local SGD steps on f_n(w) = 0.5 ||w - w*_n||^2:
     #   w_H = w*_n + (1 - eta_l)^H (w - w*_n);  accumulated grad (Eq. 5)
     shrink = (1.0 - (1.0 - cfg.local_lr) ** cfg.local_steps) / cfg.local_lr
@@ -106,7 +110,7 @@ def _one_round(cfg: SweepConfig, carry, key, policy_id, k_m):
     score = jnp.where(policy_id == POLICY_RANDK,
                       jax.random.uniform(key_pol, (cfg.d,)),
                       jnp.abs(g_prev))
-    mask = fair_k_mask_dynamic(score, age, cfg.k, k_m)
+    mask = fair_k_mask_dynamic(score, age, cfg.k, k_m_eff)
     # OAC uplink (Eq. 7): fading superposition + channel noise on the
     # selected coordinates only
     h = jax.random.rayleigh(key_h, cfg.fading_mean / np.sqrt(np.pi / 2.0),
@@ -124,20 +128,32 @@ def _one_round(cfg: SweepConfig, carry, key, policy_id, k_m):
     g_t = mask * (agg + noise) + (1.0 - mask) * g_prev
     w_next = w - cfg.global_lr * g_t
     age_next = (age + 1.0) * (1.0 - mask)
+    # controller step (adaptive lanes only — gated per field so static
+    # lanes carry their state untouched through the scan; no mag_hist:
+    # mag_ema tracks the kernel-emitted |score| histogram only)
+    if any_adaptive:
+        _, age_hist = ref.strided_hists_ref(
+            g_t, age_next, jnp.ones((cfg.d,), bool), 1)
+        cs_new = ctrl.update(cs, age_hist)
+        cs = jax.tree.map(lambda new, old: jnp.where(adaptive > 0, new,
+                                                     old), cs_new, cs)
     loss = 0.5 * jnp.mean(jnp.sum((w_next[None, :] - w_stars) ** 2, axis=1))
     metrics = {"loss": loss, "mean_age": age_next.mean(),
                "max_age": age_next.max(), "frac_fresh": mask.mean(),
-               "res_norm": jnp.abs(res).mean()}
-    return (w_next, g_t, age_next, res, w_stars), metrics
+               "res_norm": jnp.abs(res).mean(),
+               "km_frac": k_m_eff.astype(jnp.float32) / cfg.k}
+    return (w_next, g_t, age_next, res, cs, w_stars), metrics
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg", "any_adaptive"))
 def _run_grid(cfg: SweepConfig, seeds: Array, policy_ids: Array,
-              k_ms: Array) -> Dict[str, Array]:
+              k_ms: Array, adaptives: Array, any_adaptive: bool = False
+              ) -> Dict[str, Array]:
     """All grid points, one compiled program: scan over rounds, vmap over
     the flattened (policy, k_m, seed) grid."""
+    ctrl = budget.BudgetController(cfg.controller, rho=cfg.rho)
 
-    def one_sim(seed, policy_id, k_m):
+    def one_sim(seed, policy_id, k_m, adaptive):
         key0 = jax.random.PRNGKey(seed)
         key_shared, key_init, key_run = jax.random.split(key0, 3)
         # client optima = common signal (learnable from w_0 = 0) + non-IID
@@ -149,24 +165,30 @@ def _run_grid(cfg: SweepConfig, seeds: Array, policy_ids: Array,
         carry = (jnp.zeros((cfg.d,), jnp.float32),
                  jnp.zeros((cfg.d,), jnp.float32),
                  jnp.zeros((cfg.d,), jnp.float32),
-                 jnp.zeros((cfg.d,), jnp.float32), w_stars)
+                 jnp.zeros((cfg.d,), jnp.float32),
+                 budget.init_controller_state(
+                     k_m.astype(jnp.float32) / cfg.k),
+                 w_stars)
 
         def round_body(c, key):
-            return _one_round(cfg, c, key, policy_id, k_m)
+            return _one_round(cfg, ctrl, any_adaptive, c, key, policy_id,
+                              k_m, adaptive)
 
         _, metrics = jax.lax.scan(round_body, carry,
                                   jax.random.split(key_run, cfg.rounds))
         return metrics                                    # (rounds,) leaves
 
-    return jax.vmap(one_sim)(seeds, policy_ids, k_ms)
+    return jax.vmap(one_sim)(seeds, policy_ids, k_ms, adaptives)
 
 
 def sweep_grid(policies: Sequence[str], k_m_fracs: Sequence[float],
                n_seeds: int, cfg: SweepConfig
-               ) -> Tuple[Array, Array, Array, list]:
+               ) -> Tuple[Array, Array, Array, Array, list]:
     """Flatten (policy × k_m_frac × seed) into the vmapped grid arrays.
 
-    ``topk`` / ``roundrobin`` override the k_m axis to k / 0 (Remark 1)."""
+    ``topk`` / ``roundrobin`` override the k_m axis to k / 0 (Remark 1);
+    ``fairk_auto`` lanes raise the adaptive flag (their k_m axis is the
+    controller's INITIAL split)."""
     combos = []
     for pol in policies:
         if pol not in SWEEP_POLICIES:
@@ -182,15 +204,17 @@ def sweep_grid(policies: Sequence[str], k_m_fracs: Sequence[float],
         for frac in fracs:
             if (pol, frac) not in combos:
                 combos.append((pol, frac))
-    seeds, pids, kms, labels = [], [], [], []
+    seeds, pids, kms, adaptives, labels = [], [], [], [], []
     for pol, frac in combos:
         for s in range(n_seeds):
             seeds.append(s)
             pids.append(SWEEP_POLICIES[pol])
             kms.append(int(round(frac * cfg.k)))
+            adaptives.append(1 if pol == "fairk_auto" else 0)
             labels.append((pol, frac, s))
     return (jnp.asarray(seeds, jnp.int32), jnp.asarray(pids, jnp.int32),
-            jnp.asarray(kms, jnp.int32), labels)
+            jnp.asarray(kms, jnp.int32), jnp.asarray(adaptives, jnp.int32),
+            labels)
 
 
 def run_sweep(cfg: SweepConfig, policies: Sequence[str] = ("fairk",),
@@ -198,8 +222,10 @@ def run_sweep(cfg: SweepConfig, policies: Sequence[str] = ("fairk",),
               ) -> Dict[str, np.ndarray]:
     """Execute the grid; returns per-grid-point per-round metric arrays of
     shape (n_grid, rounds) plus the grid labels."""
-    seeds, pids, kms, labels = sweep_grid(policies, k_m_fracs, n_seeds, cfg)
-    metrics = _run_grid(cfg, seeds, pids, kms)
+    seeds, pids, kms, adaptives, labels = sweep_grid(policies, k_m_fracs,
+                                                     n_seeds, cfg)
+    metrics = _run_grid(cfg, seeds, pids, kms, adaptives,
+                        any_adaptive=bool(int(adaptives.sum())))
     out = {name: np.asarray(v) for name, v in metrics.items()}
     out["labels"] = labels
     return out

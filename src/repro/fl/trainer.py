@@ -23,11 +23,13 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 import numpy as np
 
-from repro.core import oac, packing, quantize
+from repro.core import controller as budget, oac, packing, quantize
 from repro.core.aou import update_age_by_indices
-from repro.core.engine import EngineConfig, SelectionEngine, index_jitter
+from repro.core.engine import (EngineConfig, SelectionEngine,
+                               fair_k_masks_dynamic, index_jitter,
+                               traced_km)
 from repro.core.oac import ChannelConfig
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
 Array = jax.Array
 SDS = jax.ShapeDtypeStruct
@@ -69,7 +71,18 @@ class FLConfig:
                                     # packed: server-side — the residual
                                     # stage of the fused fairk_ef_update
                                     # kernel, one HBM pass
+    adaptive_km: bool = False       # in-graph budget controller
+                                    # (core/controller.py): k_m_frac adapts
+                                    # online from the kernel-emitted age
+                                    # histogram INSIDE the compiled round —
+                                    # zero host syncs, zero recompiles.
+                                    # policy="fairk_auto" is an alias.
+    controller: budget.ControllerConfig = budget.ControllerConfig()
     seed: int = 0
+
+    @property
+    def adaptive(self) -> bool:
+        return self.adaptive_km or self.policy == "fairk_auto"
 
     def budgets(self, d: int, k_m_frac: Optional[float] = None
                 ) -> Tuple[int, int, int]:
@@ -95,6 +108,7 @@ class ServerState:
     sel_count: Array                # per-entry participation counter (Fig. 5b)
     residual: Array = None          # EF accumulator (d,)
     theta: Dict[str, Array] = None  # packing.init_threshold_state()
+    ctrl: Dict[str, Array] = None   # budget.init_controller_state()
     round: int = 0
 
 
@@ -103,12 +117,29 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
     """Build the jitted one-round function.
 
     ``loss_fn(params, x, y) -> scalar`` is the per-client loss; client data
-    arrives as stacked arrays (N, H, B, ...)."""
+    arrives as stacked arrays (N, H, B, ...).
+
+    With ``fl.adaptive`` (``adaptive_km=True`` or the ``fairk_auto``
+    policy alias) the magnitude split rides as a traced value from the
+    carried controller state, and the in-graph ``BudgetController``
+    update runs at the end of the same compiled round — the historical
+    host-side Gini path (full-gradient device sync every 10 rounds + one
+    recompiled step per discrete k_M level) is gone."""
     k, k_m, r = fl.budgets(d, k_m_frac)
     grad_fn = jax.grad(loss_fn)
     if fl.backend not in ("exact", "threshold", "packed"):
         raise ValueError(f"FLConfig.backend must be exact|threshold|packed, "
                          f"got {fl.backend!r}")
+    adaptive = fl.adaptive
+    if adaptive and fl.policy not in ("fairk", "fairk_auto"):
+        raise ValueError("adaptive_km moves the FAIR-k split — policy "
+                         f"{fl.policy!r} pins or ignores it")
+    bctrl = (budget.BudgetController(fl.controller,
+                                     rho=fl.compression_ratio)
+             if adaptive else None)
+    # the realised static split (Remark-1 policies pin it: topk -> 1,
+    # roundrobin -> 0) — what the km_frac telemetry records
+    frac_static = jnp.float32(k_m / k if k else 0.0)
 
     def client_update(w_flat: Array, xs: Array, ys: Array) -> Array:
         """H local SGD steps; returns the accumulated gradient (Eq. 5)."""
@@ -144,12 +175,19 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                      warm_start=(fl.backend == "packed")), d,
         layout=layout)
 
+    def _round_metrics(age_next: Array, kmf) -> Dict[str, Array]:
+        """On-device per-round telemetry — the trainer loop accumulates
+        these WITHOUT materialising them (no per-round host sync)."""
+        return {"mean_aou": age_next.mean(), "max_aou": age_next.max(),
+                "km_frac": jnp.asarray(kmf, jnp.float32)}
+
     @jax.jit
     def fl_round(key: Array, w: Array, g_prev: Array, age: Array,
                  sel_count: Array, xs: Array, ys: Array, residual: Array,
-                 tstate):
+                 tstate, cstate):
         key_sel, key_ch = jax.random.split(key)
         grads = clients(w, xs, ys)                       # (N, d)
+        kmf = cstate["k_m_frac"] if adaptive else None
         if fl.backend in ("threshold", "packed"):
             ts = tstate if fl.backend == "packed" else None
             if fl.one_bit:
@@ -178,7 +216,8 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                 # Knuth hash the kernels use)
                 score = jnp.abs(energy) + index_jitter(d)
                 g_t, age_next, stats = engine.select_and_merge(
-                    score, g_prev, age, fresh=fresh_sign, tstate=ts)
+                    score, g_prev, age, fresh=fresh_sign, tstate=ts,
+                    k_m_frac=kmf)
                 sel_mask = (age_next == 0.0).astype(jnp.float32)
                 if fl.error_feedback:
                     # unsent mass of the mean effective gradient — the same
@@ -197,15 +236,32 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                 fresh = jnp.einsum("n,nd->d", h, grads) / fl.n_clients
                 g_t, age_next, stats = engine.select_and_merge(
                     fresh, g_prev, age, key=key_ch, tstate=ts,
-                    residual=residual if fl.error_feedback else None)
+                    residual=residual if fl.error_feedback else None,
+                    k_m_frac=kmf)
                 sel_mask = (age_next == 0.0).astype(jnp.float32)
                 if fl.error_feedback:
                     residual = stats["residual"]
             w_next = w - fl.global_lr * g_t              # Eq. (9)
             sel_count = sel_count + sel_mask
+            if adaptive:
+                # the controller consumes the histograms the fused pass
+                # already emitted (fused_stats is on for these backends)
+                cstate = bctrl.update(cstate, stats["age_hist"],
+                                      stats["mag_hist"])
             return (w_next, g_t, age_next, sel_count, residual, sel_mask,
-                    stats.get("tstate", tstate))
-        idx = engine.select(key_sel, g_prev, age)        # Eq. (11)
+                    stats.get("tstate", tstate), cstate,
+                    _round_metrics(age_next,
+                                   kmf if adaptive else frac_static))
+        if adaptive:
+            # traced split on the exact path: rank-based FAIR-k (same
+            # coordinate set as the index form, incl. the toward-lower-
+            # index tie-break), indices recovered at the static size k
+            mask_dyn, _ = fair_k_masks_dynamic(jnp.abs(g_prev), age, k,
+                                               traced_km(k, kmf))
+            idx = jnp.nonzero(mask_dyn, size=k, fill_value=0)[0]
+            idx = idx.astype(jnp.int32)
+        else:
+            idx = engine.select(key_sel, g_prev, age)    # Eq. (11)
         sel_mask = jnp.zeros((d,), jnp.float32).at[idx].set(1.0)
         if fl.error_feedback:
             # add back last round's unsent mass; shared mask => the residual
@@ -221,14 +277,25 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
         w_next = w - fl.global_lr * g_t                  # Eq. (9)
         age_next = update_age_by_indices(age, idx)       # Eq. (10)
         sel_count = sel_count.at[idx].add(1.0)
+        if adaptive:
+            # the exact path has no kernel, so the staleness histogram
+            # comes from the same jnp helper the kernel oracle uses (no
+            # mag_hist: the controller's mag_ema tracks the KERNEL'S
+            # |score| histogram only — see core/controller.py)
+            _, age_hist = ref.strided_hists_ref(
+                g_t, age_next, age >= 0.0, packing.hist_stride(d))
+            cstate = bctrl.update(cstate, age_hist)
         # sel_mask is the dense selection mask on ALL backends, so callers
         # can swap backends without changing what they consume
-        return w_next, g_t, age_next, sel_count, residual, sel_mask, tstate
+        return (w_next, g_t, age_next, sel_count, residual, sel_mask,
+                tstate, cstate,
+                _round_metrics(age_next, kmf if adaptive else frac_static))
 
     return fl_round
 
 
-def init_server(init_params: Any) -> Tuple[ServerState, Callable]:
+def init_server(init_params: Any, fl: Optional[FLConfig] = None
+                ) -> Tuple[ServerState, Callable]:
     flat, unravel = ravel_pytree(init_params)
     d = flat.shape[0]
     state = ServerState(
@@ -238,31 +305,10 @@ def init_server(init_params: Any) -> Tuple[ServerState, Callable]:
         sel_count=jnp.zeros((d,), jnp.float32),
         residual=jnp.zeros((d,), jnp.float32),
         theta=packing.init_threshold_state(),
+        ctrl=budget.init_controller_state(
+            fl.k_m_frac if fl is not None else 0.75),
     )
     return state, unravel
-
-
-def gradient_gini(g: np.ndarray) -> float:
-    """Concentration of |g| (0 = uniform, 1 = one coordinate has all mass)."""
-    mags = np.sort(np.abs(np.asarray(g, np.float64)))
-    total = mags.sum()
-    if total <= 0:
-        return 0.0
-    lorenz = np.cumsum(mags) / total
-    return float(1.0 - 2.0 * lorenz.mean())
-
-
-AUTO_KM_LEVELS = (0.25, 0.5, 0.75)
-
-
-def _auto_km_level(gini: float) -> float:
-    """Beyond-paper FAIR-k-auto: heavy-tailed gradients (high Gini) reward
-    magnitude selection; flat spectra reward freshness."""
-    if gini > 0.75:
-        return 0.75
-    if gini > 0.55:
-        return 0.5
-    return 0.25
 
 
 def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
@@ -277,37 +323,32 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
       eval_fn(params) -> dict of metrics (e.g. test accuracy).
     Returns a history dict (accuracy curve, mean AoU, selection counts...).
     """
-    state, unravel = init_server(init_params)
+    state, unravel = init_server(init_params, fl)
     d = state.w.shape[0]
-    auto = fl.policy == "fairk_auto"
-    steps = {}
-
-    def get_step(frac):
-        if frac not in steps:
-            steps[frac] = make_fl_step(fl, unravel, loss_fn, d,
-                                       k_m_frac=frac)
-        return steps[frac]
-
-    fl_step = get_step(fl.k_m_frac)
+    # ONE compiled step for the whole run: with fl.adaptive (incl. the
+    # fairk_auto alias) the k_M split rides as traced controller state, so
+    # adaptation never recompiles — the historical per-level step cache
+    # and its host-side Gini sync are gone
+    fl_step = make_fl_step(fl, unravel, loss_fn, d)
     key = jax.random.PRNGKey(fl.seed)
 
-    history: Dict[str, Any] = {"round": [], "acc": [], "mean_aou": [],
-                               "max_aou": [], "k": fl.budgets(d)[0], "d": d}
+    history: Dict[str, Any] = {"round": [], "acc": [],
+                               "k": fl.budgets(d)[0], "d": d}
     w, g, age, sel_count = state.w, state.g, state.age, state.sel_count
-    residual, tstate = state.residual, state.theta
-    history["km_frac"] = []
+    residual, tstate, cstate = state.residual, state.theta, state.ctrl
+    # per-round telemetry accumulates as DEVICE scalars and materialises
+    # in one transfer after the loop — float(age.mean()) et al. used to
+    # block on the device every round
+    mean_aou, max_aou, km_frac = [], [], []
     for t in range(fl.rounds):
         key, sub = jax.random.split(key)
         xs, ys = sample_round(t)
-        if auto and t > 0 and t % 10 == 0:
-            fl_step = get_step(_auto_km_level(gradient_gini(g)))
-        history["km_frac"].append(
-            [f for f, st in steps.items() if st is fl_step][0])
-        w, g, age, sel_count, residual, _, tstate = fl_step(
+        w, g, age, sel_count, residual, _, tstate, cstate, rm = fl_step(
             sub, w, g, age, sel_count, jnp.asarray(xs), jnp.asarray(ys),
-            residual, tstate)
-        history["mean_aou"].append(float(age.mean()))
-        history["max_aou"].append(float(age.max()))
+            residual, tstate, cstate)
+        mean_aou.append(rm["mean_aou"])
+        max_aou.append(rm["max_aou"])
+        km_frac.append(rm["km_frac"])
         if eval_fn is not None and ((t + 1) % eval_every == 0 or t == 0
                                     or t == fl.rounds - 1):
             metrics = eval_fn(unravel(w))
@@ -315,7 +356,13 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
             history["acc"].append(float(metrics.get("acc", np.nan)))
             if verbose:
                 print(f"  round {t+1:4d}  acc={history['acc'][-1]:.4f}  "
-                      f"meanAoU={history['mean_aou'][-1]:.2f}", flush=True)
+                      f"meanAoU={float(rm['mean_aou']):.2f}", flush=True)
+    history["mean_aou"] = (np.asarray(jnp.stack(mean_aou)).tolist()
+                           if mean_aou else [])
+    history["max_aou"] = (np.asarray(jnp.stack(max_aou)).tolist()
+                          if max_aou else [])
+    history["km_frac"] = (np.asarray(jnp.stack(km_frac)).tolist()
+                          if km_frac else [])
     history["sel_count"] = np.asarray(sel_count)
     history["final_age"] = np.asarray(age)
     history["params"] = unravel(w)

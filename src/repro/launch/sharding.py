@@ -131,19 +131,23 @@ def opt_pspecs(opt_state: Any, p_specs: Any) -> Any:
 
 
 def server_pspecs(p_specs: Any, mesh=None, packed: bool = False,
-                  error_feedback: bool = False) -> Any:
+                  error_feedback: bool = False,
+                  adaptive_km: bool = False) -> Any:
     """OAC server state specs.
 
     Packed flavour: the persisted lane-aligned flat buffers shard their
     single dimension across ALL mesh axes (each shard owns its local
     ``d_packed`` slice — exactly what ``shard_map`` hands the fused pass);
-    the warm-start threshold state vector is replicated (pmean-consistent
+    the warm-start threshold state vector — and, with ``adaptive_km``,
+    the budget-controller state vector — is replicated (pmean-consistent
     across shards).  Per-leaf flavour: {g, age} mirror parameter sharding."""
     if packed:
         vec = P(tuple(mesh.axis_names))
         out = {"g": vec, "age": vec, "theta": P()}
         if error_feedback:
             out["res"] = vec
+        if adaptive_km:
+            out["ctrl"] = P()
         return out
     return {"g": p_specs, "age": p_specs, "theta": P()}
 

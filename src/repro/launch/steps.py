@@ -40,6 +40,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import InputShape, ModelConfig
+from repro.core import controller as budget
 from repro.core import packing
 from repro.core.engine import (AGE_CAP, EngineConfig, SelectionEngine,
                                sampled_thresholds, threshold_mask)
@@ -83,6 +84,16 @@ class OacServerConfig:
                                    # next step (EF-SGD): a persisted flat
                                    # f32 residual buffer rides the fused
                                    # kernel's residual stage (packed only)
+    adaptive_km: bool = False      # in-graph adaptive k_M/k split
+                                   # (core/controller.py): the controller
+                                   # state rides in the server state as a
+                                   # replicated flat vector, the engine
+                                   # consumes the split as a traced value,
+                                   # and the update runs INSIDE the
+                                   # compiled step off the kernel-emitted
+                                   # age/magnitude histograms — zero host
+                                   # syncs, zero recompiles across split
+                                   # changes (packed + fused_stats only)
     one_bit: bool = False          # one-bit uplink for the server phase:
                                    # the merged fresh values are the SIGNS
                                    # of the effective gradient, detected by
@@ -269,6 +280,9 @@ def init_server_state(params: Any, mesh=None, cfg: ModelConfig = None,
         }
         if oac.error_feedback:
             state["res"] = jnp.zeros((n * lay.d_packed,), jnp.float32)
+        if oac.adaptive_km:
+            state["ctrl"] = budget.controller_state_to_vec(
+                budget.init_controller_state(oac.k_m_frac))
         return state
     return {
         "g": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
@@ -287,6 +301,9 @@ def abstract_server_state(params_abs: Any, mesh=None, p_specs: Any = None,
                               jnp.float32)}
         if oac.error_feedback:
             state["res"] = SDS((d,), jnp.float32)
+        if oac.adaptive_km:
+            state["ctrl"] = SDS((budget.CONTROLLER_STATE_SIZE,),
+                                jnp.float32)
         return state
     return {
         "g": jax.tree.map(lambda p: SDS(p.shape, jnp.bfloat16), params_abs),
@@ -329,12 +346,18 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
     if oac is not None and oac.one_bit and not oac.packed:
         raise ValueError("one_bit needs the packed server phase (the sign "
                          "vector is detected on the flat packed buffer)")
+    if oac is not None and oac.adaptive_km and not (oac.packed
+                                                    and oac.fused_stats):
+        raise ValueError("adaptive_km consumes the kernel-emitted age/"
+                         "magnitude histograms — it needs the packed "
+                         "server phase with fused_stats")
     srv_abs = abstract_server_state(params_abs, mesh=mesh, p_specs=p_specs,
                                     oac=oac)
     srv_specs = shlib.server_pspecs(
         p_specs, mesh=mesh,
         packed=(oac is not None and oac.packed),
-        error_feedback=(oac is not None and oac.error_feedback))
+        error_feedback=(oac is not None and oac.error_feedback),
+        adaptive_km=(oac is not None and oac.adaptive_km))
     b_specs = _batch_pspecs(cfg, mb, mesh, micro=True)
     in_specs_batch = train_input_specs(cfg, shape, n_micro, mb)
 
@@ -358,6 +381,10 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
     if oac is not None:
         oac = dataclasses.replace(oac, n_clients=n_shards)
         mesh_axes = tuple(mesh.axis_names)
+        # adaptive split: one controller per step builder — the Lemma-1
+        # target table is static data baked at build time
+        bctrl = (budget.BudgetController(rho=oac.rho)
+                 if oac.adaptive_km else None)
 
         def _shard_noise_key(seed):
             """Per-shard channel-noise key: fold the round seed by the
@@ -396,6 +423,13 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                              reduce_axes=mesh_axes),
                 layout.d_packed, layout=layout)
             tstate = packing.threshold_state_from_vec(server["theta"])
+            cstate = kmf = None
+            if oac.adaptive_km:
+                # the live split comes off the carried controller state —
+                # replicated across shards (its inputs are the pmean'd
+                # histograms, so every shard computes the same successor)
+                cstate = budget.controller_state_from_vec(server["ctrl"])
+                kmf = cstate["k_m_frac"]
             key = _shard_noise_key(seed) if oac.noise_std > 0.0 else None
             g_flat = layout.pack(grads)            # the ONLY pack per step
             fresh = None
@@ -423,7 +457,7 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                 key = None
             g_t, age_next, stats = eng.select_and_merge(
                 g_flat, server["g"], server["age"], key=key, tstate=tstate,
-                residual=server.get("res"), fresh=fresh)
+                residual=server.get("res"), fresh=fresh, k_m_frac=kmf)
             new_server = {
                 "g": g_t.astype(jnp.bfloat16),
                 "age": age_next.astype(jnp.int8),
@@ -431,6 +465,12 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
             }
             if "res" in server:
                 new_server["res"] = stats["residual"]
+            if oac.adaptive_km:
+                # in-graph controller step off the (pmean'd) kernel
+                # histograms — the same compiled program at every split
+                cstate = bctrl.update(cstate, stats["age_hist"],
+                                      stats["mag_hist"])
+                new_server["ctrl"] = budget.controller_state_to_vec(cstate)
             # the optimizer consumes per-leaf trees: ONE unpack per step
             return layout.unpack(g_t, cast=False), new_server
 
@@ -524,6 +564,8 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         "oac_fused_stats": bool(oac.fused_stats) if oac is not None
         else False,
         "oac_one_bit": bool(oac.one_bit) if oac is not None else False,
+        "oac_adaptive_km": bool(oac.adaptive_km) if oac is not None
+        else False,
         "optimizer": opt_name or cfg.optimizer, "lr": lr,
         "gather_dtype": gather_dtype,
         "scans": {"microbatch": n_micro, "layers": cfg.n_scan_blocks},

@@ -5,21 +5,33 @@ Runs real steps (reduced configs on this host's devices) or, with
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b --reduced \
       --steps 20 --policy fairk
+
+Checkpointing (packed server phase): ``--ckpt-every N`` saves the
+persisted flat server buffers (incl. the warm-start theta vector and the
+adaptive-``k_M`` controller state) every N steps via
+``repro.checkpoint.save_server_state``; a SIGTERM lands one final save
+before the loop exits; ``--resume`` restores the latest checkpoint from
+``--ckpt-dir`` and continues at the following step.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import signal
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint
 from repro.configs import ARCHS, SHAPES, get_config
 from repro.configs.base import InputShape
 from repro.data.tokens import lm_batch
-from repro.launch.steps import OacServerConfig, init_server_state, make_train_step
+from repro.launch import sharding as shlib
+from repro.launch.steps import (OacServerConfig, init_server_state,
+                                make_train_step, server_layout)
 from repro.models import transformer as tr
 
 
@@ -50,6 +62,21 @@ def main():
                     help="disable the fused in-kernel selection statistics "
                          "(restores the two-pass count accounting + "
                          "sampled-quantile bootstrap)")
+    ap.add_argument("--adaptive-km", action="store_true",
+                    help="adapt the k_M/k split online INSIDE the compiled "
+                         "step (core/controller.py: the kernel-emitted age "
+                         "histogram drives a traced split — zero host "
+                         "syncs, zero recompiles; packed server phase "
+                         "only)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save the packed server state every N steps "
+                         "(0 = off; a SIGTERM always lands one final "
+                         "save when > 0)")
+    ap.add_argument("--ckpt-dir", default="checkpoints",
+                    help="directory for server_<step>.npz checkpoints")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest server checkpoint from "
+                         "--ckpt-dir and continue at the next step")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -59,7 +86,8 @@ def main():
     shape = InputShape("custom", args.seq, args.batch, "train")
     oac = (OacServerConfig(rho=args.rho, packed=not args.per_leaf_server,
                            error_feedback=args.ef, one_bit=args.one_bit,
-                           fused_stats=not args.legacy_stats)
+                           fused_stats=not args.legacy_stats,
+                           adaptive_km=args.adaptive_km)
            if args.oac else None)
     bundle = make_train_step(cfg, shape, mesh, n_micro=1, oac=oac, lr=1e-3)
 
@@ -70,14 +98,82 @@ def main():
     opt_state = opt.init(params)
     server = init_server_state(params, mesh=mesh, cfg=cfg, oac=oac)
 
+    # checkpointing (packed server state only: the flat persisted buffers
+    # ARE the cross-step state worth resuming; params/opt ride the generic
+    # repro.checkpoint.save when needed)
+    ckpt_on = args.ckpt_every > 0 or args.resume
+    if ckpt_on and (oac is None or not oac.packed):
+        raise ValueError("--ckpt-every/--resume checkpoint the PACKED "
+                         "server buffers — they need --oac and are "
+                         "incompatible with --per-leaf-server")
+    layout = (server_layout(params, shlib.param_pspecs(params, cfg, mesh),
+                            mesh) if ckpt_on else None)
+    start = 0
+    if args.resume:
+        last = checkpoint.latest_server_step(args.ckpt_dir)
+        if last is None:
+            # legitimate on the FIRST launch of a preemptible job, but
+            # never silent: a mistyped --ckpt-dir must not masquerade as
+            # a continued trajectory
+            print(f"[train] --resume: no server checkpoint under "
+                  f"{args.ckpt_dir!r} — starting fresh at step 0",
+                  flush=True)
+        else:
+            srv_np, _ = checkpoint.restore_server_state(
+                os.path.join(args.ckpt_dir, f"server_{last:08d}.npz"),
+                layout=layout)
+            if set(srv_np) != set(server):
+                raise ValueError(
+                    f"checkpoint fields {sorted(srv_np)} do not match the "
+                    f"configured server state {sorted(server)} — resume "
+                    "with the same --ef/--one-bit/--adaptive-km flags")
+            server = {k: jnp.asarray(v) for k, v in srv_np.items()}
+            # the server buffers describe the OLD model's gradient stream
+            # — resuming them onto re-randomized weights would merge a
+            # stale trajectory into a fresh one, so params/opt ride the
+            # same checkpoint step (step_<N>.npz, generic pytree format)
+            step_path = os.path.join(args.ckpt_dir, f"step_{last:08d}.npz")
+            if not os.path.exists(step_path):
+                raise ValueError(
+                    f"{args.ckpt_dir} holds server_{last:08d}.npz but no "
+                    f"matching step_{last:08d}.npz (params/optimizer) — "
+                    "cannot resume the training trajectory")
+            tree = checkpoint.restore(step_path,
+                                      like={"params": params,
+                                            "opt": opt_state})
+            params = jax.tree.map(jnp.asarray, tree["params"])
+            opt_state = jax.tree.map(jnp.asarray, tree["opt"])
+            start = last
+            print(f"[train] resumed server + params/opt state from step "
+                  f"{last} ({args.ckpt_dir})")
+
+    # a SIGTERM (preemption) finishes the in-flight step, saves once, and
+    # exits the loop cleanly
+    stop = {"sig": False}
+
+    def _on_term(signum, frame):
+        stop["sig"] = True
+
+    signal.signal(signal.SIGTERM, _on_term)
+
+    def save(step):
+        path = checkpoint.save_server_state(args.ckpt_dir, server,
+                                            layout=layout, step=step)
+        # params/opt accompany every server checkpoint (closure reads the
+        # loop's latest bindings) so --resume continues ONE trajectory
+        checkpoint.save(args.ckpt_dir, {"params": params,
+                                        "opt": opt_state}, step=step)
+        print(f"  [ckpt] saved {path} (+ step_{step:08d}.npz)", flush=True)
+
     # donate (params, opt_state, server): the persisted packed server
-    # buffers (flat g_prev bf16 / age int8 / EF residual f32) are consumed
-    # and rebuilt every step — donation makes the update fully in place
+    # buffers (flat g_prev bf16 / age int8 / EF residual f32 / controller
+    # vec) are consumed and rebuilt every step — donation makes the
+    # update fully in place
     step_fn = jax.jit(bundle.fn, donate_argnums=(0, 1, 2))
     print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M-param family "
           f"variant, {args.steps} steps, oac={'on' if args.oac else 'off'}")
     with mesh:
-        for t in range(args.steps):
+        for t in range(start, start + args.steps):
             toks, labels = lm_batch(args.seed * 1000 + t, args.batch,
                                     args.seq, cfg.vocab)
             batch = {"tokens": jnp.asarray(toks)[None],
@@ -95,6 +191,14 @@ def main():
                 params, opt_state, server, batch, jnp.asarray(t, jnp.int32))
             print(f"  step {t:3d} loss {float(loss):.4f} "
                   f"({time.time()-t0:.2f}s)", flush=True)
+            if ckpt_on and args.ckpt_every > 0 and (
+                    (t + 1 - start) % args.ckpt_every == 0):
+                save(t + 1)
+            if stop["sig"]:
+                if ckpt_on:
+                    save(t + 1)
+                print("[train] SIGTERM — state saved, exiting", flush=True)
+                break
     print("[train] done")
 
 

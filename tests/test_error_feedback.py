@@ -273,11 +273,13 @@ class TestFLRegression:
         fl = FLConfig(n_clients=6, local_steps=2, batch_size=4, rounds=1,
                       backend=backend, one_bit=one_bit, error_feedback=ef,
                       compression_ratio=0.2)
+        from repro.core import controller as budget
         step = make_fl_step(fl, unravel, loss_fn, d)
         z = jnp.zeros((d,), jnp.float32)
-        w, g, age, cnt, res, mask, ts = step(
+        w, g, age, cnt, res, mask, ts, cs, rm = step(
             jax.random.PRNGKey(0), flat, z, z, z, jnp.asarray(xs),
-            jnp.asarray(ys), z, pk.init_threshold_state())
+            jnp.asarray(ys), z, pk.init_threshold_state(),
+            budget.init_controller_state())
         assert np.isfinite(np.asarray(w)).all()
         assert float(mask.sum()) > 0
         if ef:

@@ -472,6 +472,31 @@ class TestLaunchIntegration:
         assert set(np.unique(g[sel])) <= {-1.0, 1.0}
         assert float(np.abs(np.asarray(server["res"])).sum()) > 0.0
 
+    def test_adaptive_km_update_phase(self):
+        from repro.core import controller
+        from repro.launch.steps import OacServerConfig
+        server, loss = self._run_steps(OacServerConfig(adaptive_km=True),
+                                       n=4)
+        assert np.isfinite(loss)
+        assert server["ctrl"].shape == (controller.CONTROLLER_STATE_SIZE,)
+        cs = controller.controller_state_from_vec(
+            jnp.asarray(server["ctrl"]))
+        assert 0.05 <= float(cs["k_m_frac"]) <= 0.95
+        assert float(cs["init"]) == 1.0           # controller has observed
+        assert float(jnp.sum(cs["age_ema"])) > 0  # histogram EMA seeded
+
+    def test_adaptive_km_requires_fused_packed(self):
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.launch.steps import OacServerConfig, make_train_step
+        cfg = get_config("mamba2-370m", reduced_variant=True)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        for bad in (OacServerConfig(adaptive_km=True, packed=False),
+                    OacServerConfig(adaptive_km=True, fused_stats=False)):
+            with pytest.raises(ValueError):
+                make_train_step(cfg, InputShape("t", 64, 2, "train"), mesh,
+                                oac=bad)
+
     def test_one_bit_requires_packed(self):
         from repro.configs import get_config
         from repro.configs.base import InputShape

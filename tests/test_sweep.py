@@ -31,12 +31,13 @@ def test_dynamic_mask_equals_exact_fairk(d, data):
 
 def test_grid_shapes_and_labels():
     cfg = SweepConfig(d=128, rounds=10, n_clients=4)
-    seeds, pids, kms, labels = sweep_grid(("fairk", "topk"), (0.25, 0.75),
-                                          3, cfg)
+    seeds, pids, kms, adaptives, labels = sweep_grid(
+        ("fairk", "topk"), (0.25, 0.75), 3, cfg)
     # topk pins k_m = k (Remark 1), so its k_m axis collapses to ONE point:
     # fairk contributes 2 fracs x 3 seeds, topk 1 x 3 — no duplicates
-    assert seeds.shape == pids.shape == kms.shape == (9,)
+    assert seeds.shape == pids.shape == kms.shape == adaptives.shape == (9,)
     assert len(labels) == len(set(labels)) == 9
+    assert int(adaptives.sum()) == 0              # no fairk_auto lanes
     topk_kms = [int(kms[i]) for i, l in enumerate(labels) if l[0] == "topk"]
     assert topk_kms == [cfg.k] * 3
 

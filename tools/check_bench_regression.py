@@ -32,11 +32,17 @@ BASELINE = os.path.join(ROOT, "benchmarks", "BENCH_packed.json")
 
 # structural counters: exact match required
 STRUCTURAL = {
-    "g_reads_fused_stats": 1,       # the tentpole: ONE read of g per round
+    "g_reads_fused_stats": 1,       # ONE read of g per fused round
     "g_reads_persisted": 3,         # what the pre-fused path pays
     "fused_calls_packed": 1,
     "copies_fused_stats": [1, 1],
     "copies_persisted": [1, 1],
+    # the adaptive-budget controller round (DESIGN.md §12): still one
+    # read of g, no extra tree copies, and ONE compilation observed
+    # across a multi-k_m_frac execution sweep (the split rides as data)
+    "g_reads_adaptive": 1,
+    "copies_adaptive": [1, 1],
+    "adaptive_traces": 1,
 }
 
 # speedup ratios guarded against the committed baseline (lower = worse).
@@ -52,6 +58,12 @@ GUARDED_RATIOS = (
     "speedup_fused_stats",          # fused round vs persisted re-estimation
                                     # (3-read) round
 )
+# adaptive_vs_fused (controller overhead, ~1.0) stays in the artifact for
+# the record but is NOT guarded: back-to-back runs on the baseline box
+# swing it 0.84-1.25 (the fused-round denominator itself moves ±25% under
+# co-tenancy), so a 15% gate would flake.  The controller round's real
+# acceptance criteria are structural and guarded exactly above:
+# one read of g, (1, 1) tree copies, one compilation across k_m changes.
 
 
 def main() -> int:
