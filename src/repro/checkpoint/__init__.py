@@ -1,6 +1,8 @@
-from repro.checkpoint.io import (latest_server_step, latest_step, restore,
+from repro.checkpoint.io import (ASYNC_FIELDS, latest_server_step,
+                                 latest_step, migrate_server_state, restore,
                                  restore_server_state, save,
                                  save_server_state)
 
 __all__ = ["latest_step", "restore", "save", "save_server_state",
-           "restore_server_state", "latest_server_step"]
+           "restore_server_state", "latest_server_step",
+           "migrate_server_state", "ASYNC_FIELDS"]

@@ -183,6 +183,48 @@ def restore_server_state(path: str,
     return server, lay_meta
 
 
+# fields a pre-async checkpoint may legitimately lack: the async
+# double-buffer lane (launch.steps ``async_agg``) starts COLD anyway —
+# zeros are its round-0 contents — so migrating a synchronous checkpoint
+# into an async run is exact, not an approximation
+ASYNC_FIELDS = ("shadow", "pending")
+
+
+def migrate_server_state(server: Dict[str, np.ndarray],
+                         like: Dict[str, Any]) -> Dict[str, np.ndarray]:
+    """Reconcile a restored server dict with the configured field set.
+
+    * checkpoint misses only ``ASYNC_FIELDS`` members → migrate: synthesize
+      cold (zero) double-buffer lanes shaped/typed like the configured
+      state.  A synchronous checkpoint resumed under ``--async-agg`` then
+      continues exactly (the async buffers start at zero by definition).
+    * any other mismatch — missing non-async fields (different
+      --ef/--one-bit/--adaptive-km flags) or extra checkpoint fields the
+      config does not expect (async checkpoint resumed without
+      --async-agg, where silently dropping the pending merge would lose
+      one round of gradient) → ``ValueError`` naming the offending fields
+      and the flags to fix."""
+    missing = sorted(set(like) - set(server))
+    extra = sorted(set(server) - set(like))
+    migratable = [f for f in missing if f in ASYNC_FIELDS]
+    hard_missing = [f for f in missing if f not in ASYNC_FIELDS]
+    if hard_missing or extra:
+        raise ValueError(
+            f"checkpoint fields {sorted(server)} do not match the "
+            f"configured server state {sorted(like)} "
+            f"(missing: {hard_missing or 'none'}, "
+            f"unexpected: {extra or 'none'}) — resume with the same "
+            "--ef/--one-bit/--adaptive-km/--async-agg flags (only the "
+            f"async fields {list(ASYNC_FIELDS)} can be synthesized, and "
+            "only in the sync -> async direction)")
+    out = dict(server)
+    for name in migratable:
+        ref = like[name]
+        out[name] = np.zeros(ref.shape, jnp.bfloat16
+                             if ref.dtype == jnp.bfloat16 else ref.dtype)
+    return out
+
+
 def latest_server_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None

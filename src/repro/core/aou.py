@@ -7,6 +7,8 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
+from repro.core.packing import AGE_CAP
+
 Array = jax.Array
 
 
@@ -16,13 +18,16 @@ def init_age(d: int) -> Array:
 
 
 def update_age(age: Array, mask: Array) -> Array:
-    """Eq. (10):  A_{t+1} = (A_t + 1) ∘ (1 − S_t)."""
-    return (age + 1.0) * (1.0 - mask)
+    """Eq. (10):  A_{t+1} = (A_t + 1) ∘ (1 − S_t), clipped at ``AGE_CAP``
+    (the int8 server state would otherwise wrap past 127 under async lag
+    plus extended local training)."""
+    return jnp.minimum((age + 1.0) * (1.0 - mask), AGE_CAP)
 
 
 def update_age_by_indices(age: Array, idx: Array) -> Array:
-    """Index-form of Eq. (10): increment everywhere, zero the selected."""
-    return (age + 1.0).at[idx].set(0.0)
+    """Index-form of Eq. (10): increment everywhere (clipped at
+    ``AGE_CAP``), zero the selected."""
+    return jnp.minimum(age + 1.0, AGE_CAP).at[idx].set(0.0)
 
 
 def max_staleness(d: int, k: int, k_m: int) -> int:

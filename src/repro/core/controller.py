@@ -214,9 +214,16 @@ class BudgetController:
     function of ``(state, age_hist, mag_hist)``."""
 
     def __init__(self, cfg: ControllerConfig = ControllerConfig(), *,
-                 rho: float):
+                 rho: float, age_offset: float = 0.0):
         self.cfg = cfg
         self.rho = float(rho)
+        # async-aggregation mode: every selected coordinate's age restarts
+        # at the delivery lag instead of 0, so the whole stationary pmf —
+        # and with it every quantile — shifts right by the lag
+        # (``markov.shifted_aou_distribution``).  Raising the setpoint by
+        # the same constant makes the controller regulate the sync-
+        # equivalent freshness instead of fighting the uplink delay.
+        self.age_offset = float(age_offset)
         if cfg.target_age is None:
             fracs, targets = lemma1_target_table(cfg, self.rho)
             self._fracs = jnp.asarray(fracs)
@@ -231,11 +238,13 @@ class BudgetController:
         """Setpoint for the regulated staleness quantile at the current
         split: the Lemma-1 stationary prediction (in-graph interpolation
         over the static table, so the setpoint moves WITH the traced
-        split) or the fixed ``target_age``."""
+        split) or the fixed ``target_age`` — plus the async
+        ``age_offset`` (0.0 in synchronous mode: value-identical)."""
         if self.cfg.target_age is not None:
-            return jnp.float32(self.cfg.target_age)
-        return jnp.interp(jnp.asarray(k_m_frac, jnp.float32),
-                          self._fracs, self._targets)
+            return jnp.float32(self.cfg.target_age + self.age_offset)
+        tgt = jnp.interp(jnp.asarray(k_m_frac, jnp.float32),
+                         self._fracs, self._targets)
+        return tgt + self.age_offset if self.age_offset else tgt
 
     def update(self, state: Dict[str, Array], age_hist: Array,
                mag_hist: Optional[Array] = None) -> Dict[str, Array]:

@@ -62,8 +62,10 @@ BACKENDS = ("exact", "threshold", "sharded", "packed")
 THRESHOLD_POLICIES = ("fairk", "topk", "roundrobin")
 
 # staleness clip baked into the fused kernel (kernels/fairk_update.py);
-# int8 server state in launch.steps needs age < 127
-AGE_CAP = 120.0
+# canonical definition lives next to the int8/pad protocol in
+# core.packing — re-exported here because every trainer imports it from
+# the engine
+AGE_CAP = packing.AGE_CAP
 
 
 # ---------------------------------------------------------------------------
@@ -477,7 +479,8 @@ class SelectionEngine:
                          tstate: Optional[Dict[str, Array]] = None,
                          residual: Optional[Array] = None,
                          fresh: Optional[Array] = None,
-                         k_m_frac=None
+                         k_m_frac=None,
+                         age_lag: Optional[int] = None
                          ) -> Tuple[Array, Array, Dict[str, Any]]:
         """One server phase: select on ``g``, merge fresh ``g`` over stale
         ``g_prev`` (Eq. 8), advance AoU (Eq. 10).  Returns f32
@@ -513,7 +516,24 @@ class SelectionEngine:
         here.  ``k`` stays static; only the stage split rides as data, so
         per-round ``k_m_frac`` changes never recompile.  FAIR-k only (the
         Remark-1 policies pin the split; the other three need index
-        arithmetic with static stage sizes)."""
+        arithmetic with static stage sizes).
+
+        ``age_lag`` (optional STATIC int, any backend): async-aggregation
+        staleness accounting.  The just-selected coordinates' post-update
+        age becomes ``age_lag`` instead of 0 (their deferred OAC
+        contribution lands that many rounds late —
+        ``packing.shift_selected_age``), and the emitted/carried age
+        histogram is shifted to match, so θ_A re-estimation and the
+        budget controller observe the true distribution.  Counts, noise
+        masking and the returned ``stats["sel_mask"]`` (added only in
+        this mode — the ``age' == 0`` convention no longer identifies the
+        selected set downstream) all use the PRE-shift selection.
+        ``age_lag in (None, 0)`` traces the unchanged synchronous
+        program — bit-exact with today's trajectory."""
+        if age_lag is not None:
+            if int(age_lag) < 0:
+                raise ValueError(f"age_lag must be >= 0, got {age_lag}")
+            age_lag = int(age_lag) or None        # 0 == synchronous
         if g.shape != (self.d,):
             raise ValueError(f"expected shape ({self.d},), got {g.shape}")
         if self.cfg.noise_std > 0.0 and key is None:
@@ -526,15 +546,15 @@ class SelectionEngine:
         backend = self.cfg.backend
         if backend == "exact":
             return self._exact_update(g, g_prev, age, key, residual, fresh,
-                                      k_m_frac)
+                                      k_m_frac, age_lag)
         if backend == "threshold":
             return self._threshold_update(g, g_prev, age, key, residual,
-                                          fresh, k_m_frac)
+                                          fresh, k_m_frac, age_lag)
         if backend == "packed":
             return self._packed_update(g, g_prev, age, key, tstate,
-                                       residual, fresh, k_m_frac)
+                                       residual, fresh, k_m_frac, age_lag)
         return self._sharded_update(g, g_prev, age, key, residual, fresh,
-                                    tstate, k_m_frac)
+                                    tstate, k_m_frac, age_lag)
 
     def _noisy(self, fresh: Array, key: Optional[Array]) -> Array:
         cfg = self.cfg
@@ -545,7 +565,7 @@ class SelectionEngine:
         return fresh.astype(jnp.float32) + noise
 
     def _exact_update(self, g, g_prev, age, key, residual=None, fresh=None,
-                      k_m_frac=None):
+                      k_m_frac=None, age_lag=None):
         k, k_m, _ = self.budgets()
         key_sel = key_noise = None
         if key is not None:
@@ -566,6 +586,11 @@ class SelectionEngine:
         sent = score if fresh is None else fresh.astype(jnp.float32)
         g_t, age_next = masked_merge(self._noisy(sent, key_noise), g_prev,
                                      age, mask)
+        if age_lag is not None:
+            # async mode: selected coordinates carry their delivery lag
+            # forward; the histograms below bin the shifted ages directly
+            age_next = packing.shift_selected_age(age_next, age_lag)
+            stats["sel_mask"] = mask
         if self.cfg.fused_stats:
             # the index-form FAIR-k magnitude stage selects exactly k_M
             # coordinates; the histograms come from the same jnp helper
@@ -584,7 +609,7 @@ class SelectionEngine:
         return g_t, age_next, stats
 
     def _threshold_update(self, g, g_prev, age, key, residual=None,
-                          fresh=None, k_m_frac=None):
+                          fresh=None, k_m_frac=None, age_lag=None):
         from repro.kernels import ops          # deferred: kernels import core
         k, _, _ = self.budgets()
         theta_m, theta_a = self.thresholds(g, age, residual=residual,
@@ -613,6 +638,15 @@ class SelectionEngine:
                 jax.random.normal(key, g.shape, jnp.float32)
         stats = {"theta_m": theta_m, "theta_a": theta_a,
                  "n_selected": n_sel, "k": k, **extra}
+        if age_lag is not None:
+            # async: counts/noise above used the pre-shift selection (the
+            # kernel's age' == 0 convention); the carried buffer and the
+            # emitted histogram record the delivery lag
+            stats["sel_mask"] = (age_next == 0.0).astype(jnp.float32)
+            age_next = packing.shift_selected_age(age_next, age_lag)
+            if "age_hist" in stats:
+                stats["age_hist"] = packing.shift_age_hist(
+                    stats["age_hist"], age_lag)
         if res_next is not None:
             stats["residual"] = res_next
         return g_t, age_next, stats
@@ -740,7 +774,7 @@ class SelectionEngine:
         return tm, ta, streak
 
     def _packed_update(self, g, g_prev, age, key, tstate, residual=None,
-                       fresh=None, k_m_frac=None):
+                       fresh=None, k_m_frac=None, age_lag=None):
         """One fused FAIR-k pass over the whole packed pytree buffer.
 
         Exactly one quantile estimation (or none: warm rounds correct the
@@ -792,6 +826,16 @@ class SelectionEngine:
             sel = (age_next == 0.0).astype(jnp.float32)
             g_t = g_t + sel * (cfg.noise_std / cfg.n_clients) * \
                 jax.random.normal(key, g.shape, jnp.float32)
+        sel_mask = None
+        if age_lag is not None:
+            # async: counts/noise above used the pre-shift selection; the
+            # carried age buffer and histogram record the delivery lag
+            # (bin-0 mass moves to bin ``age_lag`` — identical to binning
+            # the shifted ages, since the shift only touches age == 0)
+            sel_mask = (age_next == 0.0).astype(jnp.float32)
+            age_next = packing.shift_selected_age(age_next, age_lag)
+            if age_hist is not None:
+                age_hist = packing.shift_age_hist(age_hist, age_lag)
         tstate_next = {"theta_m": theta_m, "theta_a": theta_a,
                        "n_sel_m": n_sel_m, "n_sel": n_sel,
                        "init": jnp.float32(1.0), "streak": streak,
@@ -806,6 +850,8 @@ class SelectionEngine:
         if mag_hist is not None:
             stats |= {"n_sel_m": n_sel_m, "mag_hist": mag_hist,
                       "age_hist": age_hist}
+        if sel_mask is not None:
+            stats["sel_mask"] = sel_mask
         if res_next is not None:
             stats["residual"] = res_next
         return g_t, age_next, stats
@@ -836,7 +882,8 @@ class SelectionEngine:
                                                        cast=False), stats
 
     def _sharded_update(self, g, g_prev, age, key, residual=None,
-                        fresh=None, tstate=None, k_m_frac=None):
+                        fresh=None, tstate=None, k_m_frac=None,
+                        age_lag=None):
         cfg = self.cfg
         mesh = self.mesh
         axes = tuple(mesh.axis_names)
@@ -901,6 +948,11 @@ class SelectionEngine:
                 fresh_l = fresh_l + (cfg.noise_std / cfg.n_clients) * \
                     jax.random.normal(kk, g_l.shape, jnp.float32)
             g_t, age_next = masked_merge(fresh_l, gp_l, age_l, mask)
+            if age_lag is not None:
+                # async: the local shard's carried ages record the
+                # delivery lag BEFORE the histograms bin them, so the
+                # psum'd partials come out naturally shifted
+                age_next = packing.shift_selected_age(age_next, age_lag)
             res_next = (score - mask * score if has_res
                         else jnp.zeros((), jnp.float32))
             n_sel = jax.lax.psum(mask.sum(), axes)
@@ -914,22 +966,26 @@ class SelectionEngine:
                 part = (jnp.zeros((), jnp.float32),
                         jnp.zeros((packing.STATS_MAG_BINS,), jnp.float32),
                         jnp.zeros((packing.STATS_AGE_BINS,), jnp.float32))
-            return g_t, age_next, res_next, n_sel, part
+            sel_out = mask if age_lag is not None else jnp.zeros(
+                (), jnp.float32)
+            return g_t, age_next, res_next, n_sel, part, sel_out
 
         fn = compat.shard_map(
             shard_phase, mesh,
             in_specs=(vec, vec, vec, vec if has_res else P(), P(), P(),
                       P(), P()),
             out_specs=(vec, vec, vec if has_res else P(), P(),
-                       (P(), P(), P())))
+                       (P(), P(), P()),
+                       vec if age_lag is not None else P()))
         if key is None:
             key = jax.random.PRNGKey(0)
         res_in = residual if has_res else jnp.zeros((), jnp.float32)
-        g_t, age_next, res_next, n_sel, part = fn(g, g_prev, age, res_in,
-                                                  theta_m, theta_a, kmf_op,
-                                                  key)
+        g_t, age_next, res_next, n_sel, part, sel_mask = fn(
+            g, g_prev, age, res_in, theta_m, theta_a, kmf_op, key)
         n_sel_m, mag_hist, age_hist = part
         stats = {"n_selected": n_sel, "k": k}
+        if age_lag is not None:
+            stats["sel_mask"] = sel_mask
         if use_global or warm:
             stats |= {"theta_m": theta_m, "theta_a": theta_a}
         if fused:

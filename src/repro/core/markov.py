@@ -165,6 +165,24 @@ def expected_staleness(chain: FairKChain) -> float:
     return float((support * pmf).sum())
 
 
+def shifted_aou_distribution(chain: FairKChain, lag: int
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+    """Lemma 1 under async aggregation with a constant delivery lag.
+
+    When every selected coordinate's contribution lands ``lag`` rounds
+    late, its post-update age restarts at ``lag`` instead of 0 while the
+    inter-refresh dynamics (the position chain of Sec. IV-B) are
+    unchanged — the selection itself still scores the carried buffer the
+    same way.  The stationary post-update AoU pmf is therefore exactly
+    the synchronous Lemma-1 pmf translated by ``lag``:
+    ``P[A = a] = pmf_sync[a - lag]`` on support ``[lag, T + lag]``.
+    """
+    if lag < 0:
+        raise ValueError(f"lag must be >= 0, got {lag}")
+    support, pmf = aou_distribution(chain)
+    return support + lag, pmf
+
+
 def simulate_aou(chain: FairKChain, rounds: int, seed: int = 0,
                  mode: str = "exchange", momentum: float = 0.9,
                  burn_in: int = 200) -> np.ndarray:

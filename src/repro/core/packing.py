@@ -50,6 +50,15 @@ Array = jax.Array
 # int8 server state and survives the f32 round-trip through the kernel.
 PAD_AGE = -1.0
 
+# Staleness clip applied by EVERY age update (the fused kernel, its ref
+# oracle, core.aou, the engine's masked merge and the sweep lanes).  The
+# int8 server state stores ages directly, so any increment past 127 would
+# wrap NEGATIVE and collide with the PAD_AGE sentinel — corrupting both
+# pad detection and the unit-bin age histogram.  120 leaves headroom for
+# async lag shifts (``shift_selected_age``) to add a few rounds on top of
+# an already-capped age without ever reaching the int8 edge.
+AGE_CAP = 120.0
+
 LANE = 256          # minimum alignment: the fused kernel's 1-D tile quantum
 
 # trace-time counters: how many pack / unpack tree copies a program traces.
@@ -226,6 +235,39 @@ def mag_bin(mag: Array) -> Array:
 def age_bin(age: Array) -> Array:
     """f32 age -> f32 unit bin index (exact for integer ages ≤ AGE_CAP)."""
     return jnp.clip(jnp.floor(age), 0.0, STATS_AGE_BINS - 1)
+
+
+# ---------------------------------------------------------------------------
+# async-aggregation age bookkeeping (double-buffered server rounds)
+# ---------------------------------------------------------------------------
+
+def shift_selected_age(age_next: Array, lag) -> Array:
+    """Record async delivery lag on the just-selected coordinates.
+
+    In async-aggregation mode a selected coordinate's contribution lands
+    ``lag`` rounds after it was produced, so instead of resetting to 0 its
+    post-update age is ``lag`` — i.e. the carried age buffer remembers the
+    staleness the deferred uplink added.  Must be applied to the POST-merge
+    age vector (where selected coordinates are exactly the ``age == 0``
+    ones): unselected ages are untouched, pads (age < 0) pass through, and
+    the result stays clipped at ``AGE_CAP``.  ``lag = 0`` is the identity.
+    """
+    a = jnp.asarray(age_next, jnp.float32)
+    sel = (a == 0.0).astype(jnp.float32)
+    return jnp.minimum(a + sel * jnp.asarray(lag, jnp.float32), AGE_CAP)
+
+
+def shift_age_hist(age_hist: Array, lag: int) -> Array:
+    """The histogram counterpart of ``shift_selected_age``: move the
+    selected (bin 0) mass to bin ``lag``.  Keeps the carried/emitted age
+    histogram consistent with the shifted age buffer, so θ_A re-estimation
+    and the budget controller see the true post-update distribution.
+    ``lag = 0`` is an exact identity."""
+    if lag <= 0:
+        return age_hist
+    h = jnp.asarray(age_hist, jnp.float32)
+    b = min(int(lag), STATS_AGE_BINS - 1)
+    return h.at[b].add(h[0]).at[0].set(0.0)
 
 
 def _tail_cut(hist: Array, target: Array) -> Tuple[Array, Array]:

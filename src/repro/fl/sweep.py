@@ -42,8 +42,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import controller as budget
-from repro.core.engine import (fair_k_mask_dynamic, rank_desc,  # noqa: F401
-                               traced_km)
+from repro.core import packing
+from repro.core.engine import (AGE_CAP, fair_k_mask_dynamic,  # noqa: F401
+                               rank_desc, traced_km)
 from repro.kernels import ref
 
 Array = jax.Array
@@ -79,6 +80,12 @@ class SweepConfig:
                                    # folds back into the next merge (the
                                    # engine's residual stage, here in the
                                    # vmapped rank-based form)
+    async_lag: int = 0             # asynchronous aggregation (DESIGN.md
+                                   # §13): refreshed coordinates restart at
+                                   # age ``async_lag`` instead of 0, and
+                                   # adaptive lanes shift their Lemma-1
+                                   # target by the same constant.  0 keeps
+                                   # the synchronous trajectory bit-exact
     controller: budget.ControllerConfig = budget.ControllerConfig()
                                    # adaptive-lane control law (fairk_auto)
 
@@ -127,7 +134,11 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
     # Eq. (8) merge + Eq. (9) model step + Eq. (10) AoU
     g_t = mask * (agg + noise) + (1.0 - mask) * g_prev
     w_next = w - cfg.global_lr * g_t
-    age_next = (age + 1.0) * (1.0 - mask)
+    age_next = jnp.minimum((age + 1.0) * (1.0 - mask), AGE_CAP)
+    if cfg.async_lag:
+        # async lane: the selected contributions land async_lag rounds
+        # late — same shift every engine backend applies under age_lag
+        age_next = packing.shift_selected_age(age_next, cfg.async_lag)
     # controller step (adaptive lanes only — gated per field so static
     # lanes carry their state untouched through the scan; no mag_hist:
     # mag_ema tracks the kernel-emitted |score| histogram only)
@@ -151,7 +162,8 @@ def _run_grid(cfg: SweepConfig, seeds: Array, policy_ids: Array,
               ) -> Dict[str, Array]:
     """All grid points, one compiled program: scan over rounds, vmap over
     the flattened (policy, k_m, seed) grid."""
-    ctrl = budget.BudgetController(cfg.controller, rho=cfg.rho)
+    ctrl = budget.BudgetController(cfg.controller, rho=cfg.rho,
+                                   age_offset=float(cfg.async_lag))
 
     def one_sim(seed, policy_id, k_m, adaptive):
         key0 = jax.random.PRNGKey(seed)

@@ -77,6 +77,21 @@ class FLConfig:
                                     # histogram INSIDE the compiled round —
                                     # zero host syncs, zero recompiles.
                                     # policy="fairk_auto" is an alias.
+    async_lag: int = 0              # asynchronous aggregation (DESIGN.md
+                                    # §13): selected contributions land
+                                    # ``async_lag`` rounds late, so the
+                                    # post-merge age of every refreshed
+                                    # coordinate restarts at the lag
+                                    # instead of 0 (engine ``age_lag``) and
+                                    # the adaptive controller's Lemma-1
+                                    # target shifts by the same constant.
+                                    # 0 = synchronous (bit-exact with the
+                                    # historical trajectory)
+    scan_rounds: int = 0            # fuse up to this many rounds into ONE
+                                    # ``lax.scan``'d compiled step (the sim
+                                    # path's multi-round fusion; chunks cut
+                                    # at eval boundaries).  0/1 = the
+                                    # per-round Python loop
     controller: budget.ControllerConfig = budget.ControllerConfig()
     seed: int = 0
 
@@ -134,8 +149,12 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
     if adaptive and fl.policy not in ("fairk", "fairk_auto"):
         raise ValueError("adaptive_km moves the FAIR-k split — policy "
                          f"{fl.policy!r} pins or ignores it")
+    if fl.async_lag < 0:
+        raise ValueError(f"async_lag must be >= 0, got {fl.async_lag}")
+    age_lag = fl.async_lag or None
     bctrl = (budget.BudgetController(fl.controller,
-                                     rho=fl.compression_ratio)
+                                     rho=fl.compression_ratio,
+                                     age_offset=float(fl.async_lag))
              if adaptive else None)
     # the realised static split (Remark-1 policies pin it: topk -> 1,
     # roundrobin -> 0) — what the km_frac telemetry records
@@ -217,8 +236,11 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                 score = jnp.abs(energy) + index_jitter(d)
                 g_t, age_next, stats = engine.select_and_merge(
                     score, g_prev, age, fresh=fresh_sign, tstate=ts,
-                    k_m_frac=kmf)
-                sel_mask = (age_next == 0.0).astype(jnp.float32)
+                    k_m_frac=kmf, age_lag=age_lag)
+                # async mode shifts the refreshed ages to the lag, so the
+                # engine hands the selection mask back explicitly
+                sel_mask = (stats["sel_mask"] if age_lag
+                            else (age_next == 0.0).astype(jnp.float32))
                 if fl.error_feedback:
                     # unsent mass of the mean effective gradient — the same
                     # accounting the exact one-bit path keeps (quantization
@@ -237,8 +259,9 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                 g_t, age_next, stats = engine.select_and_merge(
                     fresh, g_prev, age, key=key_ch, tstate=ts,
                     residual=residual if fl.error_feedback else None,
-                    k_m_frac=kmf)
-                sel_mask = (age_next == 0.0).astype(jnp.float32)
+                    k_m_frac=kmf, age_lag=age_lag)
+                sel_mask = (stats["sel_mask"] if age_lag
+                            else (age_next == 0.0).astype(jnp.float32))
                 if fl.error_feedback:
                     residual = stats["residual"]
             w_next = w - fl.global_lr * g_t              # Eq. (9)
@@ -276,6 +299,11 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
             g_t, _ = oac.oac_round(key_ch, g_prev, idx, grads, fl.channel)
         w_next = w - fl.global_lr * g_t                  # Eq. (9)
         age_next = update_age_by_indices(age, idx)       # Eq. (10)
+        if age_lag:
+            # exact-path async bookkeeping: the refreshed coordinates'
+            # contribution lands age_lag rounds late — same shift the
+            # engine backends apply
+            age_next = packing.shift_selected_age(age_next, age_lag)
         sel_count = sel_count.at[idx].add(1.0)
         if adaptive:
             # the exact path has no kernel, so the staleness histogram
@@ -340,29 +368,82 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
     # in one transfer after the loop — float(age.mean()) et al. used to
     # block on the device every round
     mean_aou, max_aou, km_frac = [], [], []
-    for t in range(fl.rounds):
-        key, sub = jax.random.split(key)
-        xs, ys = sample_round(t)
-        w, g, age, sel_count, residual, _, tstate, cstate, rm = fl_step(
-            sub, w, g, age, sel_count, jnp.asarray(xs), jnp.asarray(ys),
-            residual, tstate, cstate)
-        mean_aou.append(rm["mean_aou"])
-        max_aou.append(rm["max_aou"])
-        km_frac.append(rm["km_frac"])
-        if eval_fn is not None and ((t + 1) % eval_every == 0 or t == 0
-                                    or t == fl.rounds - 1):
-            metrics = eval_fn(unravel(w))
-            history["round"].append(t + 1)
-            history["acc"].append(float(metrics.get("acc", np.nan)))
-            if verbose:
-                print(f"  round {t+1:4d}  acc={history['acc'][-1]:.4f}  "
-                      f"meanAoU={float(rm['mean_aou']):.2f}", flush=True)
-    history["mean_aou"] = (np.asarray(jnp.stack(mean_aou)).tolist()
-                           if mean_aou else [])
-    history["max_aou"] = (np.asarray(jnp.stack(max_aou)).tolist()
-                          if max_aou else [])
-    history["km_frac"] = (np.asarray(jnp.stack(km_frac)).tolist()
-                          if km_frac else [])
+
+    def _is_eval_round(t: int) -> bool:
+        return eval_fn is not None and ((t + 1) % eval_every == 0
+                                        or t == 0 or t == fl.rounds - 1)
+
+    def _do_eval(t: int, w, rm_mean) -> None:
+        metrics = eval_fn(unravel(w))
+        history["round"].append(t + 1)
+        history["acc"].append(float(metrics.get("acc", np.nan)))
+        if verbose:
+            print(f"  round {t+1:4d}  acc={history['acc'][-1]:.4f}  "
+                  f"meanAoU={float(rm_mean):.2f}", flush=True)
+
+    if fl.scan_rounds > 1:
+        # multi-round fusion: a chunk of rounds advances inside ONE
+        # ``lax.scan``'d compiled program — chunk-many dispatches (and
+        # their host round-trips) collapse into one.  The key splits
+        # INSIDE the scan exactly as the loop path splits it on the host,
+        # so both paths walk bit-identical trajectories; chunks are cut
+        # at eval boundaries (eval reads w mid-run), so each distinct
+        # chunk length compiles once.
+        @jax.jit
+        def fl_chunk(key, w, g, age, sel_count, xs, ys, residual, tstate,
+                     cstate):
+            def body(carry, batch):
+                key, w, g, age, sel_count, residual, tstate, cstate = carry
+                key, sub = jax.random.split(key)
+                bx, by = batch
+                (w, g, age, sel_count, residual, _, tstate, cstate,
+                 rm) = fl_step(sub, w, g, age, sel_count, bx, by,
+                               residual, tstate, cstate)
+                return (key, w, g, age, sel_count, residual, tstate,
+                        cstate), rm
+            carry, rms = jax.lax.scan(
+                body, (key, w, g, age, sel_count, residual, tstate,
+                       cstate), (xs, ys))
+            return carry, rms
+
+        t = 0
+        while t < fl.rounds:
+            stop = fl.rounds
+            if eval_fn is not None:
+                for u in range(t, fl.rounds):
+                    if _is_eval_round(u):
+                        stop = u + 1
+                        break
+            chunk = min(fl.scan_rounds, stop - t)
+            data = [sample_round(u) for u in range(t, t + chunk)]
+            xs = jnp.asarray(np.stack([b[0] for b in data]))
+            ys = jnp.asarray(np.stack([b[1] for b in data]))
+            (key, w, g, age, sel_count, residual, tstate, cstate), rms = \
+                fl_chunk(key, w, g, age, sel_count, xs, ys, residual,
+                         tstate, cstate)
+            mean_aou.append(rms["mean_aou"])
+            max_aou.append(rms["max_aou"])
+            km_frac.append(rms["km_frac"])
+            t += chunk
+            if _is_eval_round(t - 1):
+                _do_eval(t - 1, w, rms["mean_aou"][-1])
+    else:
+        for t in range(fl.rounds):
+            key, sub = jax.random.split(key)
+            xs, ys = sample_round(t)
+            w, g, age, sel_count, residual, _, tstate, cstate, rm = fl_step(
+                sub, w, g, age, sel_count, jnp.asarray(xs), jnp.asarray(ys),
+                residual, tstate, cstate)
+            mean_aou.append(rm["mean_aou"])
+            max_aou.append(rm["max_aou"])
+            km_frac.append(rm["km_frac"])
+            if _is_eval_round(t):
+                _do_eval(t, w, rm["mean_aou"])
+    cat = lambda vals: (np.asarray(jnp.concatenate(
+        [jnp.atleast_1d(v) for v in vals])).tolist() if vals else [])
+    history["mean_aou"] = cat(mean_aou)
+    history["max_aou"] = cat(max_aou)
+    history["km_frac"] = cat(km_frac)
     history["sel_count"] = np.asarray(sel_count)
     history["final_age"] = np.asarray(age)
     history["params"] = unravel(w)

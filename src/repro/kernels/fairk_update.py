@@ -51,8 +51,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.packing import (STATS_AGE_BINS, STATS_MAG_BINS, age_bin,
-                                mag_bin)
+from repro.core.packing import (AGE_CAP, STATS_AGE_BINS, STATS_MAG_BINS,
+                                age_bin, mag_bin)
 
 Array = jax.Array
 
@@ -123,7 +123,8 @@ def _fairk_kernel(*refs, block_size: int, has_res: bool, has_fresh: bool,
     keep = 1.0 - maskf
     sent = fresh_ref[...].astype(jnp.float32) if has_fresh else score
     gt_ref[...] = maskf * sent + keep * gp_ref[...].astype(jnp.float32)
-    age_next = jnp.where(valid, jnp.minimum((age + 1.0) * keep, 120.0), age)
+    age_next = jnp.where(valid, jnp.minimum((age + 1.0) * keep, AGE_CAP),
+                         age)
     age_out_ref[...] = age_next
     if has_res:
         res_out_ref[...] = jnp.where(valid, score - maskf * sent, res)

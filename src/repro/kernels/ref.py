@@ -60,7 +60,7 @@ def aou_merge_ref(g_new: Array, g_old: Array, age: Array, mask: Array
 
     g = mask*g_new + (1-mask)*g_old;  age' = (age+1)*(1-mask)."""
     g = mask * g_new + (1.0 - mask) * g_old
-    age_next = (age + 1.0) * (1.0 - mask)
+    age_next = jnp.minimum((age + 1.0) * (1.0 - mask), packing.AGE_CAP)
     return g, age_next
 
 
@@ -98,7 +98,8 @@ def fairk_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
             ).astype(jnp.float32)
     keep = 1.0 - mask
     g_t = mask * g32 + keep * g_prev.astype(jnp.float32)
-    age_next = jnp.where(valid, jnp.minimum((age32 + 1.0) * keep, 120.0),
+    age_next = jnp.where(valid,
+                         jnp.minimum((age32 + 1.0) * keep, packing.AGE_CAP),
                          age32)
     return g_t, age_next
 
@@ -130,7 +131,8 @@ def fairk_ef_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
     keep = 1.0 - mask
     sent = fresh.astype(jnp.float32) if fresh is not None else score
     g_t = mask * sent + keep * g_prev.astype(jnp.float32)
-    age_next = jnp.where(valid, jnp.minimum((age32 + 1.0) * keep, 120.0),
+    age_next = jnp.where(valid,
+                         jnp.minimum((age32 + 1.0) * keep, packing.AGE_CAP),
                          age32)
     res_next = (jnp.where(valid, score - mask * sent, res32)
                 if residual is not None else None)
@@ -173,7 +175,8 @@ def fairk_stats_update_ref(g: Array, g_prev: Array, age: Array,
     mask_s = (mask_m_s | (valid_s & (age_s + jitter_s >= theta_a)
                           & (~mask_m_s))).astype(jnp.float32)
     age_next_s = jnp.where(
-        valid_s, jnp.minimum((age_s + 1.0) * (1.0 - mask_s), 120.0), age_s)
+        valid_s,
+        jnp.minimum((age_s + 1.0) * (1.0 - mask_s), packing.AGE_CAP), age_s)
     m_bins = jnp.where(valid_s, packing.mag_bin(jnp.abs(score_s)), -1.0)
     a_bins = jnp.where(valid_s, packing.age_bin(age_next_s), -1.0)
     # counts derive from the materialized age output + one re-read of the

@@ -132,7 +132,8 @@ def opt_pspecs(opt_state: Any, p_specs: Any) -> Any:
 
 def server_pspecs(p_specs: Any, mesh=None, packed: bool = False,
                   error_feedback: bool = False,
-                  adaptive_km: bool = False) -> Any:
+                  adaptive_km: bool = False,
+                  async_agg: bool = False) -> Any:
     """OAC server state specs.
 
     Packed flavour: the persisted lane-aligned flat buffers shard their
@@ -140,7 +141,10 @@ def server_pspecs(p_specs: Any, mesh=None, packed: bool = False,
     ``d_packed`` slice — exactly what ``shard_map`` hands the fused pass);
     the warm-start threshold state vector — and, with ``adaptive_km``,
     the budget-controller state vector — is replicated (pmean-consistent
-    across shards).  Per-leaf flavour: {g, age} mirror parameter sharding."""
+    across shards).  With ``async_agg`` the double-buffer lane (the
+    deferred-straggler ``shadow`` and the one-round-delayed ``pending``
+    merge result) shards like the gradient buffer it mirrors.  Per-leaf
+    flavour: {g, age} mirror parameter sharding."""
     if packed:
         vec = P(tuple(mesh.axis_names))
         out = {"g": vec, "age": vec, "theta": P()}
@@ -148,6 +152,9 @@ def server_pspecs(p_specs: Any, mesh=None, packed: bool = False,
             out["res"] = vec
         if adaptive_km:
             out["ctrl"] = P()
+        if async_agg:
+            out["shadow"] = vec
+            out["pending"] = vec
         return out
     return {"g": p_specs, "age": p_specs, "theta": P()}
 

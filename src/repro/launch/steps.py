@@ -43,7 +43,9 @@ from repro.configs.base import InputShape, ModelConfig
 from repro.core import controller as budget
 from repro.core import packing
 from repro.core.engine import (AGE_CAP, EngineConfig, SelectionEngine,
-                               sampled_thresholds, threshold_mask)
+                               fair_k_masks_dynamic, index_jitter,
+                               sampled_thresholds, threshold_mask,
+                               traced_km)
 from repro.launch import sharding as shlib
 from repro.launch.mesh import axis_size, batch_axes
 from repro.models import transformer as tr
@@ -94,6 +96,30 @@ class OacServerConfig:
                                    # age/magnitude histograms — zero host
                                    # syncs, zero recompiles across split
                                    # changes (packed + fused_stats only)
+    async_agg: bool = False        # asynchronous double-buffered rounds
+                                   # (DESIGN.md §13): the optimizer consumes
+                                   # the PREVIOUS round's merged gradient
+                                   # (persisted ``pending`` buffer) so round
+                                   # t's pack -> fused kernel -> unpack
+                                   # overlaps round t+1's client compute;
+                                   # straggler OAC contributions land in the
+                                   # NEXT round's merge via the persisted
+                                   # ``shadow`` buffer, with their extra age
+                                   # recorded in the carried age buffer
+                                   # (engine ``age_lag``) so the adaptive
+                                   # controller absorbs the staleness online
+                                   # (packed only; off == bit-exact with the
+                                   # synchronous trajectory)
+    straggler_frac: float = 0.25   # fraction of coordinates whose uplink
+                                   # contribution arrives one aggregation
+                                   # late (deterministic Knuth-hash pattern
+                                   # — reproducible, trace-static)
+    straggler_lag: int = 1         # delivery lag (rounds) of the straggler
+                                   # contributions; shifts the post-merge
+                                   # age of every selected coordinate and
+                                   # translates the Lemma-1 target by the
+                                   # same amount (core.markov
+                                   # shifted_aou_distribution)
     one_bit: bool = False          # one-bit uplink for the server phase:
                                    # the merged fresh values are the SIGNS
                                    # of the effective gradient, detected by
@@ -283,6 +309,13 @@ def init_server_state(params: Any, mesh=None, cfg: ModelConfig = None,
         if oac.adaptive_km:
             state["ctrl"] = budget.controller_state_to_vec(
                 budget.init_controller_state(oac.k_m_frac))
+        if oac.async_agg:
+            # double-buffer lifecycle (DESIGN.md §13): ``pending`` holds the
+            # merged gradient the NEXT optimizer step consumes; ``shadow``
+            # holds the straggler contribution deferred into the next merge.
+            # Both start cold (zeros): round 0 applies a zero update.
+            state["shadow"] = jnp.zeros((n * lay.d_packed,), jnp.bfloat16)
+            state["pending"] = jnp.zeros((n * lay.d_packed,), jnp.bfloat16)
         return state
     return {
         "g": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
@@ -304,6 +337,9 @@ def abstract_server_state(params_abs: Any, mesh=None, p_specs: Any = None,
         if oac.adaptive_km:
             state["ctrl"] = SDS((budget.CONTROLLER_STATE_SIZE,),
                                 jnp.float32)
+        if oac.async_agg:
+            state["shadow"] = SDS((d,), jnp.bfloat16)
+            state["pending"] = SDS((d,), jnp.bfloat16)
         return state
     return {
         "g": jax.tree.map(lambda p: SDS(p.shape, jnp.bfloat16), params_abs),
@@ -351,13 +387,25 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         raise ValueError("adaptive_km consumes the kernel-emitted age/"
                          "magnitude histograms — it needs the packed "
                          "server phase with fused_stats")
+    if oac is not None and oac.async_agg:
+        if not oac.packed:
+            raise ValueError("async_agg double-buffers the PACKED server "
+                             "state (flat shadow/pending buffers) — it "
+                             "needs the packed server phase")
+        if not 0.0 <= oac.straggler_frac <= 1.0:
+            raise ValueError(f"straggler_frac must be in [0, 1], got "
+                             f"{oac.straggler_frac}")
+        if oac.straggler_lag < 1:
+            raise ValueError(f"straggler_lag must be >= 1, got "
+                             f"{oac.straggler_lag}")
     srv_abs = abstract_server_state(params_abs, mesh=mesh, p_specs=p_specs,
                                     oac=oac)
     srv_specs = shlib.server_pspecs(
         p_specs, mesh=mesh,
         packed=(oac is not None and oac.packed),
         error_feedback=(oac is not None and oac.error_feedback),
-        adaptive_km=(oac is not None and oac.adaptive_km))
+        adaptive_km=(oac is not None and oac.adaptive_km),
+        async_agg=(oac is not None and oac.async_agg))
     b_specs = _batch_pspecs(cfg, mb, mesh, micro=True)
     in_specs_batch = train_input_specs(cfg, shape, n_micro, mb)
 
@@ -382,9 +430,17 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         oac = dataclasses.replace(oac, n_clients=n_shards)
         mesh_axes = tuple(mesh.axis_names)
         # adaptive split: one controller per step builder — the Lemma-1
-        # target table is static data baked at build time
-        bctrl = (budget.BudgetController(rho=oac.rho)
-                 if oac.adaptive_km else None)
+        # target table is static data baked at build time.  Under async
+        # aggregation the stationary AoU pmf is the synchronous Lemma-1
+        # pmf translated by the straggler lag (core.markov
+        # shifted_aou_distribution), so the controller's target shifts by
+        # the same constant — it absorbs the added staleness online with
+        # no new host syncs.
+        bctrl = (budget.BudgetController(
+            rho=oac.rho,
+            age_offset=(float(oac.straggler_lag) if oac.async_agg
+                        else 0.0))
+            if oac.adaptive_km else None)
 
         def _shard_noise_key(seed):
             """Per-shard channel-noise key: fold the round seed by the
@@ -432,6 +488,21 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                 kmf = cstate["k_m_frac"]
             key = _shard_noise_key(seed) if oac.noise_std > 0.0 else None
             g_flat = layout.pack(grads)            # the ONLY pack per step
+            age_lag = None
+            new_shadow = None
+            if oac.async_agg:
+                # straggler OAC contributions land one aggregation late: a
+                # trace-static Knuth-hash pattern of coordinates defers its
+                # share of THIS round's uplink into the shadow buffer while
+                # LAST round's shadow joins the merge.  Elementwise mixing
+                # on the packed buffer — not an extra instrumented read of
+                # the persisted gradient state, so G_READS stays 1.
+                strag = (index_jitter(layout.d_packed)
+                         < oac.straggler_frac).astype(jnp.float32)
+                new_shadow = g_flat * strag
+                g_flat = (g_flat * (1.0 - strag)
+                          + server["shadow"].astype(jnp.float32))
+                age_lag = oac.straggler_lag
             fresh = None
             if oac.one_bit:
                 # one-bit uplink: the transmitted values are the SIGNS of
@@ -457,7 +528,8 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                 key = None
             g_t, age_next, stats = eng.select_and_merge(
                 g_flat, server["g"], server["age"], key=key, tstate=tstate,
-                residual=server.get("res"), fresh=fresh, k_m_frac=kmf)
+                residual=server.get("res"), fresh=fresh, k_m_frac=kmf,
+                age_lag=age_lag)
             new_server = {
                 "g": g_t.astype(jnp.bfloat16),
                 "age": age_next.astype(jnp.int8),
@@ -471,8 +543,20 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                 cstate = bctrl.update(cstate, stats["age_hist"],
                                       stats["mag_hist"])
                 new_server["ctrl"] = budget.controller_state_to_vec(cstate)
+            if oac.async_agg:
+                # double-buffer swap: the optimizer consumes the PREVIOUS
+                # round's merged gradient, so this round's fused pass has
+                # no consumer inside the step — XLA overlaps it with the
+                # next round's client compute.  Round 0's pending buffer
+                # is zeros (a no-op update), matching the one-round
+                # pipeline fill.
+                new_server["shadow"] = new_shadow.astype(jnp.bfloat16)
+                new_server["pending"] = g_t.astype(jnp.bfloat16)
+                out = server["pending"].astype(jnp.float32)
+            else:
+                out = g_t
             # the optimizer consumes per-leaf trees: ONE unpack per step
-            return layout.unpack(g_t, cast=False), new_server
+            return layout.unpack(out, cast=False), new_server
 
         def _per_leaf_server_phase(server, grads, seed):
             """Historical per-leaf loop (oac.packed=False): one threshold
@@ -566,6 +650,7 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         "oac_one_bit": bool(oac.one_bit) if oac is not None else False,
         "oac_adaptive_km": bool(oac.adaptive_km) if oac is not None
         else False,
+        "oac_async": bool(oac.async_agg) if oac is not None else False,
         "optimizer": opt_name or cfg.optimizer, "lr": lr,
         "gather_dtype": gather_dtype,
         "scans": {"microbatch": n_micro, "layers": cfg.n_scan_blocks},
@@ -660,16 +745,26 @@ def make_fl_oac_step(cfg: ModelConfig, mesh, *, seq_len: int = 1024,
                      k_m_frac: float = 0.75, block: int = 4096,
                      noise_std: float = 1.0,
                      baseline: bool = False,
-                     one_bit: bool = False) -> StepBundle:
+                     one_bit: bool = False,
+                     adaptive_km: bool = False) -> StepBundle:
     """Every device = one OAC-FL client with a full model replica.
 
     FAIR-k runs at waveform-group granularity (``block`` coordinates per
     group, mirroring the prototype's OFDM symbol groups): blocks are scored
     by gradient L2 (stage M) and group AoU (stage A); only the selected
     rho-fraction of blocks is all-reduced -> the uplink collective carries
-    rho*d values instead of d (``baseline=True`` all-reduces everything)."""
+    rho*d values instead of d (``baseline=True`` all-reduces everything).
+
+    The magnitude/age split is a TRACED value (the engine's rank-based
+    ``fair_k_masks_dynamic`` — same coordinate set as the historical
+    static ``top_k`` concatenation, incl. the toward-lower-index
+    tie-break), so ``adaptive_km`` can close the loop at this scale too:
+    the budget controller state rides the step as an extra replicated
+    vector, re-derives the split from the block-AoU histogram every round,
+    and never recompiles."""
     axes = tuple(mesh.axis_names)
     n_clients = axis_size(mesh, axes)
+    bctrl = budget.BudgetController(rho=rho) if adaptive_km else None
 
     params_abs = abstract_params(cfg)
     leaves_abs, treedef = jax.tree_util.tree_flatten(params_abs)
@@ -686,10 +781,10 @@ def make_fl_oac_step(cfg: ModelConfig, mesh, *, seq_len: int = 1024,
     d_pad = -(-d // block) * block
     nb = d_pad // block
     kb = max(1, int(round(rho * nb)))
-    kb_m = int(round(k_m_frac * kb))
 
-    def fl_oac_step(w_flat, g_prev, age_b, batch, seed):
+    def fl_oac_core(w_flat, g_prev, age_b, ctrl_vec, batch, seed):
         """w_flat/g_prev: (d,) replicated; age_b: (nb,) block AoU;
+        ctrl_vec: replicated controller state (adaptive only, else None);
         batch: per-client {tokens, labels} (local_batch, seq)."""
         # --- local client update ------------------------------------------
         def local_loss(w):
@@ -697,12 +792,23 @@ def make_fl_oac_step(cfg: ModelConfig, mesh, *, seq_len: int = 1024,
         loss, grads = jax.value_and_grad(local_loss)(w_flat)
         gb_local = jnp.pad(grads, (0, d_pad - d)).reshape(nb, block)
         # --- shared selection (replicated inputs -> identical everywhere) --
+        # The split ``kb_m`` is TRACED (the engine's rank-based machinery,
+        # one rounding convention via traced_km): rank and top_k agree on
+        # the selected set incl. the toward-lower-index tie-break, so the
+        # static regime is value-identical to the historical concatenated
+        # top_k form while the adaptive regime re-derives the split from
+        # the carried controller state without recompiling.
+        cstate = (budget.controller_state_from_vec(ctrl_vec)
+                  if adaptive_km else None)
+        kmf = cstate["k_m_frac"] if adaptive_km else jnp.float32(k_m_frac)
         gp = jnp.pad(g_prev, (0, d_pad - d)).reshape(nb, block)
         score = jnp.sum(gp.astype(jnp.float32) ** 2, axis=1)
-        _, idx_m = jax.lax.top_k(score, kb_m)
-        age_masked = age_b.astype(jnp.float32).at[idx_m].set(-1.0)
-        _, idx_a = jax.lax.top_k(age_masked, kb - kb_m)
-        idx = jnp.concatenate([idx_m, idx_a])
+        mask_sel, _ = fair_k_masks_dynamic(
+            score, age_b.astype(jnp.float32), kb, traced_km(kb, kmf))
+        # exactly kb ones in mask_sel; gather/scatter below are
+        # order-insensitive (unique indices), so ascending order is fine
+        idx = jnp.nonzero(mask_sel, size=kb, fill_value=0)[0]
+        idx = idx.astype(jnp.int32)
         # --- OAC uplink: only the selected blocks ride the channel ---------
         key = jax.random.PRNGKey(seed)
         my = 0
@@ -736,27 +842,53 @@ def make_fl_oac_step(cfg: ModelConfig, mesh, *, seq_len: int = 1024,
         # AoU grows unbounded over a long run and breaks the int8-safety
         # invariant (DESIGN.md §5) the coordinate-level paths guarantee
         age_next = jnp.minimum((age_b + 1.0).at[idx].set(0.0), AGE_CAP)
+        ctrl_next = None
+        if adaptive_km:
+            # close the loop at the device-as-client scale: the block-AoU
+            # histogram drives the same in-graph controller the big-model
+            # trainer carries (replicated inputs -> identical successor
+            # state on every shard, no collective needed)
+            from repro.kernels import ref
+            _, age_hist = ref.strided_hists_ref(
+                score, age_next, jnp.ones((nb,), bool),
+                packing.hist_stride(nb))
+            ctrl_next = budget.controller_state_to_vec(
+                bctrl.update(cstate, age_hist))
         g_new_flat = g_new.reshape(-1)[:d]
         w_next = w_flat - 0.01 * g_new_flat.astype(w_flat.dtype)
         loss_mean = jax.lax.pmean(loss, axes)
-        return w_next, g_new_flat.astype(g_prev.dtype), age_next, loss_mean
+        return (w_next, g_new_flat.astype(g_prev.dtype), age_next,
+                ctrl_next, loss_mean)
+
+    if adaptive_km:
+        fl_oac_step = fl_oac_core
+    else:
+        def fl_oac_step(w_flat, g_prev, age_b, batch, seed):
+            w, g, a, _, loss = fl_oac_core(w_flat, g_prev, age_b, None,
+                                           batch, seed)
+            return w, g, a, loss
 
     batch_specs = {
         "tokens": SDS((n_clients * local_batch, seq_len), jnp.int32),
         "labels": SDS((n_clients * local_batch, seq_len), jnp.int32),
     }
     b_pspec = {"tokens": P(axes, None), "labels": P(axes, None)}
+    ctrl_in = (P(),) if adaptive_km else ()
     fn = compat.shard_map(fl_oac_step, mesh,
-                          in_specs=(P(), P(), P(), b_pspec, P()),
-                          out_specs=(P(), P(), P(), P()))
+                          in_specs=(P(), P(), P(), *ctrl_in, b_pspec, P()),
+                          out_specs=(P(), P(), P(), *ctrl_in, P()))
     named = lambda s: shlib.to_named(s, mesh)
     repl = NamedSharding(mesh, P())
-    in_sh = (repl, repl, repl, named(b_pspec), repl)
-    out_sh = (repl, repl, repl, repl)
+    ctrl_sh = (repl,) if adaptive_km else ()
+    ctrl_abs = ((SDS((budget.CONTROLLER_STATE_SIZE,), jnp.float32),)
+                if adaptive_km else ())
+    in_sh = (repl, repl, repl, *ctrl_sh, named(b_pspec), repl)
+    out_sh = (repl, repl, repl, *ctrl_sh, repl)
     input_specs = (SDS((d,), jnp.float32), SDS((d,), jnp.float32),
-                   SDS((nb,), jnp.float32), batch_specs, SDS((), jnp.int32))
+                   SDS((nb,), jnp.float32), *ctrl_abs, batch_specs,
+                   SDS((), jnp.int32))
     meta = {"kind": "fl_oac", "d": d, "blocks": nb, "kb": kb,
             "n_clients": n_clients, "rho": rho, "baseline": baseline,
-            "one_bit": one_bit,
+            "one_bit": one_bit, "adaptive_km": adaptive_km,
             "scans": {"layers": cfg.n_scan_blocks}}
     return StepBundle(fn, in_sh, out_sh, input_specs, meta)

@@ -62,6 +62,16 @@ def main():
                     help="disable the fused in-kernel selection statistics "
                          "(restores the two-pass count accounting + "
                          "sampled-quantile bootstrap)")
+    ap.add_argument("--async-agg", action="store_true",
+                    help="asynchronous double-buffered server rounds "
+                         "(DESIGN.md §13): the optimizer consumes the "
+                         "previous round's merged gradient so the fused "
+                         "pass overlaps the next round's compute; "
+                         "straggler contributions defer one round via the "
+                         "shadow buffer (packed server phase only)")
+    ap.add_argument("--straggler-frac", type=float, default=0.25,
+                    help="fraction of coordinates whose uplink arrives one "
+                         "aggregation late under --async-agg")
     ap.add_argument("--adaptive-km", action="store_true",
                     help="adapt the k_M/k split online INSIDE the compiled "
                          "step (core/controller.py: the kernel-emitted age "
@@ -87,7 +97,9 @@ def main():
     oac = (OacServerConfig(rho=args.rho, packed=not args.per_leaf_server,
                            error_feedback=args.ef, one_bit=args.one_bit,
                            fused_stats=not args.legacy_stats,
-                           adaptive_km=args.adaptive_km)
+                           adaptive_km=args.adaptive_km,
+                           async_agg=args.async_agg,
+                           straggler_frac=args.straggler_frac)
            if args.oac else None)
     bundle = make_train_step(cfg, shape, mesh, n_micro=1, oac=oac, lr=1e-3)
 
@@ -122,11 +134,11 @@ def main():
             srv_np, _ = checkpoint.restore_server_state(
                 os.path.join(args.ckpt_dir, f"server_{last:08d}.npz"),
                 layout=layout)
-            if set(srv_np) != set(server):
-                raise ValueError(
-                    f"checkpoint fields {sorted(srv_np)} do not match the "
-                    f"configured server state {sorted(server)} — resume "
-                    "with the same --ef/--one-bit/--adaptive-km flags")
+            # reconcile the checkpoint field set with the configured one:
+            # pre-async checkpoints migrate (cold zero double-buffers)
+            # when resuming under --async-agg; any other flag mismatch
+            # raises with the offending fields named
+            srv_np = checkpoint.migrate_server_state(srv_np, like=server)
             server = {k: jnp.asarray(v) for k, v in srv_np.items()}
             # the server buffers describe the OLD model's gradient stream
             # — resuming them onto re-randomized weights would merge a

@@ -52,19 +52,24 @@ def test_server_layout_local_shapes():
     assert lay.d_packed % packing.LANE == 0
 
 
-@pytest.mark.parametrize("ef", [False, True])
-def test_init_matches_abstract_and_specs(ef):
+@pytest.mark.parametrize("ef,async_agg", [(False, False), (True, False),
+                                          (False, True), (True, True)])
+def test_init_matches_abstract_and_specs(ef, async_agg):
     cfg = get_config("mamba2-370m", reduced_variant=True)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    oac = OacServerConfig(error_feedback=ef)
+    oac = OacServerConfig(error_feedback=ef, async_agg=async_agg)
     params_abs = abstract_params(cfg)
     p_specs = shlib.param_pspecs(params_abs, cfg, mesh)
     srv_abs = abstract_server_state(params_abs, mesh=mesh, p_specs=p_specs,
                                     oac=oac)
     params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_abs)
     srv = init_server_state(params, mesh=mesh, cfg=cfg, oac=oac)
-    assert set(srv) == set(srv_abs) == (
-        {"g", "age", "theta", "res"} if ef else {"g", "age", "theta"})
+    want = {"g", "age", "theta"}
+    if ef:
+        want |= {"res"}
+    if async_agg:
+        want |= {"shadow", "pending"}
+    assert set(srv) == set(srv_abs) == want
     for k in srv:
         assert srv[k].shape == srv_abs[k].shape, k
         assert srv[k].dtype == srv_abs[k].dtype, k
@@ -73,6 +78,10 @@ def test_init_matches_abstract_and_specs(ef):
     valid = np.asarray(lay.valid_mask())
     ages = np.asarray(srv["age"])
     assert (ages[valid] == 0).all() and (ages[~valid] == packing.PAD_AGE).all()
+    if async_agg:
+        # the double-buffer lane starts cold
+        assert float(jnp.abs(srv["shadow"].astype(jnp.float32)).sum()) == 0.0
+        assert float(jnp.abs(srv["pending"].astype(jnp.float32)).sum()) == 0.0
 
 
 def test_packed_init_requires_mesh_and_cfg():
@@ -90,6 +99,81 @@ def test_per_leaf_rejects_error_feedback():
         make_train_step(cfg, InputShape("t", 64, 2, "train"), mesh,
                         oac=OacServerConfig(packed=False,
                                             error_feedback=True))
+
+
+def test_async_validation():
+    cfg = get_config("mamba2-370m", reduced_variant=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = InputShape("t", 64, 2, "train")
+    with pytest.raises(ValueError, match="packed"):
+        make_train_step(cfg, shape, mesh,
+                        oac=OacServerConfig(packed=False, async_agg=True))
+    with pytest.raises(ValueError, match="straggler_frac"):
+        make_train_step(cfg, shape, mesh,
+                        oac=OacServerConfig(async_agg=True,
+                                            straggler_frac=1.5))
+    with pytest.raises(ValueError, match="straggler_lag"):
+        make_train_step(cfg, shape, mesh,
+                        oac=OacServerConfig(async_agg=True,
+                                            straggler_lag=0))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint compatibility across the async field-set change (satellite)
+# ---------------------------------------------------------------------------
+
+class TestCheckpointMigration:
+    def _states(self):
+        from repro import checkpoint
+        d = 512
+        sync = {"g": jnp.ones((d,), jnp.bfloat16),
+                "age": jnp.ones((d,), jnp.int8),
+                "theta": jnp.ones((packing.THRESHOLD_STATE_SIZE,),
+                                  jnp.float32)}
+        async_like = dict(sync,
+                          shadow=jnp.zeros((d,), jnp.bfloat16),
+                          pending=jnp.zeros((d,), jnp.bfloat16))
+        return checkpoint, sync, async_like
+
+    def test_migrates_pre_async_checkpoint_to_cold_buffers(self, tmp_path):
+        """A synchronous checkpoint resumed under --async-agg gains cold
+        (zero) shadow/pending buffers — exact, since zeros ARE the async
+        round-0 contents — and survives the save/restore round trip."""
+        checkpoint, sync, async_like = self._states()
+        path = checkpoint.save_server_state(str(tmp_path / "s.npz"), sync)
+        srv_np, _ = checkpoint.restore_server_state(path)
+        out = checkpoint.migrate_server_state(srv_np, like=async_like)
+        assert set(out) == set(async_like)
+        for name in checkpoint.ASYNC_FIELDS:
+            assert out[name].shape == async_like[name].shape
+            assert jnp.asarray(out[name]).dtype == jnp.bfloat16
+            assert float(jnp.abs(jnp.asarray(out[name], jnp.float32)
+                                 ).sum()) == 0.0
+        # the carried fields pass through untouched
+        np.testing.assert_array_equal(np.asarray(out["age"]),
+                                      np.asarray(sync["age"]))
+
+    def test_identity_when_field_sets_match(self):
+        checkpoint, sync, async_like = self._states()
+        out = checkpoint.migrate_server_state(dict(async_like),
+                                              like=async_like)
+        assert set(out) == set(async_like)
+
+    def test_rejects_async_checkpoint_on_sync_config(self):
+        """Dropping a pending merge on the floor would lose one round of
+        gradient — the async -> sync direction must REJECT, naming the
+        unexpected fields."""
+        checkpoint, sync, async_like = self._states()
+        with pytest.raises(ValueError, match="pending"):
+            checkpoint.migrate_server_state(dict(async_like), like=sync)
+
+    def test_rejects_non_async_field_mismatch(self):
+        """Only the async double-buffer lane is synthesizable: a missing
+        EF residual (different --ef flag) still errors."""
+        checkpoint, sync, async_like = self._states()
+        like = dict(async_like, res=jnp.zeros((512,), jnp.float32))
+        with pytest.raises(ValueError, match="res"):
+            checkpoint.migrate_server_state(sync, like=like)
 
 
 @pytest.mark.slow
@@ -127,3 +211,48 @@ def test_two_steps_execute_with_persisted_buffers(ef):
     assert float(np.asarray(server["theta"])[4]) == 1.0   # init flag set
     if ef:
         assert float(jnp.abs(server["res"]).sum()) > 0.0
+
+
+@pytest.mark.slow
+def test_two_async_steps_execute_with_double_buffers():
+    """--async-agg flavour: two real steps with the shadow/pending
+    double-buffer live.  The refreshed ages restart at the straggler lag
+    (never 0), both buffers carry mass after the first round, and the pad
+    sentinel survives."""
+    from repro.data.tokens import lm_batch
+    from repro.models import transformer as tr
+    from repro.optim import make_optimizer
+    cfg = get_config("mamba2-370m", reduced_variant=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = InputShape("t", 64, 2, "train")
+    oac = OacServerConfig(async_agg=True, straggler_frac=0.25,
+                          straggler_lag=1)
+    bundle = make_train_step(cfg, shape, mesh, oac=oac)
+    assert bundle.meta["oac_async"]
+    params = tr.init_lm(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer(bundle.meta["optimizer"], 3e-3)
+    opt_state = opt.init(params)
+    server = init_server_state(params, mesh=mesh, cfg=cfg, oac=oac)
+    step = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                   out_shardings=bundle.out_shardings,
+                   donate_argnums=(0, 1, 2))
+    nm = bundle.meta["n_micro"]
+    with mesh:
+        for t in range(2):
+            toks, labels = lm_batch(t, 2, 64, cfg.vocab)
+            batch = {"tokens": jnp.asarray(toks).reshape(nm, 2 // nm, 64),
+                     "labels": jnp.asarray(labels).reshape(nm, 2 // nm, 64)}
+            params, opt_state, server, loss = step(
+                params, opt_state, server, batch, jnp.asarray(t, jnp.int32))
+    assert np.isfinite(float(loss))
+    ages = np.asarray(server["age"])
+    valid = ages >= 0
+    # async age bookkeeping: refreshed coordinates restart at the lag —
+    # nothing can sit at age 0
+    assert (ages[valid] == 0).sum() == 0
+    frac_lagged = (ages[valid] == oac.straggler_lag).mean()
+    assert 0.03 < frac_lagged < 0.3                # rho = 0.1 target
+    assert (ages[~valid] == packing.PAD_AGE).all()
+    # both halves of the double buffer carry mass after round 1
+    assert float(jnp.abs(server["pending"].astype(jnp.float32)).sum()) > 0.0
+    assert float(jnp.abs(server["shadow"].astype(jnp.float32)).sum()) > 0.0

@@ -7,7 +7,8 @@ when
 * any structural counter broke — the fused-stats steady-state round must
   trace exactly ONE read of the packed gradient buffer (vs 3 on the
   pre-fused path), one fused kernel launch, and (1 pack, 1 unpack) tree
-  copies; or
+  copies; the async double-buffered round must keep the same discipline
+  (the shadow/pending buffers are carried state, never re-packed); or
 * a guarded speedup RATIO regressed by more than ``--tol`` (default 15%)
   relative to the baseline.  Ratios — not absolute wall-clock — are
   compared because CI runners and the baseline machine differ in speed;
@@ -43,6 +44,13 @@ STRUCTURAL = {
     "g_reads_adaptive": 1,
     "copies_adaptive": [1, 1],
     "adaptive_traces": 1,
+    # the --async-agg double-buffered round (DESIGN.md §13): the shadow
+    # mixing is plain elementwise math (not a g re-read) and the pending
+    # swap replaces — not adds to — the optimizer-facing unpack, so the
+    # async round keeps the sync round's copy/read discipline exactly
+    "g_reads_async": 1,
+    "copies_async": [1, 1],
+    "fused_calls_async": 1,
 }
 
 # speedup ratios guarded against the committed baseline (lower = worse).
@@ -57,6 +65,11 @@ GUARDED_RATIOS = (
                                     # steady state (the >= 1.5x claim)
     "speedup_fused_stats",          # fused round vs persisted re-estimation
                                     # (3-read) round
+    "overlap_ratio",                # async round: wall-clock fraction off
+                                    # the optimizer's critical path — the
+                                    # double buffer's raison d'être; a drop
+                                    # means the pending unpack grew or the
+                                    # round picked up critical-path work
 )
 # adaptive_vs_fused (controller overhead, ~1.0) stays in the artifact for
 # the record but is NOT guarded: back-to-back runs on the baseline box
