@@ -41,6 +41,17 @@ per-leaf loop):
   round's pack + fused kernel sits off the optimizer's critical path,
   and ``overlap_ratio`` measures the wall-clock fraction of the round
   that overlap can hide.  Still 1 pack, 1 unpack, ONE read of g.
+* ``sanitize``     — the graceful-degradation round's PRODUCTION shape
+  (DESIGN.md §14): non-finite masking armed inside the fused launch, no
+  simulated faults.  ``sanitize_vs_fused`` is the <=5%
+  robustness-overhead claim: the masking is a few elementwise ops riding
+  the one kernel pass, not a second pass.
+* ``chaos``        — the same round under the in-graph fault harness:
+  per-round NaN/Inf corruption of the aggregated uplink plus
+  block-granular deep-fade erasures, degraded through ``sanitize=True``.
+  The injection's full-buffer PRNG draws are a simulation-only cost
+  (dominant on CPU-XLA, cheap on TPU) — structurally the round still
+  pays 1 pack, 1 unpack, ONE read of g.
 
 Emits CSV rows through ``benchmarks.run`` and writes
 benchmarks/artifacts/packed_bench.json.  ``--smoke`` runs a tiny pytree and
@@ -65,7 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timed
-from repro.core import controller, packing
+from repro.core import controller, faults, packing
 from repro.core.engine import EngineConfig, SelectionEngine, index_jitter
 from repro.kernels import ops
 
@@ -252,6 +263,49 @@ def build_async_fn(tree, *, rho=0.1, straggler_frac=0.25, straggler_lag=1):
     return jax.jit(async_round), jax.jit(critical_path), layout
 
 
+def build_chaos_fn(tree, *, rho=0.1, fade=0.05, nan_rate=1e-4):
+    """The graceful-degradation round (DESIGN.md §14): the fused-stats
+    production shape with the fault channels ON — per-round NaN/Inf
+    corruption of the aggregated uplink plus block-granular deep-fade
+    erasures, degraded through ``sanitize=True`` so poisoned coordinates
+    are masked out of BOTH selection stages in the same kernel pass
+    ('unsent': age climbs, EF mass rides through).  The structural claim
+    is that robustness is free at the memory level: corruption/erasure
+    injection is elementwise math on the packed buffer — not an extra
+    instrumented read — and the sanitize masking rides the one fused
+    kernel launch, so the chaos round keeps the sync round's exact
+    1-pack/1-unpack/1-read discipline."""
+    layout = packing.PackedLayout.from_tree(tree)
+    eng = _mk_engine("packed", layout, warm=True, rho=rho, fused_stats=True)
+    fcfg = faults.FaultConfig(fade=fade, nan_rate=nan_rate)
+
+    def chaos_round(g_tree, gp_flat, age_flat, tstate, key):
+        g_flat = layout.pack(g_tree)           # the only pack per round
+        k_c, k_f = jax.random.split(key)
+        g_flat = faults.corrupt(g_flat, k_c, fcfg)
+        erase = faults.fade_mask(k_f, layout.d_packed, fcfg)
+        g_t, age_next, stats = eng.select_and_merge(
+            g_flat, gp_flat, age_flat, tstate=tstate, erase=erase,
+            sanitize=True)
+        g_t_tree = layout.unpack(g_t, cast=False)
+        return (g_t_tree, g_t.astype(jnp.bfloat16),
+                age_next.astype(jnp.int8), stats["tstate"])
+
+    def sanitize_round(g_tree, gp_flat, age_flat, tstate):
+        # the PRODUCTION cost of robustness: sanitize masking armed, no
+        # simulated faults injected (a real deployment's faults arrive in
+        # the uplink itself — the corrupt/fade draws above are the chaos
+        # harness's cost, paid only when simulating)
+        g_flat = layout.pack(g_tree)
+        g_t, age_next, stats = eng.select_and_merge(
+            g_flat, gp_flat, age_flat, tstate=tstate, sanitize=True)
+        g_t_tree = layout.unpack(g_t, cast=False)
+        return (g_t_tree, g_t.astype(jnp.bfloat16),
+                age_next.astype(jnp.int8), stats["tstate"])
+
+    return jax.jit(chaos_round), jax.jit(sanitize_round), layout
+
+
 def _traced_counts(fn, *args):
     """(fused launches, packs, unpacks, g reads) ONE trace of ``fn``
     records — the structural packed-vs-per-leaf, persisted-state and
@@ -281,6 +335,7 @@ def bench_tree(n_layers, d_model, vocab, repeats=3):
     fused_fn, _, _ = build_persisted_fn(tree, warm=True, fused_stats=True)
     adaptive_fn, _ = build_adaptive_fn(tree)
     async_fn, async_crit_fn, _ = build_async_fn(tree)
+    chaos_fn, sanitize_fn, _ = build_chaos_fn(tree)
 
     ts0 = packing.init_threshold_state()
     gp_flat, age_flat, _ = flat_state(g_prev, age)
@@ -321,6 +376,14 @@ def bench_tree(n_layers, d_model, vocab, repeats=3):
     # replaces (not adds to) the optimizer-facing unpack
     calls_async, *copies_async, reads_async = _traced_counts(
         async_fn, tree, gp_flat, age_flat, ts0, gp_flat, gp_flat)
+    # the chaos round: corruption + fade injection and the sanitize
+    # masking all ride the single fused launch — faults cost no extra
+    # instrumented read of g and no extra tree copies
+    chaos_key = jax.random.PRNGKey(7)
+    calls_chaos, *copies_chaos, reads_chaos = _traced_counts(
+        chaos_fn, tree, gp_flat, age_flat, ts0, chaos_key)
+    calls_san, *copies_san, reads_san = _traced_counts(
+        sanitize_fn, tree, gp_flat, age_flat, ts0)
 
     res = {"n_leaves": n_leaves, "d_valid": layout.d_valid,
            "d_packed": layout.d_packed, "k": eng.budgets()[0],
@@ -337,7 +400,13 @@ def bench_tree(n_layers, d_model, vocab, repeats=3):
            "adaptive_traces": adaptive_traces,
            "fused_calls_async": calls_async,
            "copies_async": tuple(copies_async),
-           "g_reads_async": reads_async}
+           "g_reads_async": reads_async,
+           "fused_calls_chaos": calls_chaos,
+           "copies_chaos": tuple(copies_chaos),
+           "g_reads_chaos": reads_chaos,
+           "fused_calls_sanitize": calls_san,
+           "copies_sanitize": tuple(copies_san),
+           "g_reads_sanitize": reads_san}
 
     us, _ = timed(lambda: jax.block_until_ready(
         per_leaf_fn(tree, g_prev, age)), repeats=repeats)
@@ -398,6 +467,18 @@ def bench_tree(n_layers, d_model, vocab, repeats=3):
     us, _ = timed(lambda: jax.block_until_ready(async_crit_fn(gp_flat)),
                   repeats=max(repeats, 5))
     res["async_critical_path_us"] = us
+    # chaos steady state: the fused round with the fault channels on —
+    # the sanitize overhead claim (DESIGN.md §14) is that degradation
+    # costs a few elementwise ops riding the same program, not a second
+    # pass, so chaos_vs_fused should sit near 1.0
+    us, _ = timed_med(lambda: jax.block_until_ready(
+        chaos_fn(tree, gp_flat, age_flat, ts_fused, chaos_key)),
+        repeats=repeats)
+    res["chaos_us"] = us
+    us, _ = timed_med(lambda: jax.block_until_ready(
+        sanitize_fn(tree, gp_flat, age_flat, ts_fused)),
+        repeats=repeats)
+    res["sanitize_us"] = us
     res["speedup_packed"] = res["per_leaf_us"] / res["packed_us"]
     res["speedup_warm"] = res["per_leaf_us"] / res["packed_warm_us"]
     res["warm_vs_cold"] = res["packed_us"] / res["packed_warm_us"]
@@ -423,6 +504,18 @@ def bench_tree(n_layers, d_model, vocab, repeats=3):
     res["overlap_ratio"] = (1.0 - res["async_critical_path_us"]
                             / res["async_us"])
     res["async_vs_fused"] = res["fused_stats_us"] / res["async_us"]
+    # sanitize/fault overhead: the chaos round vs the fused steady-state
+    # round it extends — like adaptive_vs_fused this compares
+    # near-identical programs, kept in the artifact for the record (the
+    # acceptance target is >= ~0.95, i.e. <= ~5% overhead) but NOT
+    # guarded: the shared-runner denominator swings too much for a gate.
+    # sanitize_vs_fused is the <=5% production-overhead claim (masking
+    # armed, no injected faults — ~1.0); chaos_vs_fused/chaos_vs_async
+    # include the chaos harness's per-round PRNG draws over the full
+    # packed buffer, a simulation-only cost that dominates on CPU-XLA
+    res["sanitize_vs_fused"] = res["fused_stats_us"] / res["sanitize_us"]
+    res["chaos_vs_fused"] = res["fused_stats_us"] / res["chaos_us"]
+    res["chaos_vs_async"] = res["async_us"] / res["chaos_us"]
 
     # isolate the threshold stage: sampled quantile pass (bootstrap branch)
     # vs warm correction (a handful of scalar flops) — the work the warm
@@ -469,6 +562,13 @@ def run(fast: bool = True):
          f"overlap={res['overlap_ratio']:.3f} "
          f"crit_us={res['async_critical_path_us']:.1f} "
          f"reads={res['g_reads_async']}"),
+        ("packed/sanitize", res["sanitize_us"],
+         f"vs_fused={res['sanitize_vs_fused']:.2f}x "
+         f"reads={res['g_reads_sanitize']}"),
+        ("packed/chaos", res["chaos_us"],
+         f"vs_fused={res['chaos_vs_fused']:.2f}x "
+         f"vs_async={res['chaos_vs_async']:.2f}x "
+         f"reads={res['g_reads_chaos']}"),
     ]
     detail = {"tree": {"n_layers": shape[0], "d_model": shape[1],
                        "vocab": shape[2]}, **res,
@@ -503,7 +603,19 @@ def run(fast: bool = True):
                       "discipline, the optimizer consumes the carried "
                       "pending buffer, so overlap_ratio = the wall-clock "
                       "fraction of the round off the optimizer's critical "
-                      "path (guarded against the committed baseline)"}
+                      "path (guarded against the committed baseline); "
+                      "sanitize = the graceful-degradation round's "
+                      "PRODUCTION shape (DESIGN.md §14): non-finite "
+                      "masking armed inside the fused launch, no "
+                      "simulated faults — sanitize_vs_fused is the <=5% "
+                      "robustness-overhead claim (~1.0); chaos = the "
+                      "same round under the in-graph fault harness "
+                      "(per-round NaN/Inf corruption + deep-fade "
+                      "erasures), whose full-buffer PRNG draws are a "
+                      "simulation-only cost that dominates on CPU-XLA — "
+                      "structural counters guarded for both, ratios "
+                      "recorded only (the shared-runner denominator "
+                      "swings too much for a gate)"}
     out_dir = os.path.join(os.path.dirname(__file__), "artifacts")
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "packed_bench.json"), "w") as f:
@@ -552,6 +664,16 @@ def smoke() -> dict:
     assert res["copies_async"] == (1, 1), res
     assert res["g_reads_async"] == 1, res
     assert 0.0 < res["overlap_ratio"] < 1.0, res
+    # the chaos-round claims (DESIGN.md §14): corruption/fade injection
+    # is elementwise math on the packed buffer and the sanitize masking
+    # rides the one fused launch — faults add no instrumented read of g,
+    # no extra tree copies, no extra kernel call
+    assert res["fused_calls_chaos"] == 1, res
+    assert res["copies_chaos"] == (1, 1), res
+    assert res["g_reads_chaos"] == 1, res
+    assert res["fused_calls_sanitize"] == 1, res
+    assert res["copies_sanitize"] == (1, 1), res
+    assert res["g_reads_sanitize"] == 1, res
     out_dir = os.path.join(os.path.dirname(__file__), "artifacts")
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "packed_bench_smoke.json"), "w") as f:
@@ -565,7 +687,9 @@ def smoke() -> dict:
           f"{res['g_reads_adaptive']} read, {res['adaptive_traces']} "
           f"compilation across k_m_frac changes; async round = "
           f"{res['g_reads_async']} read, {res['copies_async']} copies, "
-          f"overlap_ratio={res['overlap_ratio']:.3f}")
+          f"overlap_ratio={res['overlap_ratio']:.3f}; chaos round = "
+          f"{res['g_reads_chaos']} read, {res['copies_chaos']} copies "
+          f"under injected faults")
     return res
 
 

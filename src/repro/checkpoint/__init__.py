@@ -1,8 +1,10 @@
-from repro.checkpoint.io import (ASYNC_FIELDS, latest_server_step,
-                                 latest_step, migrate_server_state, restore,
+from repro.checkpoint.io import (ASYNC_FIELDS, CorruptCheckpointError,
+                                 latest_server_step, latest_step,
+                                 migrate_server_state, restore,
                                  restore_server_state, save,
-                                 save_server_state)
+                                 save_server_state, server_steps)
 
 __all__ = ["latest_step", "restore", "save", "save_server_state",
-           "restore_server_state", "latest_server_step",
-           "migrate_server_state", "ASYNC_FIELDS"]
+           "restore_server_state", "latest_server_step", "server_steps",
+           "migrate_server_state", "ASYNC_FIELDS",
+           "CorruptCheckpointError"]

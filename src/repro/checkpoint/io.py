@@ -18,7 +18,8 @@ import json
 import os
 import re
 import tempfile
-from typing import Any, Dict, Optional, Tuple
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -112,6 +113,18 @@ def restore(path: str, like: Any = None) -> Any:
 _BF16 = "bfloat16"
 
 
+class CorruptCheckpointError(ValueError):
+    """A checkpoint's stored content checksum does not match its bytes
+    (bit rot, a torn write that survived the rename, a truncated copy).
+    Distinct from the layout/field mismatches that raise plain
+    ``ValueError``: corruption is recoverable by falling back to the
+    previous checkpoint, a config mismatch is not."""
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 def save_server_state(path: str, server: Dict[str, Any],
                       layout: Optional["packing.PackedLayout"] = None,
                       step: Optional[int] = None) -> str:
@@ -126,7 +139,7 @@ def save_server_state(path: str, server: Dict[str, Any],
     if step is not None:
         os.makedirs(path, exist_ok=True)
         path = os.path.join(path, f"server_{step:08d}.npz")
-    arrays, dtypes = {}, {}
+    arrays, dtypes, checksums = {}, {}, {}
     for name, val in server.items():
         arr = np.asarray(jax.device_get(val))
         if arr.dtype == jnp.bfloat16:
@@ -135,7 +148,10 @@ def save_server_state(path: str, server: Dict[str, Any],
         else:
             dtypes[name] = str(arr.dtype)
         arrays[name] = arr
-    meta = {"dtypes": dtypes,
+        # content checksum over the stored byte view (post bf16->uint16):
+        # restore verifies the exact bytes it will hand back
+        checksums[name] = _crc(arr)
+    meta = {"dtypes": dtypes, "checksums": checksums,
             "layout": (packing.layout_to_meta(layout)
                        if layout is not None else None)}
     fd, tmp = tempfile.mkstemp(
@@ -157,17 +173,33 @@ def restore_server_state(path: str,
                                     Optional[Dict[str, Any]]]:
     """Load a ``save_server_state`` checkpoint: (server dict, layout meta).
 
-    Dtypes (incl. bf16) restore bit-exactly.  If ``layout`` is given, the
-    saved block table must match it (``ValueError`` otherwise — restoring
-    flat buffers onto a different leaf layout would silently scramble
-    every parameter)."""
+    Dtypes (incl. bf16) restore bit-exactly.  Content checksums recorded
+    at save time are verified against the loaded bytes —
+    ``CorruptCheckpointError`` on any mismatch (callers fall back to the
+    previous checkpoint; silently resuming from rotted buffers would
+    poison the whole continued trajectory).  Pre-checksum checkpoints
+    (no ``checksums`` record) load without verification.  If ``layout``
+    is given, the saved block table must match it (``ValueError``
+    otherwise — restoring flat buffers onto a different leaf layout
+    would silently scramble every parameter)."""
     data = np.load(path)
     meta = json.loads(str(data["__server_meta__"][()]))
+    crcs = meta.get("checksums")
     server = {}
     for name in data.files:
         if name == "__server_meta__":
             continue
         arr = data[name]
+        if crcs is not None:
+            if name not in crcs:
+                raise CorruptCheckpointError(
+                    f"{path}: array {name!r} has no recorded checksum")
+            got = _crc(arr)
+            if got != crcs[name]:
+                raise CorruptCheckpointError(
+                    f"{path}: array {name!r} fails its content checksum "
+                    f"(stored {crcs[name]:#010x}, loaded {got:#010x}) — "
+                    "checkpoint is corrupt")
         tag = meta["dtypes"][name]
         server[name] = (arr.view(jnp.bfloat16) if tag == _BF16
                         else arr.astype(np.dtype(tag), copy=False))
@@ -225,12 +257,20 @@ def migrate_server_state(server: Dict[str, np.ndarray],
     return out
 
 
-def latest_server_step(ckpt_dir: str) -> Optional[int]:
+def server_steps(ckpt_dir: str) -> List[int]:
+    """Every server checkpoint step under ``ckpt_dir``, newest first —
+    the resume fallback order (try the latest, walk back on
+    ``CorruptCheckpointError``)."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
              if (m := re.fullmatch(r"server_(\d+)\.npz", f))]
-    return max(steps) if steps else None
+    return sorted(steps, reverse=True)
+
+
+def latest_server_step(ckpt_dir: str) -> Optional[int]:
+    steps = server_steps(ckpt_dir)
+    return steps[0] if steps else None
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

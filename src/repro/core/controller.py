@@ -214,7 +214,7 @@ class BudgetController:
     function of ``(state, age_hist, mag_hist)``."""
 
     def __init__(self, cfg: ControllerConfig = ControllerConfig(), *,
-                 rho: float, age_offset: float = 0.0):
+                 rho: float, age_offset: float = 0.0, thin: float = 0.0):
         self.cfg = cfg
         self.rho = float(rho)
         # async-aggregation mode: every selected coordinate's age restarts
@@ -223,7 +223,14 @@ class BudgetController:
         # (``markov.shifted_aou_distribution``).  Raising the setpoint by
         # the same constant makes the controller regulate the sync-
         # equivalent freshness instead of fighting the uplink delay.
-        self.age_offset = float(age_offset)
+        # Participation thinning (fault channels, ``core.faults``) shifts
+        # the mean by the geometric-delay expectation thin/(1 - thin)
+        # (``markov.thinned_aou_distribution``) — same absorption pattern,
+        # so the controller does not fight churn it cannot fix.
+        if not 0.0 <= thin < 1.0:
+            raise ValueError(f"thin must be in [0, 1), got {thin}")
+        self.age_offset = float(age_offset) + (thin / (1.0 - thin)
+                                               if thin else 0.0)
         if cfg.target_age is None:
             fracs, targets = lemma1_target_table(cfg, self.rho)
             self._fracs = jnp.asarray(fracs)

@@ -130,7 +130,8 @@ def thresholds_from_samples(mag_s: Array, age_eff_s: Array, *, rho: float,
 def sampled_thresholds(g: Array, age: Array, *, rho: float, k_m_frac,
                        sample_cap: int,
                        sample_ids: Optional[Array] = None,
-                       residual: Optional[Array] = None
+                       residual: Optional[Array] = None,
+                       sanitize: bool = False
                        ) -> Tuple[Array, Array]:
     """(θ_M, θ_A) from strided-sample quantiles (no global sort).
 
@@ -147,7 +148,13 @@ def sampled_thresholds(g: Array, age: Array, *, rho: float, k_m_frac,
     ``residual`` (error feedback) folds into the magnitude statistic:
     θ_M is estimated on ``|g + residual|`` — the residual is sampled at the
     same positions and added sample-wise, so no d-length effective-gradient
-    temp is materialised for the estimate."""
+    temp is materialised for the estimate.
+
+    ``sanitize`` (static) demotes non-finite sample scores to magnitude 0
+    and age −1 — they land at the bottom of both order statistics, so a
+    corrupted coordinate can only *tighten* the estimated thresholds,
+    never poison them with NaN (a single NaN sample makes
+    ``jnp.quantile`` return NaN, which would zero the entire round)."""
     packing.G_READS += 1
     age32 = age.astype(jnp.float32)
     if sample_ids is None:
@@ -162,20 +169,31 @@ def sampled_thresholds(g: Array, age: Array, *, rho: float, k_m_frac,
         if residual is not None:
             g_s = g_s + residual[ids].astype(jnp.float32)
         age_s = age32[ids] + jitter_from_ids(ids)
+    if sanitize:
+        fin_s = jnp.isfinite(g_s)
+        g_s = jnp.where(fin_s, g_s, 0.0)
+        age_s = jnp.where(fin_s, age_s, -1.0)
     return thresholds_from_samples(jnp.abs(g_s), age_s, rho=rho,
                                    k_m_frac=k_m_frac)
 
 
-def exact_thresholds(g: Array, age: Array, *, k: int, k_m: int
-                     ) -> Tuple[Array, Array]:
+def exact_thresholds(g: Array, age: Array, *, k: int, k_m: int,
+                     sanitize: bool = False) -> Tuple[Array, Array]:
     """Order-statistic (θ_M, θ_A) that reproduce exact FAIR-k on tie-free
     inputs: θ_M sits strictly between the k_m-th and (k_m+1)-th largest
     |g|, θ_A between the k_a-th and (k_a+1)-th largest jittered age *among
-    the magnitude-stage complement*.  O(d log d) — parity/testing path."""
+    the magnitude-stage complement*.  O(d log d) — parity/testing path.
+    ``sanitize`` demotes non-finite scores to magnitude −1 / age −inf so
+    they rank below every real coordinate in both stages."""
     packing.G_READS += 1
     d = g.shape[0]
     k_a = k - k_m
-    mag = jnp.abs(g.astype(jnp.float32))
+    g32 = g.astype(jnp.float32)
+    mag = jnp.abs(g32)
+    fin = None
+    if sanitize:
+        fin = jnp.isfinite(g32)
+        mag = jnp.where(fin, mag, -1.0)
     if k_m == 0:
         theta_m = jnp.float32(jnp.inf)
         mask_m = jnp.zeros((d,), bool)
@@ -188,13 +206,16 @@ def exact_thresholds(g: Array, age: Array, *, k: int, k_m: int
         return theta_m, jnp.float32(jnp.inf)
     age_eff = age.astype(jnp.float32) + index_jitter(d)
     rest = jnp.where(mask_m, -jnp.inf, age_eff)
+    if fin is not None:
+        rest = jnp.where(fin, rest, -jnp.inf)
     vals = jax.lax.top_k(rest, min(k_a + 1, d))[0]
     edge = vals[-1] if k_a >= d else vals[k_a]
     theta_a = (vals[k_a - 1] + edge) / 2.0
     return theta_m, theta_a
 
 
-def exact_thresholds_dynamic(g: Array, age: Array, *, k: int, k_m
+def exact_thresholds_dynamic(g: Array, age: Array, *, k: int, k_m,
+                             sanitize: bool = False
                              ) -> Tuple[Array, Array]:
     """``exact_thresholds`` with a *traced* magnitude budget ``k_m``
     (int32 in [0, k]; ``k`` stays static — the adaptive controller only
@@ -206,7 +227,12 @@ def exact_thresholds_dynamic(g: Array, age: Array, *, k: int, k_m
     d = g.shape[0]
     kk = min(k + 1, d)
     km = jnp.clip(jnp.asarray(k_m, jnp.int32), 0, k)
-    mag = jnp.abs(g.astype(jnp.float32))
+    g32 = g.astype(jnp.float32)
+    mag = jnp.abs(g32)
+    fin = None
+    if sanitize:
+        fin = jnp.isfinite(g32)
+        mag = jnp.where(fin, mag, -1.0)
     vals = jax.lax.top_k(mag, kk)[0]
     hi = vals[jnp.maximum(km - 1, 0)]
     edge = vals[jnp.minimum(km, kk - 1)]
@@ -216,6 +242,8 @@ def exact_thresholds_dynamic(g: Array, age: Array, *, k: int, k_m
     k_a = k - km
     age_eff = age.astype(jnp.float32) + index_jitter(d)
     rest = jnp.where(mask_m, -jnp.inf, age_eff)
+    if fin is not None:
+        rest = jnp.where(fin, rest, -jnp.inf)
     avals = jax.lax.top_k(rest, kk)[0]
     ahi = avals[jnp.maximum(k_a - 1, 0)]
     aedge = avals[jnp.minimum(k_a, kk - 1)]
@@ -449,28 +477,30 @@ class SelectionEngine:
 
     def thresholds(self, g: Array, age: Array,
                    residual: Optional[Array] = None,
-                   k_m_frac=None) -> Tuple[Array, Array]:
+                   k_m_frac=None, sanitize: bool = False
+                   ) -> Tuple[Array, Array]:
         """(θ_M, θ_A) per config (order-statistic or sampled-quantile).
         ``residual`` folds into the magnitude statistic (score = g + res);
-        ``k_m_frac`` (optional traced scalar) overrides the static split."""
+        ``k_m_frac`` (optional traced scalar) overrides the static split;
+        ``sanitize`` keeps non-finite scores out of both estimates."""
         k, k_m, _ = self.budgets()
         if k_m_frac is None:
             if self.cfg.exact_theta:
                 return exact_thresholds(eff_score(g, residual), age,
-                                        k=k, k_m=k_m)
+                                        k=k, k_m=k_m, sanitize=sanitize)
             rho, km_frac = self._rho_parts()
             return sampled_thresholds(g, age, rho=rho, k_m_frac=km_frac,
                                       sample_cap=self.cfg.sample_cap,
-                                      residual=residual)
+                                      residual=residual, sanitize=sanitize)
         km = self._km_traced(k_m_frac)
         if self.cfg.exact_theta:
             return exact_thresholds_dynamic(eff_score(g, residual), age,
-                                            k=k, k_m=km)
+                                            k=k, k_m=km, sanitize=sanitize)
         rho, _ = self._rho_parts()
         return sampled_thresholds(g, age, rho=rho,
                                   k_m_frac=self._km_frac_eff(km),
                                   sample_cap=self.cfg.sample_cap,
-                                  residual=residual)
+                                  residual=residual, sanitize=sanitize)
 
     # -- fused server phase -------------------------------------------------
 
@@ -480,7 +510,9 @@ class SelectionEngine:
                          residual: Optional[Array] = None,
                          fresh: Optional[Array] = None,
                          k_m_frac=None,
-                         age_lag: Optional[int] = None
+                         age_lag: Optional[int] = None,
+                         erase: Optional[Array] = None,
+                         sanitize: bool = False
                          ) -> Tuple[Array, Array, Dict[str, Any]]:
         """One server phase: select on ``g``, merge fresh ``g`` over stale
         ``g_prev`` (Eq. 8), advance AoU (Eq. 10).  Returns f32
@@ -529,7 +561,26 @@ class SelectionEngine:
         this mode — the ``age' == 0`` convention no longer identifies the
         selected set downstream) all use the PRE-shift selection.
         ``age_lag in (None, 0)`` traces the unchanged synchronous
-        program — bit-exact with today's trajectory."""
+        program — bit-exact with today's trajectory.
+
+        ``sanitize`` (STATIC bool, any backend): graceful degradation
+        under fault injection (core/faults.py).  Non-finite score
+        coordinates are excluded from BOTH selection stages — they are
+        semantically "unsent": the merge keeps the stale value, age keeps
+        climbing, the error-feedback residual passes through unchanged,
+        and the emitted statistics (counts + histograms) never see them.
+        ``sanitize=False`` (the default) traces the historical program
+        bit-exactly — the guard predicate IS the pad-validity predicate,
+        so off-mode costs nothing.
+
+        ``erase`` (optional float mask, requires ``sanitize=True``):
+        deep-fade block erasures on the aggregated OAC signal.  Erased
+        coordinates (``erase > 0``) are demoted to NaN *before* selection
+        so the sanitize stage treats them exactly like corrupted
+        gradients — one degradation path for both fault channels.  Fold
+        round outages (realised participation ``N_t == 0``) in with
+        ``faults.erase_with_outage``: a fully-erased round degrades to
+        the age-increment-only no-op round."""
         if age_lag is not None:
             if int(age_lag) < 0:
                 raise ValueError(f"age_lag must be >= 0, got {age_lag}")
@@ -543,18 +594,32 @@ class SelectionEngine:
             raise ValueError(
                 f"traced k_m_frac adapts the FAIR-k split only — policy "
                 f"{self.cfg.policy!r} pins or ignores it")
+        if erase is not None and not sanitize:
+            raise ValueError("erase needs sanitize=True — erased "
+                             "coordinates degrade through the NaN path")
+        if sanitize and self.cfg.policy not in THRESHOLD_POLICIES:
+            raise ValueError(
+                f"sanitize runs selection in threshold/rank form — policy "
+                f"{self.cfg.policy!r} needs index arithmetic; choose from "
+                f"{THRESHOLD_POLICIES}")
+        if erase is not None:
+            # one degradation path for both fault channels: erased
+            # coordinates become NaN scores and ride the sanitize stage
+            g = jnp.where(jnp.asarray(erase) > 0.0, jnp.float32(jnp.nan),
+                          g.astype(jnp.float32))
         backend = self.cfg.backend
         if backend == "exact":
             return self._exact_update(g, g_prev, age, key, residual, fresh,
-                                      k_m_frac, age_lag)
+                                      k_m_frac, age_lag, sanitize)
         if backend == "threshold":
             return self._threshold_update(g, g_prev, age, key, residual,
-                                          fresh, k_m_frac, age_lag)
+                                          fresh, k_m_frac, age_lag, sanitize)
         if backend == "packed":
             return self._packed_update(g, g_prev, age, key, tstate,
-                                       residual, fresh, k_m_frac, age_lag)
+                                       residual, fresh, k_m_frac, age_lag,
+                                       sanitize)
         return self._sharded_update(g, g_prev, age, key, residual, fresh,
-                                    tstate, k_m_frac, age_lag)
+                                    tstate, k_m_frac, age_lag, sanitize)
 
     def _noisy(self, fresh: Array, key: Optional[Array]) -> Array:
         cfg = self.cfg
@@ -565,13 +630,32 @@ class SelectionEngine:
         return fresh.astype(jnp.float32) + noise
 
     def _exact_update(self, g, g_prev, age, key, residual=None, fresh=None,
-                      k_m_frac=None, age_lag=None):
+                      k_m_frac=None, age_lag=None, sanitize=False):
         k, k_m, _ = self.budgets()
         key_sel = key_noise = None
         if key is not None:
             key_sel, key_noise = jax.random.split(key)
         score = eff_score(g, residual)
-        if k_m_frac is None:
+        fin = mask_m_s = None
+        if sanitize:
+            # rank-form selection on demoted statistics: non-finite
+            # coordinates rank below every healthy one in both stages
+            # (magnitude −1, age −1), and the final AND keeps them out
+            # even when the budget exceeds the healthy coordinate count —
+            # they stay "unsent" (stale value kept, age climbing)
+            fin = jnp.isfinite(score)
+            score = jnp.where(fin, score, 0.0)
+            km = self._km_traced(k_m_frac) if k_m_frac is not None else k_m
+            mag_eff = jnp.where(fin, jnp.abs(score), -1.0)
+            age_eff = jnp.where(fin, age.astype(jnp.float32), -1.0)
+            mask, mask_m_s = fair_k_masks_dynamic(mag_eff, age_eff, k, km)
+            finf = fin.astype(jnp.float32)
+            mask = mask * finf
+            mask_m_s = mask_m_s * finf
+            stats = {"n_selected": mask.sum(), "k": k}
+            if k_m_frac is not None:
+                stats["k_m"] = km
+        elif k_m_frac is None:
             idx = self.select(key_sel, score, age)
             mask = selection.mask_from_indices(idx, self.d)
             stats = {"idx": idx, "n_selected": jnp.float32(k), "k": k}
@@ -584,6 +668,8 @@ class SelectionEngine:
             mask, _ = fair_k_masks_dynamic(jnp.abs(score), age, k, km)
             stats = {"n_selected": jnp.float32(k), "k": k, "k_m": km}
         sent = score if fresh is None else fresh.astype(jnp.float32)
+        if sanitize and fresh is not None:
+            sent = jnp.where(jnp.isfinite(sent), sent, 0.0)
         g_t, age_next = masked_merge(self._noisy(sent, key_noise), g_prev,
                                      age, mask)
         if age_lag is not None:
@@ -597,27 +683,38 @@ class SelectionEngine:
             # the kernel oracle uses, so they are bit-comparable to the
             # threshold/packed backends' kernel-emitted ones
             from repro.kernels import ref    # deferred: kernels import core
+            hist_valid = age.astype(jnp.float32) >= 0.0
+            if fin is not None:
+                hist_valid = hist_valid & fin
             mag_hist, age_hist = ref.strided_hists_ref(
-                score, age_next, age.astype(jnp.float32) >= 0.0,
-                packing.hist_stride(self.d))
-            stats |= {"n_sel_m": jnp.asarray(k_m, jnp.float32),
+                score, age_next, hist_valid, packing.hist_stride(self.d))
+            n_sel_m = (mask_m_s.sum() if mask_m_s is not None
+                       else jnp.asarray(k_m, jnp.float32))
+            stats |= {"n_sel_m": n_sel_m,
                       "mag_hist": mag_hist, "age_hist": age_hist}
         if residual is not None:
             # noise-free accounting (the channel error is not observable by
-            # the clients) — identical formula to the fused kernel's stage
-            stats["residual"] = score - mask * sent
+            # the clients) — identical formula to the fused kernel's stage;
+            # sanitized-out coordinates keep their old residual
+            res_next = score - mask * sent
+            if fin is not None:
+                res_next = jnp.where(fin, res_next,
+                                     residual.astype(jnp.float32))
+            stats["residual"] = res_next
         return g_t, age_next, stats
 
     def _threshold_update(self, g, g_prev, age, key, residual=None,
-                          fresh=None, k_m_frac=None, age_lag=None):
+                          fresh=None, k_m_frac=None, age_lag=None,
+                          sanitize=False):
         from repro.kernels import ops          # deferred: kernels import core
         k, _, _ = self.budgets()
         theta_m, theta_a = self.thresholds(g, age, residual=residual,
-                                           k_m_frac=k_m_frac)
+                                           k_m_frac=k_m_frac,
+                                           sanitize=sanitize)
         if self.cfg.fused_stats:
             g_t, age_next, res_next, kstats = ops.fairk_stats_update(
                 g, g_prev, age, theta_m, theta_a, residual=residual,
-                fresh=fresh, mode=self.cfg.kernel_mode)
+                fresh=fresh, mode=self.cfg.kernel_mode, sanitize=sanitize)
             n_sel = kstats["n_sel"]
             extra = {"n_sel_m": kstats["n_sel_m"],
                      "mag_hist": kstats["mag_hist"],
@@ -625,7 +722,7 @@ class SelectionEngine:
         else:
             g_t, age_next, res_next = ops.fairk_ef_update(
                 g, g_prev, age, theta_m, theta_a, residual=residual,
-                fresh=fresh, mode=self.cfg.kernel_mode)
+                fresh=fresh, mode=self.cfg.kernel_mode, sanitize=sanitize)
             # selected coordinates are exactly the age-reset ones (Eq. 10)
             n_sel = (age_next == 0.0).astype(jnp.float32).sum()
             extra = {}
@@ -709,7 +806,7 @@ class SelectionEngine:
         return jnp.where(on_track & pred_ok, tstate["streak"] + 1.0, 0.0)
 
     def _packed_thresholds(self, g, age, tstate, residual=None,
-                           k_m_frac=None):
+                           k_m_frac=None, sanitize=False):
         """(θ_M, θ_A, streak') for a packed buffer: pad-excluding sampled
         quantiles, or — when warm — last round's thresholds with the
         budget-tracking correction (no quantile pass at all on steady-state
@@ -728,9 +825,11 @@ class SelectionEngine:
             if k_m_frac is not None:
                 return (*exact_thresholds_dynamic(
                     eff_score(g, residual), age, k=k,
-                    k_m=self._km_traced(k_m_frac)), streak)
+                    k_m=self._km_traced(k_m_frac),
+                    sanitize=sanitize), streak)
             return (*exact_thresholds(eff_score(g, residual), age,
-                                      k=k, k_m=k_m), streak)
+                                      k=k, k_m=k_m,
+                                      sanitize=sanitize), streak)
         if cfg.fused_stats and cfg.warm_start and tstate is not None:
             return self._stats_thresholds(tstate, k_m_frac)
         rho, km_frac = self._rho_parts()
@@ -742,7 +841,7 @@ class SelectionEngine:
             tm, ta = sampled_thresholds(
                 g, age, rho=rho, k_m_frac=km_frac,
                 sample_cap=cfg.sample_cap, sample_ids=self._sample_ids,
-                residual=residual)
+                residual=residual, sanitize=sanitize)
             if cfg.reduce_axes:
                 tm = jax.lax.pmean(tm, cfg.reduce_axes)
                 ta = jax.lax.pmean(ta, cfg.reduce_axes)
@@ -774,7 +873,8 @@ class SelectionEngine:
         return tm, ta, streak
 
     def _packed_update(self, g, g_prev, age, key, tstate, residual=None,
-                       fresh=None, k_m_frac=None, age_lag=None):
+                       fresh=None, k_m_frac=None, age_lag=None,
+                       sanitize=False):
         """One fused FAIR-k pass over the whole packed pytree buffer.
 
         Exactly one quantile estimation (or none: warm rounds correct the
@@ -791,19 +891,20 @@ class SelectionEngine:
         k, _, _ = self.budgets()
         theta_m, theta_a, streak = self._packed_thresholds(g, age, tstate,
                                                            residual,
-                                                           k_m_frac)
+                                                           k_m_frac,
+                                                           sanitize)
         if cfg.fused_stats:
             # counts AND histograms come out of the kernel itself — the
             # fused launch is the only read of (g, residual) this round
             g_t, age_next, res_next, kstats = ops.fairk_stats_update(
                 g, g_prev, age, theta_m, theta_a, residual=residual,
-                fresh=fresh, mode=cfg.kernel_mode)
+                fresh=fresh, mode=cfg.kernel_mode, sanitize=sanitize)
             n_sel, n_sel_m = kstats["n_sel"], kstats["n_sel_m"]
             mag_hist, age_hist = kstats["mag_hist"], kstats["age_hist"]
         else:
             g_t, age_next, res_next = ops.fairk_ef_update(
                 g, g_prev, age, theta_m, theta_a, residual=residual,
-                fresh=fresh, mode=cfg.kernel_mode)
+                fresh=fresh, mode=cfg.kernel_mode, sanitize=sanitize)
             # legacy two-pass accounting: selected coordinates are exactly
             # the age-reset ones (Eq. 10; pads keep the negative sentinel
             # so they never count), and the magnitude-stage count re-reads
@@ -860,7 +961,7 @@ class SelectionEngine:
                               key: Optional[Array] = None,
                               tstate: Optional[Dict[str, Array]] = None,
                               residual: Optional[Array] = None,
-                              k_m_frac=None):
+                              k_m_frac=None, sanitize: bool = False):
         """Pytree façade over the packed backend: pack (g, g_prev, age),
         run the single fused pass, unpack ``(g_t, age')`` back to the tree
         structure (leaf dtypes from the layout).  Returns
@@ -877,13 +978,14 @@ class SelectionEngine:
         ag = lay.pack_age(age_tree)
         g_t, age_next, stats = self._packed_update(g, gp, ag, key, tstate,
                                                    residual,
-                                                   k_m_frac=k_m_frac)
+                                                   k_m_frac=k_m_frac,
+                                                   sanitize=sanitize)
         return lay.unpack(g_t, cast=False), lay.unpack(age_next,
                                                        cast=False), stats
 
     def _sharded_update(self, g, g_prev, age, key, residual=None,
                         fresh=None, tstate=None, k_m_frac=None,
-                        age_lag=None):
+                        age_lag=None, sanitize=False):
         cfg = self.cfg
         mesh = self.mesh
         axes = tuple(mesh.axis_names)
@@ -915,7 +1017,8 @@ class SelectionEngine:
                                                               k_m_frac)
         elif use_global:
             theta_m, theta_a = self.thresholds(g, age, residual=residual,
-                                               k_m_frac=k_m_frac)
+                                               k_m_frac=k_m_frac,
+                                               sanitize=sanitize)
         else:
             theta_m = theta_a = jnp.float32(0.0)    # placeholder, unused
         per_shard_boot = not (warm or use_global)
@@ -933,6 +1036,13 @@ class SelectionEngine:
             for ax in axes:
                 my = my * mesh.shape[ax] + jax.lax.axis_index(ax)
             score = eff_score(g_l, res_l if has_res else None)
+            fin = None
+            if sanitize:
+                # local graceful degradation, no extra collectives: the
+                # cleaned score keeps 0 * NaN out of the merge and the
+                # finite AND keeps corrupted coordinates unselected
+                fin = jnp.isfinite(score)
+                score = jnp.where(fin, score, 0.0)
             if per_shard_boot:
                 tm, ta = sampled_thresholds(
                     score, age_l, rho=rho,
@@ -942,6 +1052,10 @@ class SelectionEngine:
             # the mask is the one the unsharded backends would compute
             mask, mask_m = threshold_mask(score, age_l, tm, ta,
                                           index_offset=my * g_l.shape[0])
+            if fin is not None:
+                finf = fin.astype(jnp.float32)
+                mask = mask * finf
+                mask_m = mask_m * finf
             fresh_l = score.astype(jnp.float32)
             if cfg.noise_std > 0.0:
                 kk = jax.random.fold_in(key_l, my)
@@ -953,13 +1067,22 @@ class SelectionEngine:
                 # delivery lag BEFORE the histograms bin them, so the
                 # psum'd partials come out naturally shifted
                 age_next = packing.shift_selected_age(age_next, age_lag)
-            res_next = (score - mask * score if has_res
-                        else jnp.zeros((), jnp.float32))
+            if has_res:
+                res_next = score - mask * score
+                if fin is not None:
+                    # sanitized-out coordinates keep their old residual
+                    res_next = jnp.where(fin, res_next,
+                                         res_l.astype(jnp.float32))
+            else:
+                res_next = jnp.zeros((), jnp.float32)
             n_sel = jax.lax.psum(mask.sum(), axes)
             if fused:
                 from repro.kernels import ref      # deferred import
+                hist_valid = age_l >= 0.0
+                if fin is not None:
+                    hist_valid = hist_valid & fin
                 mh_l, ah_l = ref.strided_hists_ref(
-                    score, age_next, age_l >= 0.0, stride)
+                    score, age_next, hist_valid, stride)
                 part = (jax.lax.psum(mask_m.sum(), axes),
                         jax.lax.psum(mh_l, axes), jax.lax.psum(ah_l, axes))
             else:

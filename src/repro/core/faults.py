@@ -1,0 +1,267 @@
+"""In-graph fault injection + graceful degradation (DESIGN.md §14).
+
+The paper's convergence result (Theorem 1) assumes fixed participation
+and well-behaved iid channel noise; at population scale dropout waves,
+deep fades, corrupted uplinks and crashed hosts are the steady state.
+This module makes churn a TRACED part of the round — every fault channel
+is an elementwise function of (state, key), so ``FLConfig.scan_rounds``
+and the vmapped sweep grid inherit it with zero recompiles — and FAIR-k's
+staleness machinery absorbs the damage: a missed or masked update is just
+"one more round of age" (the age-aware partial-update line, PAPERS.md
+arXiv:2504.01357 / 2602.02469).
+
+Fault channels
+--------------
+* **client dropout** — per-client availability as a two-state
+  Gilbert-Elliott Markov process (good <-> bad); ``burst`` sets the mean
+  bad-state dwell so outages can be bursty, the default is the iid
+  Bernoulli special case.  The chain algebra mirrors ``core.markov``'s
+  treatment: the stationary bad-state mass equals ``dropout``.
+* **deep-fade erasures** — block-granular erasure of the *aggregated*
+  signal (a faded OFDM symbol group takes out its whole block of
+  coordinates, paper Sec. II channel model).  Erased coordinates are
+  semantically "unsent": the sanitize stage of ``engine.select_and_merge``
+  keeps them out of selection, their mass stays in the EF residual, their
+  age keeps climbing.
+* **NaN/Inf corruption** — per-coordinate non-finite contamination of the
+  fresh gradient (a crashed host's garbage uplink).  Same degradation
+  semantics as an erasure; never silently zeroed.
+
+The realized participation count ``N_t`` is traced, never a Python int;
+``participation_scale`` is the single guarded 1/N helper (``N_t == 0``
+degrades the round to a bit-exact age-increment-only no-op).
+
+Divergence watchdog
+-------------------
+``watchdog_step`` is the pure state machine behind ``fl/trainer.py``'s
+guard: EMA'd loss / update-norm baselines, a trip on any non-finite or
+``spike``x-EMA observation, a cooldown window that tightens ``k_m`` (a
+smaller, more magnitude-selective budget while recovering).  The rollback
+itself is a ``tree_select`` of the live state against an in-graph shadow
+snapshot — the caller owns the snapshot cadence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Per-round fault-channel rates.  All-zero (the default) is the
+    off mode: no fault state is carried, no fault ops are traced, and
+    every trace is bit-exact with the fault-free build."""
+    dropout: float = 0.0        # stationary per-client unavailability
+    burst: Optional[float] = None  # mean bad-state dwell in rounds
+                                # (Gilbert-Elliott); None = iid Bernoulli
+    fade: float = 0.0           # per-block deep-fade erasure probability
+                                # on the aggregated signal
+    fade_block: int = 128       # coordinates per fade block (one OFDM
+                                # symbol group's worth)
+    nan_rate: float = 0.0       # per-coordinate non-finite corruption
+                                # probability on the fresh gradient
+
+    def __post_init__(self):
+        if not 0.0 <= self.dropout < 1.0:
+            raise ValueError(f"dropout must be in [0, 1), got {self.dropout}")
+        if not 0.0 <= self.fade < 1.0:
+            raise ValueError(f"fade must be in [0, 1), got {self.fade}")
+        if not 0.0 <= self.nan_rate < 1.0:
+            raise ValueError(
+                f"nan_rate must be in [0, 1), got {self.nan_rate}")
+        if self.burst is not None and self.burst < 1.0:
+            raise ValueError(f"burst must be >= 1 round, got {self.burst}")
+        if self.fade_block < 1:
+            raise ValueError(f"fade_block must be >= 1, got {self.fade_block}")
+
+    @property
+    def enabled(self) -> bool:
+        return (self.dropout > 0.0 or self.fade > 0.0
+                or self.nan_rate > 0.0)
+
+    @property
+    def thin(self) -> float:
+        """Effective per-round refresh-blocking probability for the
+        Lemma-1 thinning model (``markov.thinned_aou_distribution``) and
+        the controller setpoint (``BudgetController(..., thin=...)``).
+
+        Dropout barely thins: the OAC superposition re-normalizes over
+        the survivors and the selection budget refills from them, so only
+        a TOTAL outage (all N clients down at once) blocks a refresh —
+        negligible at the configured rates.  The dominant channels are
+        the post-aggregation ones that the sanitize stage masks out of
+        selection coordinate-by-coordinate: fade erasure + corruption."""
+        return min(0.99, self.fade + self.nan_rate)
+
+
+# ---------------------------------------------------------------------------
+# client availability: Gilbert-Elliott two-state chain
+# ---------------------------------------------------------------------------
+
+def ge_probs(cfg: FaultConfig) -> Tuple[float, float]:
+    """(p_gb, p_bg): good->bad and bad->good transition probabilities.
+
+    Stationarity pins ``pi_bad = p_gb / (p_gb + p_bg) = dropout``;
+    ``burst`` pins the mean bad dwell ``1 / p_bg``.  ``burst=None`` is
+    the iid special case (next state independent of current state):
+    ``p_gb = dropout``, ``p_bg = 1 - dropout``."""
+    if cfg.dropout <= 0.0:
+        return 0.0, 1.0
+    if cfg.burst is None:
+        return cfg.dropout, 1.0 - cfg.dropout
+    p_bg = 1.0 / cfg.burst
+    p_gb = min(1.0, cfg.dropout / (1.0 - cfg.dropout) * p_bg)
+    return p_gb, p_bg
+
+
+def init_avail_state(key: Array, n_clients: int,
+                     cfg: FaultConfig) -> Array:
+    """(n_clients,) f32 availability drawn from the stationary law
+    (1.0 = available).  All-ones when dropout is off."""
+    if cfg.dropout <= 0.0:
+        return jnp.ones((n_clients,), jnp.float32)
+    u = jax.random.uniform(key, (n_clients,))
+    return (u >= cfg.dropout).astype(jnp.float32)
+
+
+def avail_step(avail: Array, key: Array, cfg: FaultConfig) -> Array:
+    """One Gilbert-Elliott transition of the availability vector —
+    elementwise where-ops only, so it vmaps over populations and scans
+    over rounds without recompiling."""
+    p_gb, p_bg = ge_probs(cfg)
+    u = jax.random.uniform(key, avail.shape)
+    good = avail > 0.5
+    nxt = jnp.where(good, u >= p_gb, u < p_bg)
+    return nxt.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# per-round fault channels
+# ---------------------------------------------------------------------------
+
+def participation_scale(total: Array, n_t: Array) -> Array:
+    """The single guarded 1/N rescale: ``total / N_t`` with a traced
+    denominator that may be zero.  ``N_t == 0`` returns exact zeros (the
+    round degrades to an age-increment-only no-op) instead of Inf/NaN
+    poisoning the merge."""
+    n_t = jnp.asarray(n_t, jnp.float32)
+    scaled = total / jnp.maximum(n_t, 1.0)
+    return jnp.where(n_t > 0.0, scaled, jnp.zeros_like(scaled))
+
+
+def fade_mask(key: Array, d: int, cfg: FaultConfig) -> Array:
+    """(d,) f32 erasure mask (1.0 = erased) at fade-block granularity: a
+    deep fade takes out a whole block of ``fade_block`` consecutive
+    coordinates of the aggregated signal."""
+    if cfg.fade <= 0.0:
+        return jnp.zeros((d,), jnp.float32)
+    nb = -(-d // cfg.fade_block)
+    hit = jax.random.uniform(key, (nb,)) < cfg.fade
+    return jnp.repeat(hit.astype(jnp.float32), cfg.fade_block)[:d]
+
+
+def corrupt(g: Array, key: Array, cfg: FaultConfig) -> Array:
+    """Non-finite contamination of the fresh gradient: each coordinate
+    independently becomes NaN or +/-Inf with probability ``nan_rate``
+    (half NaN, a quarter each signed Inf — all three species must
+    survive the sanitize stage)."""
+    if cfg.nan_rate <= 0.0:
+        return g
+    u = jax.random.uniform(key, g.shape)
+    garbage = jnp.where(u < 0.5 * cfg.nan_rate, jnp.nan,
+                        jnp.where(u < 0.75 * cfg.nan_rate, jnp.inf,
+                                  -jnp.inf))
+    return jnp.where(u < cfg.nan_rate, garbage.astype(g.dtype), g)
+
+
+def erase_with_outage(erase: Array, n_t: Array) -> Array:
+    """Fold a total-outage round into the erasure mask: when the realized
+    participation ``N_t`` is zero there IS no aggregate, so every
+    coordinate is erased and the sanitized merge degrades to the exact
+    age-increment-only no-op round."""
+    out = (jnp.asarray(n_t, jnp.float32) <= 0.0).astype(jnp.float32)
+    return jnp.maximum(erase, out)
+
+
+# ---------------------------------------------------------------------------
+# rollback + divergence watchdog
+# ---------------------------------------------------------------------------
+
+def tree_select(pred: Array, on_true: Any, on_false: Any) -> Any:
+    """Elementwise ``where(pred, a, b)`` over matching pytrees — the
+    in-graph rollback primitive (no host sync, no recompile)."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(pred, a, b.astype(a.dtype)
+                               if hasattr(b, "dtype") else b),
+        on_true, on_false)
+
+
+@dataclasses.dataclass(frozen=True)
+class WatchdogConfig:
+    """Divergence-watchdog settings (EMA'd loss / update-norm guard)."""
+    spike: float = 2.0     # trip when an observation exceeds spike x EMA
+    ema: float = 0.9       # baseline EMA decay
+    warmup: int = 5        # observations before the spike guard arms
+                           # (non-finite trips immediately)
+    cooldown: int = 10     # rounds of tightened k_m after a trip
+    tighten: float = 0.5   # k_m_frac multiplier during cooldown: spend
+                           # the budget on the magnitude stage while the
+                           # trajectory recovers
+
+    def __post_init__(self):
+        if self.spike <= 1.0:
+            raise ValueError(f"spike must be > 1, got {self.spike}")
+        if not 0.0 < self.tighten <= 1.0:
+            raise ValueError(f"tighten must be in (0, 1], got {self.tighten}")
+
+
+WATCHDOG_FIELDS = ("ema_loss", "ema_norm", "obs", "cooldown", "trips")
+
+
+def init_watchdog_state() -> Dict[str, Array]:
+    z = jnp.float32(0.0)
+    return {f: z for f in WATCHDOG_FIELDS}
+
+
+def watchdog_step(cfg: WatchdogConfig, state: Dict[str, Array],
+                  loss: Array, unorm: Array
+                  ) -> Tuple[Dict[str, Array], Array, Array]:
+    """One watchdog transition.  Returns ``(state', trip, k_scale)``:
+
+    * ``trip`` — bool scalar; the caller rolls (params, server state)
+      back to its shadow snapshot via ``tree_select(trip, snap, live)``;
+    * ``k_scale`` — ``tighten`` while the cooldown window is open, else
+      1.0; multiply into the traced ``k_m_frac``.
+
+    A trip fires on any non-finite observation (immediately, even during
+    warmup) or, once ``warmup`` healthy observations have seeded the
+    baselines, on an observation above ``spike`` x its EMA.  Tripped
+    observations never enter the EMA — the spike must not poison the
+    baseline it is judged against — and do not advance the warmup
+    counter."""
+    loss = jnp.asarray(loss, jnp.float32)
+    unorm = jnp.asarray(unorm, jnp.float32)
+    finite = jnp.isfinite(loss) & jnp.isfinite(unorm)
+    armed = state["obs"] >= float(cfg.warmup)
+    spiked = ((loss > cfg.spike * state["ema_loss"])
+              | (unorm > cfg.spike * state["ema_norm"]))
+    trip = ~finite | (armed & spiked)
+    first = state["obs"] == 0.0
+    upd = lambda ema, x: jnp.where(
+        trip, ema, jnp.where(first, x, cfg.ema * ema + (1.0 - cfg.ema) * x))
+    cool = jnp.where(trip, jnp.float32(cfg.cooldown),
+                     jnp.maximum(state["cooldown"] - 1.0, 0.0))
+    new = {"ema_loss": upd(state["ema_loss"], loss),
+           "ema_norm": upd(state["ema_norm"], unorm),
+           "obs": jnp.where(trip, state["obs"], state["obs"] + 1.0),
+           "cooldown": cool,
+           "trips": state["trips"] + trip.astype(jnp.float32)}
+    k_scale = jnp.where(cool > 0.0, jnp.float32(cfg.tighten),
+                        jnp.float32(1.0))
+    return new, trip, k_scale

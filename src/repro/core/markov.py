@@ -183,6 +183,46 @@ def shifted_aou_distribution(chain: FairKChain, lag: int
     return support + lag, pmf
 
 
+def thinned_aou_distribution(chain: FairKChain, thin: float,
+                             tail_mass: float = 1e-9
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+    """Lemma 1 under participation thinning (fault channels).
+
+    When each round's refresh of a selected coordinate is independently
+    *blocked* with probability ``thin`` — a deep-fade erasure or a
+    corrupted (non-finite) uplink that the sanitize stage masks out — the
+    coordinate stays semantically "unsent": its age keeps climbing and its
+    mass stays in the EF residual, exactly as if the refresh were delayed.
+    Because FAIR-k re-selects the now-even-staler coordinate with at least
+    the age-stage priority it already had, the delay until the refresh
+    actually lands is (approximately, in the well-mixed exchange regime)
+    geometric: ``D ~ Geom(thin)``, ``P[D = j] = (1 - thin) thin^j``.
+
+    The post-update stationary AoU is then the synchronous Lemma-1 age
+    plus an independent geometric delay — a convolution rather than the
+    deterministic translation of ``shifted_aou_distribution``:
+
+        P[A = a] = sum_j (1 - thin) thin^j * pmf_sync[a - j]
+
+    with mean shift ``thin / (1 - thin)`` (the constant offset
+    ``BudgetController(..., thin=...)`` absorbs).  ``thin = 0`` returns
+    the synchronous pmf unchanged.  The geometric tail is truncated once
+    its remaining mass drops below ``tail_mass`` and renormalized.
+    """
+    if not 0.0 <= thin < 1.0:
+        raise ValueError(f"thin must be in [0, 1), got {thin}")
+    support, pmf = aou_distribution(chain)
+    if thin == 0.0:
+        return support, pmf
+    # geometric tail length: (1-p) p^j summed beyond J is p^(J+1)
+    J = max(1, int(np.ceil(np.log(tail_mass) / np.log(thin))))
+    delays = (1.0 - thin) * thin ** np.arange(J + 1)
+    out = np.convolve(pmf, delays)
+    out = np.clip(out, 0.0, None)
+    out /= out.sum()
+    return np.arange(len(out)), out
+
+
 def simulate_aou(chain: FairKChain, rounds: int, seed: int = 0,
                  mode: str = "exchange", momentum: float = 0.9,
                  burn_in: int = 200) -> np.ndarray:

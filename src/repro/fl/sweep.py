@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import controller as budget
+from repro.core import faults as fault_mod
 from repro.core import packing
 from repro.core.engine import (AGE_CAP, fair_k_mask_dynamic,  # noqa: F401
                                rank_desc, traced_km)
@@ -88,6 +89,15 @@ class SweepConfig:
                                    # the synchronous trajectory bit-exact
     controller: budget.ControllerConfig = budget.ControllerConfig()
                                    # adaptive-lane control law (fairk_auto)
+    faults: fault_mod.FaultConfig = fault_mod.FaultConfig()
+                                   # in-graph fault injection shared by
+                                   # every lane: iid client dropout (the
+                                   # Gilbert–Elliott chain's burst=None
+                                   # special case — the sweep carries no
+                                   # per-lane channel state), deep-fade
+                                   # block erasures and NaN corruption on
+                                   # the aggregate.  All-zero rates trace
+                                   # the historical program bit-exactly
 
     @property
     def k(self) -> int:
@@ -103,7 +113,11 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
     per-lane ``adaptive`` flag is data — within a mixed grid every lane
     runs the same program and static lanes gate the controller out."""
     w, g_prev, age, res, cs, w_stars = carry
-    key_pol, key_h, key_z = jax.random.split(key, 3)
+    if cfg.faults.enabled:
+        key_pol, key_h, key_z, key_av, key_fd, key_nz = jax.random.split(
+            key, 6)
+    else:
+        key_pol, key_h, key_z = jax.random.split(key, 3)
     # adaptive lanes re-derive the split from their carried controller
     # state; static lanes keep the grid's k_m
     k_m_eff = (jnp.where(adaptive > 0, traced_km(cfg.k, cs["k_m_frac"]),
@@ -122,7 +136,26 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
     # selected coordinates only
     h = jax.random.rayleigh(key_h, cfg.fading_mean / np.sqrt(np.pi / 2.0),
                             shape=(cfg.n_clients,), dtype=jnp.float32)
-    agg = jnp.einsum("n,nd->d", h, grads) / cfg.n_clients
+    if cfg.faults.enabled:
+        # churn in rank form: iid dropout thins the superposition (the
+        # aggregate rescales by the realised participation, guarded
+        # against the all-out round), deep-fade erasures and non-finite
+        # corruption knock their coordinates OUT of the selection mask —
+        # the same "unsent" semantics the engine's sanitize stage applies
+        # (stale value kept, age keeps climbing)
+        avail = fault_mod.init_avail_state(key_av, cfg.n_clients,
+                                           cfg.faults)
+        n_t = avail.sum()
+        agg = fault_mod.participation_scale(
+            jnp.einsum("n,nd->d", h * avail, grads), n_t)
+        agg = fault_mod.corrupt(agg, key_nz, cfg.faults)
+        erase = fault_mod.erase_with_outage(
+            fault_mod.fade_mask(key_fd, cfg.d, cfg.faults), n_t)
+        bad = (erase > 0.0) | jnp.logical_not(jnp.isfinite(agg))
+        agg = jnp.where(bad, 0.0, agg)
+        mask = mask * (1.0 - bad.astype(jnp.float32))
+    else:
+        agg = jnp.einsum("n,nd->d", h, grads) / cfg.n_clients
     if cfg.error_feedback:
         # server-side EF (the engine's residual stage in vmapped form):
         # the unsent aggregate mass folds back pre-merge, its noise-free
@@ -163,7 +196,9 @@ def _run_grid(cfg: SweepConfig, seeds: Array, policy_ids: Array,
     """All grid points, one compiled program: scan over rounds, vmap over
     the flattened (policy, k_m, seed) grid."""
     ctrl = budget.BudgetController(cfg.controller, rho=cfg.rho,
-                                   age_offset=float(cfg.async_lag))
+                                   age_offset=float(cfg.async_lag),
+                                   thin=(cfg.faults.thin
+                                         if cfg.faults.enabled else 0.0))
 
     def one_sim(seed, policy_id, k_m, adaptive):
         key0 = jax.random.PRNGKey(seed)

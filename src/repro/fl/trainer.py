@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 import numpy as np
 
-from repro.core import controller as budget, oac, packing, quantize
+from repro.core import controller as budget, faults, oac, packing, quantize
 from repro.core.aou import update_age_by_indices
 from repro.core.engine import (EngineConfig, SelectionEngine,
                                fair_k_masks_dynamic, index_jitter,
@@ -93,11 +93,32 @@ class FLConfig:
                                     # at eval boundaries).  0/1 = the
                                     # per-round Python loop
     controller: budget.ControllerConfig = budget.ControllerConfig()
+    faults: faults.FaultConfig = faults.FaultConfig()
+                                    # in-graph fault injection (DESIGN.md
+                                    # §14): Gilbert–Elliott client dropout,
+                                    # deep-fade block erasures on the OAC
+                                    # aggregate, NaN/Inf gradient
+                                    # corruption.  All rates 0 (default)
+                                    # traces the historical program
+                                    # bit-exactly; any rate > 0 turns on
+                                    # the engine's sanitize stage and the
+                                    # realised-participation rescale
+    watchdog: Optional[faults.WatchdogConfig] = None
+                                    # divergence watchdog: EMA'd loss /
+                                    # update-norm guard that rolls params +
+                                    # server state back to an in-graph
+                                    # shadow snapshot on a spike and
+                                    # tightens k_M for a cooldown window.
+                                    # None (default) traces nothing extra
     seed: int = 0
 
     @property
     def adaptive(self) -> bool:
         return self.adaptive_km or self.policy == "fairk_auto"
+
+    @property
+    def chaos(self) -> bool:
+        return self.faults.enabled
 
     def budgets(self, d: int, k_m_frac: Optional[float] = None
                 ) -> Tuple[int, int, int]:
@@ -151,10 +172,24 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                          f"{fl.policy!r} pins or ignores it")
     if fl.async_lag < 0:
         raise ValueError(f"async_lag must be >= 0, got {fl.async_lag}")
+    chaos = fl.chaos
+    wdcfg = fl.watchdog
+    if chaos and fl.one_bit:
+        raise ValueError("fault injection on the one-bit FSK-MV uplink is "
+                         "not modelled — run chaos with one_bit=False")
+    if chaos and fl.policy not in ("fairk", "topk", "roundrobin",
+                                   "fairk_auto"):
+        raise ValueError("chaos rounds run selection in sanitized "
+                         f"threshold/rank form — policy {fl.policy!r} "
+                         "needs index arithmetic")
+    if wdcfg is not None and fl.policy not in ("fairk", "fairk_auto"):
+        raise ValueError("the watchdog tightens the FAIR-k split — policy "
+                         f"{fl.policy!r} pins or ignores it")
     age_lag = fl.async_lag or None
     bctrl = (budget.BudgetController(fl.controller,
                                      rho=fl.compression_ratio,
-                                     age_offset=float(fl.async_lag))
+                                     age_offset=float(fl.async_lag),
+                                     thin=(fl.faults.thin if chaos else 0.0))
              if adaptive else None)
     # the realised static split (Remark-1 policies pin it: topk -> 1,
     # roundrobin -> 0) — what the km_frac telemetry records
@@ -183,14 +218,17 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                      # one-bit: the channel perturbs the vote energy (inside
                      # sign_mv), not the merged values — engine noise off
                      noise_std=(fl.channel.noise_std
-                                if fl.backend != "exact" and not fl.one_bit
+                                if (fl.backend != "exact" or chaos)
+                                and not fl.one_bit
                                 else 0.0),
                      n_clients=fl.n_clients,
                      # kernel-emitted counts/histograms on the kernel
                      # routes; on packed this also moves the warm-start
                      # re-estimation onto the carried histograms, making
-                     # the fused pass the round's only read of the buffer
-                     fused_stats=(fl.backend != "exact"),
+                     # the fused pass the round's only read of the buffer.
+                     # chaos rounds need them on exact too (the adaptive
+                     # controller consumes them from the unified branch)
+                     fused_stats=(fl.backend != "exact") or chaos,
                      warm_start=(fl.backend == "packed")), d,
         layout=layout)
 
@@ -200,14 +238,46 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
         return {"mean_aou": age_next.mean(), "max_aou": age_next.max(),
                 "km_frac": jnp.asarray(kmf, jnp.float32)}
 
-    @jax.jit
-    def fl_round(key: Array, w: Array, g_prev: Array, age: Array,
-                 sel_count: Array, xs: Array, ys: Array, residual: Array,
-                 tstate, cstate):
-        key_sel, key_ch = jax.random.split(key)
+    def _round(key: Array, w: Array, g_prev: Array, age: Array,
+               sel_count: Array, xs: Array, ys: Array, residual: Array,
+               tstate, cstate, fstate):
+        if chaos:
+            key_sel, key_ch, key_av, key_fd, key_nz = jax.random.split(key,
+                                                                       5)
+        else:
+            key_sel, key_ch = jax.random.split(key)
         grads = clients(w, xs, ys)                       # (N, d)
         kmf = cstate["k_m_frac"] if adaptive else None
-        if fl.backend in ("threshold", "packed"):
+        if wdcfg is not None:
+            # cooldown tightening: for ``cooldown`` rounds after a trip
+            # the magnitude split shrinks by ``tighten`` — traced data,
+            # never a recompile
+            k_scale = jnp.where(fstate["wd"]["cooldown"] > 0.0,
+                                jnp.float32(wdcfg.tighten),
+                                jnp.float32(1.0))
+            kmf = (kmf if kmf is not None else frac_static) * k_scale
+
+        def _guard(w_next, g_t, age_next, sel_count, residual, tstate,
+                   cstate, fstate):
+            """Divergence watchdog (DESIGN.md §14): observe this round's
+            (loss, ‖g_t‖); a spike over the EMA — or any non-finite
+            observation — rolls every carried buffer back to the in-graph
+            shadow snapshot; healthy out-of-cooldown rounds refresh it."""
+            if wdcfg is None:
+                return (w_next, g_t, age_next, sel_count, residual, tstate,
+                        cstate, fstate)
+            loss = loss_fn(unravel(w_next), xs[0, 0], ys[0, 0])
+            unorm = jnp.linalg.norm(g_t)
+            wd, trip, _ = faults.watchdog_step(wdcfg, fstate["wd"], loss,
+                                               unorm)
+            live = (w_next, g_t, age_next, sel_count, residual, tstate,
+                    cstate)
+            rolled = faults.tree_select(trip, fstate["snap"], live)
+            healthy = jnp.logical_not(trip) & (wd["cooldown"] <= 0.0)
+            snap = faults.tree_select(healthy, rolled, fstate["snap"])
+            return (*rolled, {**fstate, "wd": wd, "snap": snap})
+
+        if fl.backend in ("threshold", "packed") or chaos:
             ts = tstate if fl.backend == "packed" else None
             if fl.one_bit:
                 # FSK-MV uplink (Sec. V-B): clients transmit sign(ǧ_{n,t})
@@ -255,11 +325,31 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                 # score/sent values INSIDE the fused kernel and its
                 # successor comes back from the same pass
                 h = oac.sample_fading(key_sel, fl.n_clients, fl.channel)
-                fresh = jnp.einsum("n,nd->d", h, grads) / fl.n_clients
+                erase = None
+                if chaos:
+                    # churn: the Gilbert–Elliott availability chain gates
+                    # which clients superpose this round; the aggregate
+                    # rescales by the REALISED participation N_t (traced,
+                    # guarded against N_t == 0), deep fades erase whole
+                    # coordinate blocks (degrading through the engine's
+                    # NaN/sanitize path) and rare non-finite corruption
+                    # hits the aggregate itself
+                    avail = faults.avail_step(fstate["avail"], key_av,
+                                              fl.faults)
+                    fstate = {**fstate, "avail": avail}
+                    n_t = avail.sum()
+                    total = jnp.einsum("n,nd->d", h * avail, grads)
+                    fresh = faults.participation_scale(total, n_t)
+                    fresh = faults.corrupt(fresh, key_nz, fl.faults)
+                    erase = faults.erase_with_outage(
+                        faults.fade_mask(key_fd, d, fl.faults), n_t)
+                else:
+                    fresh = jnp.einsum("n,nd->d", h, grads) / fl.n_clients
                 g_t, age_next, stats = engine.select_and_merge(
                     fresh, g_prev, age, key=key_ch, tstate=ts,
                     residual=residual if fl.error_feedback else None,
-                    k_m_frac=kmf, age_lag=age_lag)
+                    k_m_frac=kmf, age_lag=age_lag, erase=erase,
+                    sanitize=chaos)
                 sel_mask = (stats["sel_mask"] if age_lag
                             else (age_next == 0.0).astype(jnp.float32))
                 if fl.error_feedback:
@@ -271,11 +361,15 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                 # already emitted (fused_stats is on for these backends)
                 cstate = bctrl.update(cstate, stats["age_hist"],
                                       stats["mag_hist"])
+            (w_next, g_t, age_next, sel_count, residual, tstate, cstate,
+             fstate) = _guard(w_next, g_t, age_next, sel_count, residual,
+                              stats.get("tstate", tstate), cstate, fstate)
             return (w_next, g_t, age_next, sel_count, residual, sel_mask,
-                    stats.get("tstate", tstate), cstate,
+                    tstate, cstate,
                     _round_metrics(age_next,
-                                   kmf if adaptive else frac_static))
-        if adaptive:
+                                   kmf if kmf is not None else frac_static),
+                    fstate)
+        if kmf is not None:
             # traced split on the exact path: rank-based FAIR-k (same
             # coordinate set as the index form, incl. the toward-lower-
             # index tie-break), indices recovered at the static size k
@@ -313,11 +407,28 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
             _, age_hist = ref.strided_hists_ref(
                 g_t, age_next, age >= 0.0, packing.hist_stride(d))
             cstate = bctrl.update(cstate, age_hist)
+        (w_next, g_t, age_next, sel_count, residual, tstate, cstate,
+         fstate) = _guard(w_next, g_t, age_next, sel_count, residual,
+                          tstate, cstate, fstate)
         # sel_mask is the dense selection mask on ALL backends, so callers
         # can swap backends without changing what they consume
         return (w_next, g_t, age_next, sel_count, residual, sel_mask,
                 tstate, cstate,
-                _round_metrics(age_next, kmf if adaptive else frac_static))
+                _round_metrics(age_next,
+                               kmf if kmf is not None else frac_static),
+                fstate)
+
+    if chaos or wdcfg is not None:
+        # extended step: the chaos/watchdog carry (``init_fault_state``)
+        # rides as an 11th argument and comes back as a 10th output
+        return jax.jit(_round)
+
+    @jax.jit
+    def fl_round(key: Array, w: Array, g_prev: Array, age: Array,
+                 sel_count: Array, xs: Array, ys: Array, residual: Array,
+                 tstate, cstate):
+        return _round(key, w, g_prev, age, sel_count, xs, ys, residual,
+                      tstate, cstate, None)[:9]
 
     return fl_round
 
@@ -337,6 +448,26 @@ def init_server(init_params: Any, fl: Optional[FLConfig] = None
             fl.k_m_frac if fl is not None else 0.75),
     )
     return state, unravel
+
+
+def init_fault_state(fl: FLConfig, state: ServerState,
+                     key: Optional[Array] = None) -> Dict[str, Any]:
+    """Initial chaos/watchdog carry for the extended step returned by
+    ``make_fl_step`` when ``fl.chaos`` or ``fl.watchdog`` is set:
+    ``avail`` is the Gilbert–Elliott availability vector, ``wd`` the
+    watchdog EMA state and ``snap`` the in-graph shadow snapshot the
+    watchdog rolls back to (params + every carried server buffer)."""
+    fstate: Dict[str, Any] = {}
+    if fl.chaos:
+        if key is None:
+            key = jax.random.PRNGKey(fl.seed + 0x5EED)
+        fstate["avail"] = faults.init_avail_state(key, fl.n_clients,
+                                                  fl.faults)
+    if fl.watchdog is not None:
+        fstate["wd"] = faults.init_watchdog_state()
+        fstate["snap"] = (state.w, state.g, state.age, state.sel_count,
+                          state.residual, state.theta, state.ctrl)
+    return fstate
 
 
 def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
@@ -359,6 +490,8 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
     # and its host-side Gini sync are gone
     fl_step = make_fl_step(fl, unravel, loss_fn, d)
     key = jax.random.PRNGKey(fl.seed)
+    has_fstate = fl.chaos or fl.watchdog is not None
+    fstate = init_fault_state(fl, state) if has_fstate else None
 
     history: Dict[str, Any] = {"round": [], "acc": [],
                                "k": fl.budgets(d)[0], "d": d}
@@ -391,19 +524,25 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
         # chunk length compiles once.
         @jax.jit
         def fl_chunk(key, w, g, age, sel_count, xs, ys, residual, tstate,
-                     cstate):
+                     cstate, fstate):
             def body(carry, batch):
-                key, w, g, age, sel_count, residual, tstate, cstate = carry
+                (key, w, g, age, sel_count, residual, tstate, cstate,
+                 fs) = carry
                 key, sub = jax.random.split(key)
                 bx, by = batch
-                (w, g, age, sel_count, residual, _, tstate, cstate,
-                 rm) = fl_step(sub, w, g, age, sel_count, bx, by,
-                               residual, tstate, cstate)
+                if has_fstate:
+                    (w, g, age, sel_count, residual, _, tstate, cstate,
+                     rm, fs) = fl_step(sub, w, g, age, sel_count, bx, by,
+                                       residual, tstate, cstate, fs)
+                else:
+                    (w, g, age, sel_count, residual, _, tstate, cstate,
+                     rm) = fl_step(sub, w, g, age, sel_count, bx, by,
+                                   residual, tstate, cstate)
                 return (key, w, g, age, sel_count, residual, tstate,
-                        cstate), rm
+                        cstate, fs), rm
             carry, rms = jax.lax.scan(
                 body, (key, w, g, age, sel_count, residual, tstate,
-                       cstate), (xs, ys))
+                       cstate, fstate), (xs, ys))
             return carry, rms
 
         t = 0
@@ -418,9 +557,9 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
             data = [sample_round(u) for u in range(t, t + chunk)]
             xs = jnp.asarray(np.stack([b[0] for b in data]))
             ys = jnp.asarray(np.stack([b[1] for b in data]))
-            (key, w, g, age, sel_count, residual, tstate, cstate), rms = \
-                fl_chunk(key, w, g, age, sel_count, xs, ys, residual,
-                         tstate, cstate)
+            (key, w, g, age, sel_count, residual, tstate, cstate,
+             fstate), rms = fl_chunk(key, w, g, age, sel_count, xs, ys,
+                                     residual, tstate, cstate, fstate)
             mean_aou.append(rms["mean_aou"])
             max_aou.append(rms["max_aou"])
             km_frac.append(rms["km_frac"])
@@ -431,9 +570,14 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
         for t in range(fl.rounds):
             key, sub = jax.random.split(key)
             xs, ys = sample_round(t)
-            w, g, age, sel_count, residual, _, tstate, cstate, rm = fl_step(
-                sub, w, g, age, sel_count, jnp.asarray(xs), jnp.asarray(ys),
-                residual, tstate, cstate)
+            args = (sub, w, g, age, sel_count, jnp.asarray(xs),
+                    jnp.asarray(ys), residual, tstate, cstate)
+            if has_fstate:
+                (w, g, age, sel_count, residual, _, tstate, cstate, rm,
+                 fstate) = fl_step(*args, fstate)
+            else:
+                (w, g, age, sel_count, residual, _, tstate, cstate,
+                 rm) = fl_step(*args)
             mean_aou.append(rm["mean_aou"])
             max_aou.append(rm["max_aou"])
             km_frac.append(rm["km_frac"])
@@ -447,4 +591,6 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
     history["sel_count"] = np.asarray(sel_count)
     history["final_age"] = np.asarray(age)
     history["params"] = unravel(w)
+    if fl.watchdog is not None:
+        history["wd_trips"] = float(fstate["wd"]["trips"])
     return history

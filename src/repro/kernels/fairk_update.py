@@ -89,9 +89,16 @@ def _hist_accumulate(bins: Array, weights: Array, n_bins: int) -> Array:
 
 
 def _fairk_kernel(*refs, block_size: int, has_res: bool, has_fresh: bool,
-                  stats_stride: int = 0):
+                  stats_stride: int = 0, sanitize: bool = False):
     """Shared fused body.  Ref order: g, [fresh], g_prev, age, [res],
-    thetas -> g_t, age', [res'], [stats row]."""
+    thetas -> g_t, age', [res'], [stats row].
+
+    ``sanitize`` (static): mask non-finite score coordinates out of BOTH
+    selection stages — a corrupted or erased uplink is semantically
+    "unsent": its age keeps climbing (the ordinary unselected age path),
+    its residual passes through unchanged (the mass stays in EF), and it
+    weighs zero in the stats row.  Off (the default) traces the exact
+    historical graph — bit-identical, not merely equivalent."""
     emit_stats = stats_stride > 0
     it = iter(refs)
     g_ref = next(it)
@@ -117,23 +124,36 @@ def _fairk_kernel(*refs, block_size: int, has_res: bool, has_fresh: bool,
     jitter = (idx * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
               ).astype(jnp.float32) / float(1 << 24)
     valid = age >= 0.0                      # age < 0 marks packing pads
-    mask_m = valid & (jnp.abs(score) >= theta_m)
-    mask = mask_m | (valid & (age + jitter >= theta_a) & (~mask_m))
+    if sanitize:
+        # non-finite score = corrupted/erased uplink: out of selection
+        # (never "sent"), zeroed in the cleaned score so 0 * NaN can't
+        # leak into the merge at unselected coordinates
+        ok = valid & jnp.isfinite(score)
+        score = jnp.where(jnp.isfinite(score), score, 0.0)
+    else:
+        ok = valid
+    mask_m = ok & (jnp.abs(score) >= theta_m)
+    mask = mask_m | (ok & (age + jitter >= theta_a) & (~mask_m))
     maskf = mask.astype(jnp.float32)
     keep = 1.0 - maskf
     sent = fresh_ref[...].astype(jnp.float32) if has_fresh else score
+    if sanitize and has_fresh:
+        sent = jnp.where(jnp.isfinite(sent), sent, 0.0)
     gt_ref[...] = maskf * sent + keep * gp_ref[...].astype(jnp.float32)
     age_next = jnp.where(valid, jnp.minimum((age + 1.0) * keep, AGE_CAP),
                          age)
     age_out_ref[...] = age_next
     if has_res:
-        res_out_ref[...] = jnp.where(valid, score - maskf * sent, res)
+        # bad coordinates keep their OLD residual: the blocked mass stays
+        # in the accumulator, exactly like an unsent coordinate's
+        res_out_ref[...] = jnp.where(ok, score - maskf * sent, res)
     if emit_stats:
         # strided histogram sample: block_size is a multiple of the
         # (power-of-two) stride, so per-block positions == the global
         # [::stride] sample and the partial rows sum bit-exactly to the
-        # ref oracle's single-pass histograms.  Pads weigh zero.
-        w = valid[::stats_stride].astype(jnp.float32)
+        # ref oracle's single-pass histograms.  Pads (and, under
+        # sanitize, corrupted coordinates) weigh zero.
+        w = ok[::stats_stride].astype(jnp.float32)
         m_bins = mag_bin(jnp.abs(score[::stats_stride]))
         a_bins = age_bin(age_next[::stats_stride])
         row = jnp.concatenate([
@@ -149,44 +169,51 @@ _fairk_update_kernel = functools.partial(_fairk_kernel, has_res=False,
                                          has_fresh=False)
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "interpret", "sanitize"))
 def fairk_update_pallas(g: Array, g_prev: Array, age: Array, theta_m: Array,
                         theta_a: Array, block_size: int = 65536,
-                        interpret: bool = False) -> Tuple[Array, Array]:
+                        interpret: bool = False,
+                        sanitize: bool = False) -> Tuple[Array, Array]:
     """g/g_prev/age: (d,) -> (g_t (d,), age' (d,)), single fused pass."""
     g_t, age_out, _, _ = _fairk_call(g, g_prev, age, theta_m, theta_a,
                                      residual=None, fresh=None,
                                      block_size=block_size,
-                                     interpret=interpret, stats_stride=0)
+                                     interpret=interpret, stats_stride=0,
+                                     sanitize=sanitize)
     return g_t, age_out
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "interpret", "sanitize"))
 def fairk_ef_update_pallas(g: Array, g_prev: Array, age: Array,
                            theta_m: Array, theta_a: Array,
                            residual: Optional[Array] = None,
                            fresh: Optional[Array] = None,
                            block_size: int = 65536,
-                           interpret: bool = False
+                           interpret: bool = False,
+                           sanitize: bool = False
                            ) -> Tuple[Array, Array, Optional[Array]]:
     """Fused pass with the residual (error-feedback) stage and/or decoupled
     ``fresh`` values: (g_t, age', residual' | None) — see module docstring."""
     g_t, age_out, res_out, _ = _fairk_call(
         g, g_prev, age, theta_m, theta_a, residual=residual, fresh=fresh,
-        block_size=block_size, interpret=interpret, stats_stride=0)
+        block_size=block_size, interpret=interpret, stats_stride=0,
+        sanitize=sanitize)
     return g_t, age_out, res_out
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_size", "interpret",
-                                    "stats_stride"))
+                                    "stats_stride", "sanitize"))
 def fairk_stats_update_pallas(g: Array, g_prev: Array, age: Array,
                               theta_m: Array, theta_a: Array,
                               residual: Optional[Array] = None,
                               fresh: Optional[Array] = None,
                               block_size: int = 65536,
                               interpret: bool = False,
-                              stats_stride: int = 1
+                              stats_stride: int = 1,
+                              sanitize: bool = False
                               ) -> Tuple[Array, Array, Optional[Array],
                                          Array]:
     """Fused pass that also emits the per-block selection-statistics rows:
@@ -195,11 +222,12 @@ def fairk_stats_update_pallas(g: Array, g_prev: Array, age: Array,
     full extra read passes of the two-pass accounting."""
     return _fairk_call(g, g_prev, age, theta_m, theta_a, residual=residual,
                        fresh=fresh, block_size=block_size,
-                       interpret=interpret, stats_stride=stats_stride)
+                       interpret=interpret, stats_stride=stats_stride,
+                       sanitize=sanitize)
 
 
 def _fairk_call(g, g_prev, age, theta_m, theta_a, *, residual, fresh,
-                block_size, interpret, stats_stride=0):
+                block_size, interpret, stats_stride=0, sanitize=False):
     d = g.shape[0]
     block_size = min(block_size, d)
     if d % block_size:
@@ -215,7 +243,7 @@ def _fairk_call(g, g_prev, age, theta_m, theta_a, *, residual, fresh,
     spec = pl.BlockSpec((block_size,), lambda i: (i,))
     kernel = functools.partial(_fairk_kernel, block_size=block_size,
                                has_res=has_res, has_fresh=has_fresh,
-                               stats_stride=stats_stride)
+                               stats_stride=stats_stride, sanitize=sanitize)
     f32 = lambda x: x.astype(jnp.float32)
     inputs = [f32(g)]
     in_specs = [spec]

@@ -109,12 +109,14 @@ FAIRK_UPDATE_CALLS = 0
 
 def fairk_update(g: Array, g_prev: Array, age: Array, theta_m, theta_a,
                  mode: Optional[str] = None,
-                 block_size: int = 65536) -> Tuple[Array, Array]:
+                 block_size: int = 65536,
+                 sanitize: bool = False) -> Tuple[Array, Array]:
     """Fused threshold-FAIR-k server update (see kernels.fairk_update) —
     the degenerate (no residual, no decoupled fresh) case of
     ``fairk_ef_update`` below; one fused launch either way."""
     g_t, age_out, _ = fairk_ef_update(g, g_prev, age, theta_m, theta_a,
-                                      mode=mode, block_size=block_size)
+                                      mode=mode, block_size=block_size,
+                                      sanitize=sanitize)
     return g_t, age_out
 
 
@@ -122,7 +124,8 @@ def fairk_ef_update(g: Array, g_prev: Array, age: Array, theta_m, theta_a,
                     residual: Optional[Array] = None,
                     fresh: Optional[Array] = None,
                     mode: Optional[str] = None,
-                    block_size: int = 65536
+                    block_size: int = 65536,
+                    sanitize: bool = False
                     ) -> Tuple[Array, Array, Optional[Array]]:
     """Fused FAIR-k server update, optionally with the residual
     (error-feedback) stage and/or decoupled ``fresh`` values — always ONE
@@ -147,12 +150,14 @@ def fairk_ef_update(g: Array, g_prev: Array, age: Array, theta_m, theta_a,
     ta = jnp.asarray(theta_a, jnp.float32)
     if mode == "ref":
         return ref.fairk_ef_update_ref(g, g_prev, age, tm, ta,
-                                       residual=residual, fresh=fresh)
+                                       residual=residual, fresh=fresh,
+                                       sanitize=sanitize)
     g, g_prev, age, residual, fresh, block, d = _block_pad(
         g, g_prev, age, residual, fresh, block_size)
     g_t, age_out, res_out = fairk_ef_update_pallas(
         g, g_prev, age, tm, ta, residual=residual, fresh=fresh,
-        block_size=block, interpret=(mode == "interpret"))
+        block_size=block, interpret=(mode == "interpret"),
+        sanitize=sanitize)
     if g.shape[0] != d:
         return (g_t[:d], age_out[:d],
                 res_out[:d] if res_out is not None else None)
@@ -184,7 +189,8 @@ def fairk_stats_update(g: Array, g_prev: Array, age: Array, theta_m,
                        theta_a, residual: Optional[Array] = None,
                        fresh: Optional[Array] = None,
                        mode: Optional[str] = None,
-                       block_size: int = 65536
+                       block_size: int = 65536,
+                       sanitize: bool = False
                        ) -> Tuple[Array, Array, Optional[Array], dict]:
     """``fairk_ef_update`` that ALSO emits the selection statistics from
     the same pass: (g_t, age', residual' | None, stats) where stats holds
@@ -208,13 +214,14 @@ def fairk_stats_update(g: Array, g_prev: Array, age: Array, theta_m,
     if mode == "ref":
         return ref.fairk_stats_update_ref(g, g_prev, age, tm, ta,
                                           residual=residual, fresh=fresh,
-                                          stats_stride=stride)
+                                          stats_stride=stride,
+                                          sanitize=sanitize)
     g, g_prev, age, residual, fresh, block, d = _block_pad(
         g, g_prev, age, residual, fresh, block_size)
     g_t, age_out, res_out, rows = fairk_stats_update_pallas(
         g, g_prev, age, tm, ta, residual=residual, fresh=fresh,
         block_size=block, interpret=(mode == "interpret"),
-        stats_stride=stride)
+        stats_stride=stride, sanitize=sanitize)
     vec = rows.sum(axis=0)                 # one tiny (nb, 384) reduction
     stats = {"n_sel": vec[STATS_N_SEL], "n_sel_m": vec[STATS_N_SEL_M],
              "mag_hist": vec[STATS_MAG_OFF:STATS_MAG_OFF

@@ -81,11 +81,14 @@ def sign_mv_ref(votes: Array, noise: Optional[Array] = None
 
 
 def fairk_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
-                     theta_a: Array) -> Tuple[Array, Array]:
+                     theta_a: Array, sanitize: bool = False
+                     ) -> Tuple[Array, Array]:
     """Oracle for the fused threshold-FAIR-k server update (one shard).
 
     Coordinates with ``age < 0`` are packing pads (core.packing.PAD_AGE):
-    never selected, age passes through unchanged."""
+    never selected, age passes through unchanged.  ``sanitize`` (static)
+    additionally keeps non-finite coordinates out of both stages — see
+    ``fairk_ef_update_ref``."""
     d = g.shape[0]
     g32 = g.astype(jnp.float32)
     age32 = age.astype(jnp.float32)
@@ -93,8 +96,13 @@ def fairk_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
     jitter = (idx * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
               ).astype(jnp.float32) / float(1 << 24)
     valid = age32 >= 0.0
-    mask_m = valid & (jnp.abs(g32) >= theta_m)
-    mask = (mask_m | (valid & (age32 + jitter >= theta_a) & (~mask_m))
+    if sanitize:
+        ok = valid & jnp.isfinite(g32)
+        g32 = jnp.where(jnp.isfinite(g32), g32, 0.0)
+    else:
+        ok = valid
+    mask_m = ok & (jnp.abs(g32) >= theta_m)
+    mask = (mask_m | (ok & (age32 + jitter >= theta_a) & (~mask_m))
             ).astype(jnp.float32)
     keep = 1.0 - mask
     g_t = mask * g32 + keep * g_prev.astype(jnp.float32)
@@ -106,7 +114,8 @@ def fairk_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
 
 def fairk_ef_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
                         theta_a: Array, residual: Optional[Array] = None,
-                        fresh: Optional[Array] = None
+                        fresh: Optional[Array] = None,
+                        sanitize: bool = False
                         ) -> Tuple[Array, Array, Optional[Array]]:
     """Oracle for the fused pass with the residual (error-feedback) stage.
 
@@ -115,7 +124,13 @@ def fairk_ef_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
     score itself; ``residual' = score - mask * sent`` — unsent mass on
     unselected coordinates, quantization error on selected ones.  Pads
     (``age < 0``) are never selected and pass ``(age, residual)`` through
-    unchanged."""
+    unchanged.
+
+    ``sanitize`` (static) masks non-finite score coordinates out of both
+    stages: they are semantically "unsent" — age keeps climbing, residual
+    passes through unchanged, and the cleaned (zeroed) score keeps
+    ``0 * NaN`` out of the merge.  Off-mode is bit-identical to the
+    historical graph (``ok`` IS ``valid``)."""
     d = g.shape[0]
     g32 = g.astype(jnp.float32)
     age32 = age.astype(jnp.float32)
@@ -125,16 +140,23 @@ def fairk_ef_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,
     jitter = (idx * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
               ).astype(jnp.float32) / float(1 << 24)
     valid = age32 >= 0.0
-    mask_m = valid & (jnp.abs(score) >= theta_m)
-    mask = (mask_m | (valid & (age32 + jitter >= theta_a) & (~mask_m))
+    if sanitize:
+        ok = valid & jnp.isfinite(score)
+        score = jnp.where(jnp.isfinite(score), score, 0.0)
+    else:
+        ok = valid
+    mask_m = ok & (jnp.abs(score) >= theta_m)
+    mask = (mask_m | (ok & (age32 + jitter >= theta_a) & (~mask_m))
             ).astype(jnp.float32)
     keep = 1.0 - mask
     sent = fresh.astype(jnp.float32) if fresh is not None else score
+    if sanitize and fresh is not None:
+        sent = jnp.where(jnp.isfinite(sent), sent, 0.0)
     g_t = mask * sent + keep * g_prev.astype(jnp.float32)
     age_next = jnp.where(valid,
                          jnp.minimum((age32 + 1.0) * keep, packing.AGE_CAP),
                          age32)
-    res_next = (jnp.where(valid, score - mask * sent, res32)
+    res_next = (jnp.where(ok, score - mask * sent, res32)
                 if residual is not None else None)
     return g_t, age_next, res_next
 
@@ -143,7 +165,8 @@ def fairk_stats_update_ref(g: Array, g_prev: Array, age: Array,
                            theta_m: Array, theta_a: Array,
                            residual: Optional[Array] = None,
                            fresh: Optional[Array] = None,
-                           stats_stride: int = 1
+                           stats_stride: int = 1,
+                           sanitize: bool = False
                            ) -> Tuple[Array, Array, Optional[Array],
                                       "dict"]:
     """Oracle for the fused pass WITH the selection-statistics outputs:
@@ -153,9 +176,12 @@ def fairk_stats_update_ref(g: Array, g_prev: Array, age: Array,
     ``n_sel_m`` (magnitude stage — identical to the legacy two-pass
     ``(age'==0) & (|score| >= θ_M)`` accounting because the age stage
     only admits coordinates with ``|score| < θ_M``) and the strided
-    ``mag_hist`` / ``age_hist`` (see ``strided_hists_ref``)."""
+    ``mag_hist`` / ``age_hist`` (see ``strided_hists_ref``).  Under
+    ``sanitize`` non-finite coordinates weigh zero in the histograms and
+    can never appear in the counts (they are excluded from selection)."""
     g_t, age_next, res_next = fairk_ef_update_ref(
-        g, g_prev, age, theta_m, theta_a, residual=residual, fresh=fresh)
+        g, g_prev, age, theta_m, theta_a, residual=residual, fresh=fresh,
+        sanitize=sanitize)
     d = g.shape[0]
     g32 = g.astype(jnp.float32)
     res32 = residual.astype(jnp.float32) if residual is not None else None
@@ -168,22 +194,30 @@ def fairk_stats_update_ref(g: Array, g_prev: Array, age: Array,
     score_s = score[::s]
     age_s = age.astype(jnp.float32)[::s]
     valid_s = age_s >= 0.0
+    if sanitize:
+        ok_s = valid_s & jnp.isfinite(score_s)
+        score_s = jnp.where(jnp.isfinite(score_s), score_s, 0.0)
+    else:
+        ok_s = valid_s
     idx_s = jnp.arange(0, d, s, dtype=jnp.uint32)
     jitter_s = (idx_s * jnp.uint32(2654435761) % jnp.uint32(1 << 24)
                 ).astype(jnp.float32) / float(1 << 24)
-    mask_m_s = valid_s & (jnp.abs(score_s) >= theta_m)
-    mask_s = (mask_m_s | (valid_s & (age_s + jitter_s >= theta_a)
+    mask_m_s = ok_s & (jnp.abs(score_s) >= theta_m)
+    mask_s = (mask_m_s | (ok_s & (age_s + jitter_s >= theta_a)
                           & (~mask_m_s))).astype(jnp.float32)
     age_next_s = jnp.where(
         valid_s,
         jnp.minimum((age_s + 1.0) * (1.0 - mask_s), packing.AGE_CAP), age_s)
-    m_bins = jnp.where(valid_s, packing.mag_bin(jnp.abs(score_s)), -1.0)
-    a_bins = jnp.where(valid_s, packing.age_bin(age_next_s), -1.0)
+    m_bins = jnp.where(ok_s, packing.mag_bin(jnp.abs(score_s)), -1.0)
+    a_bins = jnp.where(ok_s, packing.age_bin(age_next_s), -1.0)
     # counts derive from the materialized age output + one re-read of the
     # score inputs — identical integers to reducing the masks directly,
     # but XLA CPU then reuses the output buffer instead of materializing
     # two d-length bool temps (the pallas kernel reduces in-register and
-    # has neither cost)
+    # has neither cost).  ``sel_b`` can never hit a sanitized-out
+    # coordinate (it was excluded from the mask, so its age is >= 1), and
+    # at selected coordinates the raw score is finite — the counts need
+    # no sanitize branch of their own.
     sel_b = age_next == 0.0
     stats = {"n_sel": jnp.count_nonzero(sel_b).astype(jnp.float32),
              "n_sel_m": jnp.count_nonzero(

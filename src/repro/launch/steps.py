@@ -41,6 +41,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import controller as budget
+from repro.core import faults
 from repro.core import packing
 from repro.core.engine import (AGE_CAP, EngineConfig, SelectionEngine,
                                fair_k_masks_dynamic, index_jitter,
@@ -120,6 +121,25 @@ class OacServerConfig:
                                    # translates the Lemma-1 target by the
                                    # same amount (core.markov
                                    # shifted_aou_distribution)
+    sanitize: bool = False         # graceful degradation (DESIGN.md §14):
+                                   # the fused pass masks non-finite score
+                                   # coordinates out of BOTH selection
+                                   # stages — a crashed host's NaN/Inf
+                                   # uplink garbage is semantically
+                                   # "unsent" (age keeps climbing, EF
+                                   # residual passes through) instead of
+                                   # poisoning the merged gradient and the
+                                   # optimizer state.  Off (default) keeps
+                                   # the trace bit-exact with the
+                                   # historical graph (packed only).
+    fade: float = 0.0              # per-round deep-fade erasure
+                                   # probability on the aggregated uplink,
+                                   # at ``fade_block`` granularity (one
+                                   # OFDM symbol group's worth of
+                                   # coordinates per fade, paper Sec. II);
+                                   # erased coordinates ride the same
+                                   # sanitize path (needs ``sanitize``)
+    fade_block: int = 128          # coordinates per fade block
     one_bit: bool = False          # one-bit uplink for the server phase:
                                    # the merged fresh values are the SIGNS
                                    # of the effective gradient, detected by
@@ -387,6 +407,12 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         raise ValueError("adaptive_km consumes the kernel-emitted age/"
                          "magnitude histograms — it needs the packed "
                          "server phase with fused_stats")
+    if oac is not None and oac.sanitize and not oac.packed:
+        raise ValueError("sanitize rides the fused kernel's masking stage "
+                         "— it needs the packed server phase")
+    if oac is not None and oac.fade > 0.0 and not oac.sanitize:
+        raise ValueError("fade erasures degrade through the sanitize "
+                         "path — set OacServerConfig(sanitize=True)")
     if oac is not None and oac.async_agg:
         if not oac.packed:
             raise ValueError("async_agg double-buffers the PACKED server "
@@ -526,10 +552,23 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                          if oac.noise_std > 0.0 else None)
                 fresh, _ = ops.sign_mv(eff[None, :], noise=noise)
                 key = None
+            erase = None
+            if oac.fade > 0.0:
+                # deep-fade block erasures on the aggregated signal: a
+                # per-shard draw (each shard owns a disjoint coordinate
+                # slice, so independent per-shard masks ARE the global
+                # mask), decorrelated from the channel-noise stream by a
+                # fold-in.  The engine converts erased coordinates to NaN
+                # and the sanitize stage keeps them out of selection.
+                erase = faults.fade_mask(
+                    jax.random.fold_in(_shard_noise_key(seed), 0xFADE),
+                    layout.d_packed,
+                    faults.FaultConfig(fade=oac.fade,
+                                       fade_block=oac.fade_block))
             g_t, age_next, stats = eng.select_and_merge(
                 g_flat, server["g"], server["age"], key=key, tstate=tstate,
                 residual=server.get("res"), fresh=fresh, k_m_frac=kmf,
-                age_lag=age_lag)
+                age_lag=age_lag, erase=erase, sanitize=oac.sanitize)
             new_server = {
                 "g": g_t.astype(jnp.bfloat16),
                 "age": age_next.astype(jnp.int8),
@@ -651,6 +690,8 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         "oac_adaptive_km": bool(oac.adaptive_km) if oac is not None
         else False,
         "oac_async": bool(oac.async_agg) if oac is not None else False,
+        "oac_sanitize": bool(oac.sanitize) if oac is not None else False,
+        "oac_fade": float(oac.fade) if oac is not None else 0.0,
         "optimizer": opt_name or cfg.optimizer, "lr": lr,
         "gather_dtype": gather_dtype,
         "scans": {"microbatch": n_micro, "layers": cfg.n_scan_blocks},
@@ -818,6 +859,11 @@ def make_fl_oac_step(cfg: ModelConfig, mesh, *, seq_len: int = 1024,
             jax.random.fold_in(key, 0), 1.0 / 1.2533141373155003,
             shape=(n_clients,), dtype=jnp.float32)[my]
         if baseline:
+            # 1/N audit (DESIGN.md §14): n_clients is the static mesh size
+            # — every device always contributes to the psum, so the
+            # denominator can never be a traced zero.  Any rescale by a
+            # REALIZED participation count must instead route through
+            # faults.participation_scale (the guarded helper).
             agg = jax.lax.psum(h * gb_local, axes) / n_clients
             fresh_blocks = agg[idx]
         elif one_bit:
@@ -832,6 +878,8 @@ def make_fl_oac_step(cfg: ModelConfig, mesh, *, seq_len: int = 1024,
             fresh_blocks = jnp.where(s2 >= 0, 1.0, -1.0).astype(jnp.float32)
         else:
             compact = h * gb_local[idx]                    # (kb, block)
+            # static mesh-size denominator — safe (see the 1/N audit note
+            # on the baseline branch above)
             fresh_blocks = jax.lax.psum(compact, axes) / n_clients
         noise = noise_std / n_clients * jax.random.normal(
             jax.random.fold_in(key, 1), fresh_blocks.shape, jnp.float32)

@@ -20,6 +20,7 @@ import argparse
 import os
 import signal
 import time
+import zipfile
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +79,20 @@ def main():
                          "histogram drives a traced split — zero host "
                          "syncs, zero recompiles; packed server phase "
                          "only)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="graceful degradation (DESIGN.md §14): mask "
+                         "non-finite gradient coordinates out of the "
+                         "fused selection — a crashed host's NaN/Inf "
+                         "uplink is 'unsent' (age climbs, EF residual "
+                         "rides through) instead of poisoning the model "
+                         "(packed server phase only)")
+    ap.add_argument("--fade", type=float, default=0.0,
+                    help="per-round deep-fade erasure probability on the "
+                         "aggregated uplink, at --fade-block granularity "
+                         "(needs --sanitize)")
+    ap.add_argument("--fade-block", type=int, default=128,
+                    help="coordinates per deep-fade block (one OFDM "
+                         "symbol group's worth)")
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="save the packed server state every N steps "
                          "(0 = off; a SIGTERM always lands one final "
@@ -99,7 +114,9 @@ def main():
                            fused_stats=not args.legacy_stats,
                            adaptive_km=args.adaptive_km,
                            async_agg=args.async_agg,
-                           straggler_frac=args.straggler_frac)
+                           straggler_frac=args.straggler_frac,
+                           sanitize=args.sanitize, fade=args.fade,
+                           fade_block=args.fade_block)
            if args.oac else None)
     bundle = make_train_step(cfg, shape, mesh, n_micro=1, oac=oac, lr=1e-3)
 
@@ -122,8 +139,8 @@ def main():
                             mesh) if ckpt_on else None)
     start = 0
     if args.resume:
-        last = checkpoint.latest_server_step(args.ckpt_dir)
-        if last is None:
+        candidates = checkpoint.server_steps(args.ckpt_dir)
+        if not candidates:
             # legitimate on the FIRST launch of a preemptible job, but
             # never silent: a mistyped --ckpt-dir must not masquerade as
             # a continued trajectory
@@ -131,33 +148,60 @@ def main():
                   f"{args.ckpt_dir!r} — starting fresh at step 0",
                   flush=True)
         else:
-            srv_np, _ = checkpoint.restore_server_state(
-                os.path.join(args.ckpt_dir, f"server_{last:08d}.npz"),
-                layout=layout)
-            # reconcile the checkpoint field set with the configured one:
-            # pre-async checkpoints migrate (cold zero double-buffers)
-            # when resuming under --async-agg; any other flag mismatch
-            # raises with the offending fields named
-            srv_np = checkpoint.migrate_server_state(srv_np, like=server)
-            server = {k: jnp.asarray(v) for k, v in srv_np.items()}
-            # the server buffers describe the OLD model's gradient stream
-            # — resuming them onto re-randomized weights would merge a
-            # stale trajectory into a fresh one, so params/opt ride the
-            # same checkpoint step (step_<N>.npz, generic pytree format)
-            step_path = os.path.join(args.ckpt_dir, f"step_{last:08d}.npz")
-            if not os.path.exists(step_path):
+            # newest first, walking back past corrupt checkpoints: the
+            # content checksums (checkpoint.io) catch bit rot / torn
+            # writes, and a server_<N>.npz without its params/opt
+            # companion is the same torn-save species.  Config
+            # mismatches (layout / field-set ValueErrors) still raise —
+            # falling back cannot fix a wrong flag.
+            restored = False
+            for last in candidates:
+                srv_path = os.path.join(args.ckpt_dir,
+                                        f"server_{last:08d}.npz")
+                step_path = os.path.join(args.ckpt_dir,
+                                         f"step_{last:08d}.npz")
+                try:
+                    srv_np, _ = checkpoint.restore_server_state(
+                        srv_path, layout=layout)
+                    if not os.path.exists(step_path):
+                        raise checkpoint.CorruptCheckpointError(
+                            f"{srv_path} has no matching "
+                            f"step_{last:08d}.npz (params/optimizer) — "
+                            "torn save")
+                    tree = checkpoint.restore(step_path,
+                                              like={"params": params,
+                                                    "opt": opt_state})
+                except (checkpoint.CorruptCheckpointError,
+                        zipfile.BadZipFile, OSError) as err:
+                    print(f"[train] --resume: checkpoint step {last} "
+                          f"failed validation ({err}); falling back to "
+                          "the previous checkpoint", flush=True)
+                    continue
+                # reconcile the checkpoint field set with the configured
+                # one: pre-async checkpoints migrate (cold zero
+                # double-buffers) when resuming under --async-agg; any
+                # other flag mismatch raises with the offending fields
+                # named
+                srv_np = checkpoint.migrate_server_state(srv_np,
+                                                         like=server)
+                server = {k: jnp.asarray(v) for k, v in srv_np.items()}
+                # the server buffers describe the OLD model's gradient
+                # stream — resuming them onto re-randomized weights would
+                # merge a stale trajectory into a fresh one, so
+                # params/opt ride the same checkpoint step
+                params = jax.tree.map(jnp.asarray, tree["params"])
+                opt_state = jax.tree.map(jnp.asarray, tree["opt"])
+                start = last
+                restored = True
+                print(f"[train] resumed server + params/opt state from "
+                      f"step {last} ({args.ckpt_dir})")
+                break
+            if not restored:
                 raise ValueError(
-                    f"{args.ckpt_dir} holds server_{last:08d}.npz but no "
-                    f"matching step_{last:08d}.npz (params/optimizer) — "
-                    "cannot resume the training trajectory")
-            tree = checkpoint.restore(step_path,
-                                      like={"params": params,
-                                            "opt": opt_state})
-            params = jax.tree.map(jnp.asarray, tree["params"])
-            opt_state = jax.tree.map(jnp.asarray, tree["opt"])
-            start = last
-            print(f"[train] resumed server + params/opt state from step "
-                  f"{last} ({args.ckpt_dir})")
+                    f"--resume: every checkpoint under "
+                    f"{args.ckpt_dir!r} failed validation "
+                    f"(tried steps {candidates}) — refusing to silently "
+                    "restart the trajectory from scratch")
 
     # a SIGTERM (preemption) finishes the in-flight step, saves once, and
     # exits the loop cleanly

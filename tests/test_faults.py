@@ -1,0 +1,542 @@
+"""In-graph fault injection + graceful degradation (DESIGN.md §14).
+
+Covers the churn-tolerant round machinery end to end:
+
+* ``core.faults`` units — Gilbert–Elliott availability chain (stationarity
+  + burstiness), the guarded participation rescale, fade-block erasure
+  masks, non-finite corruption species, outage folding;
+* the divergence-watchdog state machine (warmup arming, immediate
+  non-finite trips, spike trips, EMA poisoning protection, cooldown
+  tightening) and the ``tree_select`` rollback primitive;
+* engine sanitize semantics on every backend — non-finite coordinates are
+  semantically "unsent" (kept out of selection, age climbing, EF residual
+  through), pads untouched, kernel statistics excluding corrupted
+  coordinates — and the off-mode bit-exactness guarantee;
+* the post-churn staleness law: under per-coordinate erasures the
+  stationary post-update AoU pmf tracks the participation-thinned Lemma-1
+  prediction (``markov.thinned_aou_distribution``) on the exact AND
+  packed backends;
+* ``fl.trainer`` chaos rounds: a ``scan_rounds`` run under simultaneous
+  dropout + deep fades + NaN corruption completes with finite loss, and
+  the watchdog carry rides the scan.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faults, markov, packing
+from repro.core.engine import (AGE_CAP, EngineConfig, SelectionEngine,
+                               make_engine)
+from repro.kernels import ops, ref
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# FaultConfig + fault-channel units
+# ---------------------------------------------------------------------------
+
+def test_fault_config_validates():
+    for bad in (dict(dropout=-0.1), dict(dropout=1.0), dict(fade=1.5),
+                dict(nan_rate=-1e-3), dict(burst=0.5), dict(fade_block=0)):
+        with pytest.raises(ValueError):
+            faults.FaultConfig(**bad)
+    assert not faults.FaultConfig().enabled
+    assert faults.FaultConfig(dropout=0.1).enabled
+    assert faults.FaultConfig(fade=0.1).enabled
+    assert faults.FaultConfig(nan_rate=0.1).enabled
+
+
+def test_thin_is_post_aggregation_rates():
+    cfg = faults.FaultConfig(dropout=0.3, fade=0.05, nan_rate=0.01)
+    assert cfg.thin == pytest.approx(0.06)    # dropout does NOT thin
+    assert faults.FaultConfig().thin == 0.0
+
+
+def test_ge_chain_stationarity_iid_and_bursty():
+    """Both parameterizations must hold the stationary unavailability at
+    ``dropout``; ``burst`` only reshapes the dwell times."""
+    key = jax.random.PRNGKey(0)
+    for burst in (None, 8.0):
+        cfg = faults.FaultConfig(dropout=0.3, burst=burst)
+        p_gb, p_bg = faults.ge_probs(cfg)
+        # stationary bad mass p_gb / (p_gb + p_bg) == dropout
+        assert p_gb / (p_gb + p_bg) == pytest.approx(0.3, abs=1e-6)
+        avail = faults.init_avail_state(key, 512, cfg)
+        down = []
+        step = jax.jit(functools.partial(faults.avail_step, cfg=cfg))
+        for t in range(300):
+            avail = step(avail, jax.random.fold_in(key, t))
+            down.append(1.0 - float(avail.mean()))
+        assert np.mean(down[50:]) == pytest.approx(0.3, abs=0.05)
+
+
+def test_ge_burst_lengthens_dwell():
+    """With ``burst=B`` a bad client stays bad ~B rounds on average —
+    consecutive-round availability must be visibly more correlated than
+    the iid case."""
+    key = jax.random.PRNGKey(1)
+
+    def mean_flips(cfg):
+        avail = faults.init_avail_state(key, 2048, cfg)
+        flips = 0.0
+        for t in range(100):
+            nxt = faults.avail_step(avail, jax.random.fold_in(key, t), cfg)
+            flips += float(jnp.abs(nxt - avail).mean())
+            avail = nxt
+        return flips / 100
+
+    iid = mean_flips(faults.FaultConfig(dropout=0.3))
+    bursty = mean_flips(faults.FaultConfig(dropout=0.3, burst=10.0))
+    assert bursty < 0.5 * iid
+
+
+def test_dropout_off_is_all_available():
+    cfg = faults.FaultConfig(fade=0.1)          # enabled, but no dropout
+    avail = faults.init_avail_state(jax.random.PRNGKey(0), 64, cfg)
+    np.testing.assert_array_equal(np.asarray(avail), np.ones(64))
+    nxt = faults.avail_step(avail, jax.random.PRNGKey(1), cfg)
+    np.testing.assert_array_equal(np.asarray(nxt), np.ones(64))
+
+
+def test_participation_scale_guards_zero():
+    total = jnp.asarray([2.0, -4.0, 8.0])
+    np.testing.assert_allclose(
+        np.asarray(faults.participation_scale(total, jnp.float32(2.0))),
+        [1.0, -2.0, 4.0])
+    out = faults.participation_scale(total, jnp.float32(0.0))
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(3))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_erase_with_outage():
+    erase = jnp.asarray([1.0, 0.0, 0.0])
+    np.testing.assert_array_equal(
+        np.asarray(faults.erase_with_outage(erase, jnp.float32(3.0))),
+        [1.0, 0.0, 0.0])
+    np.testing.assert_array_equal(
+        np.asarray(faults.erase_with_outage(erase, jnp.float32(0.0))),
+        np.ones(3))
+
+
+def test_fade_mask_block_granularity():
+    cfg = faults.FaultConfig(fade=0.3, fade_block=16)
+    m = np.asarray(faults.fade_mask(jax.random.PRNGKey(0), 160, cfg))
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    blocks = m.reshape(10, 16)
+    # a fade takes out a whole block: each block is constant
+    assert (blocks.min(axis=1) == blocks.max(axis=1)).all()
+    assert 0 < blocks[:, 0].sum() < 10           # some faded, some not
+    # off mode: exact zeros
+    off = faults.fade_mask(jax.random.PRNGKey(0), 160,
+                           faults.FaultConfig())
+    assert float(jnp.abs(off).sum()) == 0.0
+
+
+def test_corrupt_species_and_off_mode():
+    g = jnp.ones((200_000,), jnp.float32)
+    cfg = faults.FaultConfig(nan_rate=0.01)
+    out = np.asarray(faults.corrupt(g, jax.random.PRNGKey(0), cfg))
+    bad = ~np.isfinite(out)
+    assert bad.mean() == pytest.approx(0.01, rel=0.3)
+    assert np.isnan(out[bad]).any()              # all three species occur
+    assert (out[bad] == np.inf).any()
+    assert (out[bad] == -np.inf).any()
+    assert (out[~bad] == 1.0).all()
+    # off mode returns the input object itself (no traced ops)
+    assert faults.corrupt(g, jax.random.PRNGKey(0),
+                          faults.FaultConfig()) is g
+
+
+# ---------------------------------------------------------------------------
+# watchdog state machine + rollback primitive
+# ---------------------------------------------------------------------------
+
+def test_watchdog_config_validates():
+    with pytest.raises(ValueError):
+        faults.WatchdogConfig(spike=1.0)
+    with pytest.raises(ValueError):
+        faults.WatchdogConfig(tighten=0.0)
+    with pytest.raises(ValueError):
+        faults.WatchdogConfig(tighten=1.5)
+
+
+def test_watchdog_warmup_then_spike_trip():
+    cfg = faults.WatchdogConfig(spike=2.0, warmup=3, cooldown=4,
+                                tighten=0.5)
+    st = faults.init_watchdog_state()
+    # warmup: a big observation during warmup must NOT trip
+    for _ in range(3):
+        st, trip, k_scale = faults.watchdog_step(cfg, st, 1.0, 1.0)
+        assert not bool(trip) and float(k_scale) == 1.0
+    # armed now: a 3x spike trips
+    st, trip, k_scale = faults.watchdog_step(cfg, st, 3.0, 1.0)
+    assert bool(trip)
+    assert float(st["trips"]) == 1.0
+    assert float(st["cooldown"]) == 4.0
+    assert float(k_scale) == 0.5
+    # the spike never entered the EMA baseline
+    assert float(st["ema_loss"]) == pytest.approx(1.0)
+    # cooldown counts down over healthy rounds, tightening while open
+    for want in (3.0, 2.0, 1.0, 0.0):
+        st, trip, k_scale = faults.watchdog_step(cfg, st, 1.0, 1.0)
+        assert not bool(trip)
+        assert float(st["cooldown"]) == want
+        assert float(k_scale) == (0.5 if want > 0 else 1.0)
+
+
+def test_watchdog_nonfinite_trips_immediately():
+    cfg = faults.WatchdogConfig(warmup=5)
+    st = faults.init_watchdog_state()
+    st, trip, _ = faults.watchdog_step(cfg, st, jnp.float32(jnp.nan), 1.0)
+    assert bool(trip)                            # even before warmup
+    st, trip, _ = faults.watchdog_step(cfg, st, 1.0,
+                                       jnp.float32(jnp.inf))
+    assert bool(trip)
+    assert float(st["trips"]) == 2.0
+    assert float(st["obs"]) == 0.0               # tripped obs don't advance
+
+
+def test_tree_select_rollback():
+    snap = {"w": jnp.ones((4,)), "age": jnp.zeros((4,), jnp.int8)}
+    live = {"w": jnp.full((4,), 7.0), "age": jnp.full((4,), 3,
+                                                      jnp.int8)}
+    rolled = faults.tree_select(jnp.bool_(True), snap, live)
+    np.testing.assert_array_equal(np.asarray(rolled["w"]), np.ones(4))
+    assert rolled["age"].dtype == jnp.int8
+    kept = faults.tree_select(jnp.bool_(False), snap, live)
+    np.testing.assert_array_equal(np.asarray(kept["w"]), np.full(4, 7.0))
+
+
+# ---------------------------------------------------------------------------
+# engine sanitize: non-finite propagation on every backend (satellite)
+# ---------------------------------------------------------------------------
+
+def _engine_and_kwargs(backend, d):
+    if backend == "packed":
+        layout = packing.PackedLayout.from_tree([jnp.zeros((d,))], lane=1)
+        eng = make_engine("fairk", "packed", layout=layout, rho=0.125,
+                          k_m_frac=0.75, fused_stats=True, warm_start=True)
+        return eng, {"tstate": packing.init_threshold_state()}
+    eng = make_engine("fairk", backend, d=d, rho=0.125, k_m_frac=0.75,
+                      fused_stats=(backend != "exact"))
+    return eng, {}
+
+
+@pytest.mark.parametrize("backend", ["exact", "threshold", "packed"])
+def test_sanitize_excludes_nonfinite(backend):
+    """NaN/Inf coordinates are semantically "unsent" on every backend:
+    never selected (g_prev kept, age climbs) and the EF residual passes
+    through unchanged at exactly those coordinates."""
+    d = 4096
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (d,), jnp.float32)
+    bad_idx = np.asarray([3, 77, 1024, 4000])
+    g = g.at[bad_idx[0]].set(jnp.nan).at[bad_idx[1]].set(jnp.inf)
+    g = g.at[bad_idx[2]].set(-jnp.inf).at[bad_idx[3]].set(jnp.nan)
+    gp = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    age = jnp.floor(8.0 * jax.random.uniform(jax.random.fold_in(key, 2),
+                                             (d,), jnp.float32))
+    res = 0.01 * jax.random.normal(jax.random.fold_in(key, 3), (d,),
+                                   jnp.float32)
+    eng, kw = _engine_and_kwargs(backend, d)
+    g_t, age_next, stats = eng.select_and_merge(g, gp, age, residual=res,
+                                                sanitize=True, **kw)
+    gt = np.asarray(g_t)
+    an = np.asarray(age_next)
+    rn = np.asarray(stats["residual"])
+    assert np.isfinite(gt).all()                 # corruption never merges
+    np.testing.assert_array_equal(gt[bad_idx], np.asarray(gp)[bad_idx])
+    np.testing.assert_array_equal(an[bad_idx],
+                                  np.minimum(np.asarray(age)[bad_idx] + 1,
+                                             AGE_CAP))
+    np.testing.assert_array_equal(rn[bad_idx], np.asarray(res)[bad_idx])
+    assert np.isfinite(rn).all()
+
+
+@pytest.mark.parametrize("backend", ["exact", "threshold", "packed"])
+def test_sanitize_off_mode_bit_exact(backend):
+    """``sanitize=False`` (and finite inputs under ``sanitize=True``) must
+    not perturb the historical trajectory."""
+    d = 4096
+    key = jax.random.PRNGKey(7)
+    g = jax.random.normal(key, (d,), jnp.float32)
+    gp = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    age = jnp.floor(8.0 * jax.random.uniform(jax.random.fold_in(key, 2),
+                                             (d,), jnp.float32))
+    eng, kw = _engine_and_kwargs(backend, d)
+    g_ref, age_ref, _ = eng.select_and_merge(g, gp, age, **kw)
+    g_off, age_off, _ = eng.select_and_merge(g, gp, age, sanitize=False,
+                                             **kw)
+    np.testing.assert_array_equal(np.asarray(g_ref), np.asarray(g_off))
+    np.testing.assert_array_equal(np.asarray(age_ref), np.asarray(age_off))
+    # sanitize=True on fully-finite input selects the identical set
+    g_on, age_on, _ = eng.select_and_merge(g, gp, age, sanitize=True, **kw)
+    np.testing.assert_array_equal(np.asarray(g_ref), np.asarray(g_on))
+    np.testing.assert_array_equal(np.asarray(age_ref), np.asarray(age_on))
+
+
+def test_erase_requires_sanitize_and_policy_gate():
+    d = 512
+    eng, _ = _engine_and_kwargs("exact", d)
+    g = jnp.ones((d,), jnp.float32)
+    z = jnp.zeros((d,), jnp.float32)
+    with pytest.raises(ValueError, match="sanitize"):
+        eng.select_and_merge(g, z, z, erase=jnp.zeros((d,)))
+    eng_rank = make_engine("agetopk", "exact", d=d, rho=0.125)
+    with pytest.raises(ValueError, match="agetopk"):
+        eng_rank.select_and_merge(g, z, z, sanitize=True)
+
+
+def test_erase_channel_degrades_like_nan():
+    """An erasure and a NaN at the same coordinate must walk the same
+    path: g_prev kept, age climbing."""
+    d = 2048
+    key = jax.random.PRNGKey(3)
+    g = jax.random.normal(key, (d,), jnp.float32)
+    gp = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    age = jnp.floor(5.0 * jax.random.uniform(jax.random.fold_in(key, 2),
+                                             (d,), jnp.float32))
+    erase = jnp.zeros((d,), jnp.float32).at[100:164].set(1.0)
+    eng, _ = _engine_and_kwargs("exact", d)
+    g_e, age_e, _ = eng.select_and_merge(g, gp, age, erase=erase,
+                                         sanitize=True)
+    g_n, age_n, _ = eng.select_and_merge(
+        jnp.where(erase > 0, jnp.nan, g), gp, age, sanitize=True)
+    np.testing.assert_array_equal(np.asarray(g_e), np.asarray(g_n))
+    np.testing.assert_array_equal(np.asarray(age_e), np.asarray(age_n))
+    np.testing.assert_array_equal(np.asarray(g_e)[100:164],
+                                  np.asarray(gp)[100:164])
+
+
+def test_sanitize_preserves_pads_and_kernel_stats():
+    """Packed-layout pads (age < 0) stay untouched under sanitize, and the
+    kernel-emitted histograms weigh corrupted coordinates zero."""
+    d_leaf = 1000                               # forces lane pads
+    layout = packing.PackedLayout.from_tree([jnp.zeros((d_leaf,))])
+    d = layout.d_packed
+    assert d > d_leaf
+    g = layout.pack([jnp.ones((d_leaf,), jnp.float32)])
+    g = g.at[5].set(jnp.nan)
+    gp = jnp.zeros((d,), jnp.float32)
+    age = layout.init_age(jnp.float32)
+    tm, ta = jnp.float32(0.5), jnp.float32(jnp.inf)
+    for mode in ("ref", "interpret"):
+        g_t, age_next, _, stats = ops.fairk_stats_update(
+            g, gp, age, tm, ta, mode=mode, sanitize=True)
+        an = np.asarray(age_next)
+        pads = np.asarray(age) < 0
+        assert (an[pads] == np.asarray(age)[pads]).all()
+        assert float(an[5]) == 1.0               # corrupted coord aged
+        # every sampled valid+finite coordinate weighs 1, the corrupted
+        # one (sampled at stride 1 for this size) weighs 0
+        stride = packing.hist_stride(d)
+        n_ok = int((~pads[::stride]).sum()) - int(5 % stride == 0)
+        assert float(np.asarray(stats["mag_hist"]).sum()) == n_ok
+        assert float(np.asarray(stats["age_hist"]).sum()) == n_ok
+        # counts can't contain the corrupted coordinate
+        assert float(stats["n_sel"]) == float((an == 0.0).sum())
+
+
+def test_kernel_sanitize_ref_vs_interpret_parity():
+    d = 1024
+    key = jax.random.PRNGKey(9)
+    g = jax.random.normal(key, (d,), jnp.float32)
+    g = g.at[11].set(jnp.nan).at[500].set(jnp.inf)
+    gp = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    age = jnp.floor(6.0 * jax.random.uniform(jax.random.fold_in(key, 2),
+                                             (d,), jnp.float32))
+    res = 0.1 * jax.random.normal(jax.random.fold_in(key, 3), (d,),
+                                  jnp.float32)
+    tm, ta = jnp.float32(1.2), jnp.float32(4.5)
+    out_ref = ops.fairk_ef_update(g, gp, age, tm, ta, residual=res,
+                                  mode="ref", sanitize=True)
+    out_int = ops.fairk_ef_update(g, gp, age, tm, ta, residual=res,
+                                  mode="interpret", sanitize=True)
+    for a, b in zip(out_ref, out_int):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# post-churn staleness law: participation-thinned Lemma 1 (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["exact", "packed"])
+def test_empirical_pmf_matches_thinned_lemma1(backend):
+    """Per-coordinate erasures at rate ``thin`` block refreshes
+    geometrically; the stationary post-update AoU pmf must track
+    ``markov.thinned_aou_distribution`` within the TV tolerance the
+    sync and async laws already meet."""
+    d, k, k_m, thin = 512, 64, 32, 0.1
+    if backend == "packed":
+        eng = make_engine("fairk", "packed",
+                          layout=packing.PackedLayout.from_tree(
+                              [jnp.zeros((d,))], lane=1),
+                          k=k, k_m=k_m, fused_stats=True, warm_start=True)
+        ts = packing.init_threshold_state()
+    else:
+        eng = make_engine("fairk", "exact", d=d, k=k, k_m=k_m,
+                          fused_stats=True)
+        ts = None
+    rng = np.random.default_rng(0)
+    gp = jnp.zeros((d,), jnp.float32)
+    ag = jnp.zeros((d,), jnp.float32)
+    step = jax.jit(functools.partial(eng.select_and_merge, sanitize=True))
+    acc = np.zeros(packing.STATS_AGE_BINS)
+    for r in range(600):
+        g = jnp.asarray(rng.normal(size=d).astype("f4"))
+        erase = jnp.asarray((rng.random(d) < thin).astype("f4"))
+        if backend == "packed":
+            g_t, ag, stats = step(g, gp, ag, erase=erase, tstate=ts)
+            ts = stats["tstate"]
+        else:
+            g_t, ag, stats = step(g, gp, ag, erase=erase)
+        gp = g_t
+        if r >= 150:
+            acc += np.asarray(stats["age_hist"])
+    emp = acc / acc.sum()
+    k0 = int(round(k_m * (1 - k_m / d)))
+    support, pred = markov.thinned_aou_distribution(
+        markov.FairKChain(d=d, k=k, k_m=k_m, k0=k0), thin)
+    pred_full = np.zeros(packing.STATS_AGE_BINS)
+    sel = support < packing.STATS_AGE_BINS
+    pred_full[support[sel]] = pred[sel]
+    assert 0.5 * np.abs(emp - pred_full).sum() < 0.1   # total variation
+
+
+def test_thinned_aou_distribution_validates():
+    chain = markov.FairKChain(d=512, k=64, k_m=32, k0=30)
+    for bad in (-0.1, 1.0):
+        with pytest.raises(ValueError):
+            markov.thinned_aou_distribution(chain, bad)
+    s0, p0 = markov.thinned_aou_distribution(chain, 0.0)
+    s1, p1 = markov.aou_distribution(chain)
+    np.testing.assert_array_equal(s0, s1)
+    np.testing.assert_allclose(p0, p1, atol=1e-12)
+    # thinning strictly lengthens the mean AoU
+    s, p = markov.thinned_aou_distribution(chain, 0.2)
+    assert (s * p).sum() > (s1 * p1).sum()
+    assert p.sum() == pytest.approx(1.0, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# trainer chaos rounds (acceptance) — marked ``chaos``: the CI fast lane
+# runs these as the churn smoke
+# ---------------------------------------------------------------------------
+
+def _chaos_task():
+    from repro.models import cnn
+    params0 = cnn.init_mlp_classifier(jax.random.PRNGKey(0), 16, 2,
+                                      hidden=(8,))
+
+    def loss_fn(p, x, y):
+        return cnn.softmax_xent(cnn.mlp_classifier(p, x), y)
+
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(size=(16,))
+
+    def sample_round(t):
+        r = np.random.default_rng(100 + t)
+        xs = r.normal(size=(8, 3, 10, 16)).astype("f4")
+        ys = (xs @ w_true > 0).astype("i4")
+        return xs, ys
+
+    return params0, loss_fn, sample_round
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("backend", ["exact", "packed"])
+def test_chaos_scan_run_completes_finite(backend):
+    """The acceptance scenario: dropout 0.3 + fade 0.05 + NaN 1e-4, fixed
+    seed, rounds fused through ``lax.scan`` — the run completes, the
+    model stays finite, and the watchdog carry survives the scan."""
+    from repro.fl.trainer import FLConfig, train
+    params0, loss_fn, sample_round = _chaos_task()
+    fl = FLConfig(n_clients=8, local_steps=3, batch_size=10, rounds=12,
+                  policy="fairk", backend=backend, compression_ratio=0.1,
+                  local_lr=0.05, global_lr=0.05, scan_rounds=4,
+                  faults=faults.FaultConfig(dropout=0.3, burst=4.0,
+                                            fade=0.05, nan_rate=1e-4),
+                  watchdog=faults.WatchdogConfig(), seed=0)
+    h = train(fl, params0, loss_fn, sample_round)
+    w = np.asarray(jax.flatten_util.ravel_pytree(h["params"])[0])
+    assert np.isfinite(w).all()
+    assert np.isfinite(h["mean_aou"]).all()
+    assert "wd_trips" in h and h["wd_trips"] >= 0.0
+
+
+@pytest.mark.chaos
+def test_chaos_off_mode_is_legacy_step():
+    """All-zero fault rates + no watchdog: ``make_fl_step`` hands back the
+    historical 10-arg/9-output step and the trajectory is bit-exact with
+    a config that never mentions faults."""
+    from repro.fl.trainer import FLConfig, train
+    params0, loss_fn, sample_round = _chaos_task()
+    base = dict(n_clients=8, local_steps=3, batch_size=10, rounds=6,
+                policy="fairk", compression_ratio=0.1, local_lr=0.05,
+                global_lr=0.05, seed=0)
+    h_plain = train(FLConfig(**base), params0, loss_fn, sample_round)
+    h_zero = train(FLConfig(**base, faults=faults.FaultConfig()),
+                   params0, loss_fn, sample_round)
+    w_plain = np.asarray(jax.flatten_util.ravel_pytree(
+        h_plain["params"])[0])
+    w_zero = np.asarray(jax.flatten_util.ravel_pytree(h_zero["params"])[0])
+    np.testing.assert_array_equal(w_plain, w_zero)
+
+
+@pytest.mark.chaos
+def test_watchdog_rolls_back_divergence():
+    """A divergent global step (huge lr spike via corrupted rounds) trips
+    the watchdog: trips > 0 and the model still ends finite."""
+    from repro.fl.trainer import FLConfig, train
+    params0, loss_fn, sample_round = _chaos_task()
+    fl = FLConfig(n_clients=8, local_steps=3, batch_size=10, rounds=10,
+                  policy="fairk", backend="exact", compression_ratio=0.1,
+                  local_lr=0.05, global_lr=50.0,   # divergent on purpose
+                  faults=faults.FaultConfig(nan_rate=0.01),
+                  watchdog=faults.WatchdogConfig(warmup=2, cooldown=3),
+                  seed=0)
+    h = train(fl, params0, loss_fn, sample_round)
+    w = np.asarray(jax.flatten_util.ravel_pytree(h["params"])[0])
+    assert np.isfinite(w).all()
+    assert h["wd_trips"] > 0.0
+
+
+def test_make_fl_step_chaos_validation():
+    from repro.fl.trainer import FLConfig, make_fl_step
+    loss = lambda p, x, y: 0.0
+    unravel = lambda w: w
+    with pytest.raises(ValueError, match="one_bit"):
+        make_fl_step(FLConfig(one_bit=True,
+                              faults=faults.FaultConfig(dropout=0.1)),
+                     unravel, loss, 64)
+    with pytest.raises(ValueError, match="policy"):
+        make_fl_step(FLConfig(policy="agetopk",
+                              faults=faults.FaultConfig(dropout=0.1)),
+                     unravel, loss, 64)
+    with pytest.raises(ValueError, match="watchdog|split"):
+        make_fl_step(FLConfig(policy="topk",
+                              watchdog=faults.WatchdogConfig()),
+                     unravel, loss, 64)
+
+
+def test_init_fault_state_contents():
+    from repro.fl.trainer import FLConfig, init_fault_state, init_server
+    from repro.models import cnn
+    params0 = cnn.init_mlp_classifier(jax.random.PRNGKey(0), 16, 2,
+                                      hidden=(8,))
+    state, _ = init_server(params0)
+    fl = FLConfig(n_clients=8, faults=faults.FaultConfig(dropout=0.2),
+                  watchdog=faults.WatchdogConfig())
+    fs = init_fault_state(fl, state)
+    assert fs["avail"].shape == (8,)
+    assert set(fs["wd"]) == set(faults.WATCHDOG_FIELDS)
+    assert len(fs["snap"]) == 7
+    # watchdog-only flavour carries no availability chain
+    fl2 = FLConfig(watchdog=faults.WatchdogConfig())
+    fs2 = init_fault_state(fl2, state)
+    assert "avail" not in fs2 and "wd" in fs2

@@ -176,6 +176,62 @@ class TestCheckpointMigration:
             checkpoint.migrate_server_state(sync, like=like)
 
 
+class TestCheckpointChecksums:
+    """Content checksums on the packed server checkpoints (satellite):
+    save records a CRC per stored array, restore verifies it, and a
+    corrupt newest checkpoint makes --resume fall back to the previous
+    one instead of resuming from rotted buffers."""
+
+    def _save(self, tmp_path, step, seed=0):
+        from repro import checkpoint
+        rng = np.random.default_rng(seed)
+        d = 512
+        srv = {"g": jnp.asarray(rng.normal(size=d).astype("f4")
+                                ).astype(jnp.bfloat16),
+               "age": jnp.ones((d,), jnp.int8),
+               "theta": jnp.ones((packing.THRESHOLD_STATE_SIZE,),
+                                 jnp.float32)}
+        path = checkpoint.save_server_state(str(tmp_path), srv, step=step)
+        return checkpoint, srv, path
+
+    def test_roundtrip_verifies(self, tmp_path):
+        checkpoint, srv, path = self._save(tmp_path, 1)
+        back, _ = checkpoint.restore_server_state(path)
+        np.testing.assert_array_equal(
+            np.asarray(back["g"], np.float32),
+            np.asarray(srv["g"], np.float32))
+
+    def test_corruption_raises_corrupt_error(self, tmp_path):
+        checkpoint, _, path = self._save(tmp_path, 1)
+        data = dict(np.load(path))
+        g = data["g"].copy()
+        g[17] ^= 0xFF                            # single-bit-ish flip
+        data["g"] = g
+        np.savez(path, **data)
+        with pytest.raises(checkpoint.CorruptCheckpointError,
+                           match="checksum"):
+            checkpoint.restore_server_state(path)
+
+    def test_pre_checksum_checkpoint_loads(self, tmp_path):
+        import json
+        checkpoint, _, path = self._save(tmp_path, 1)
+        data = dict(np.load(path))
+        meta = json.loads(str(data["__server_meta__"][()]))
+        meta.pop("checksums")                    # a pre-checksum save
+        data["__server_meta__"] = np.asarray(json.dumps(meta))
+        np.savez(path, **data)
+        back, _ = checkpoint.restore_server_state(path)
+        assert set(back) == {"g", "age", "theta"}
+
+    def test_server_steps_newest_first(self, tmp_path):
+        checkpoint, _, _ = self._save(tmp_path, 3)
+        self._save(tmp_path, 10)
+        self._save(tmp_path, 7)
+        assert checkpoint.server_steps(str(tmp_path)) == [10, 7, 3]
+        assert checkpoint.latest_server_step(str(tmp_path)) == 10
+        assert checkpoint.server_steps(str(tmp_path / "nope")) == []
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("ef", [False, True])
 def test_two_steps_execute_with_persisted_buffers(ef):
