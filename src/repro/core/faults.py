@@ -77,6 +77,18 @@ class FaultConfig:
                 f"nan_rate must be in [0, 1), got {self.nan_rate}")
         if self.burst is not None and self.burst < 1.0:
             raise ValueError(f"burst must be >= 1 round, got {self.burst}")
+        if self.burst is not None and self.dropout > 0.0:
+            # stationarity pins p_gb = dropout/(1-dropout) * (1/burst); a
+            # dwell shorter than the bad/good odds would need p_gb > 1 —
+            # ge_probs used to clamp silently, leaving pi_bad < dropout
+            need = self.dropout / (1.0 - self.dropout)
+            if self.burst < need:
+                raise ValueError(
+                    f"infeasible Gilbert-Elliott chain: dropout="
+                    f"{self.dropout} needs burst >= dropout/(1-dropout) = "
+                    f"{need:.3f}, got {self.burst} (the good->bad rate "
+                    "would exceed 1 and the stationary dropout could not "
+                    "be met)")
         if self.fade_block < 1:
             raise ValueError(f"fade_block must be >= 1, got {self.fade_block}")
 

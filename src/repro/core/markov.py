@@ -165,6 +165,44 @@ def expected_staleness(chain: FairKChain) -> float:
     return float((support * pmf).sum())
 
 
+def shift_pmf(support: np.ndarray, pmf: np.ndarray, lag: int
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Translate a pmf by a deterministic nonnegative integer delay:
+    ``P[A = a] -> P[A = a - lag]`` on support ``support + lag``.  The
+    distribution-level primitive behind ``shifted_aou_distribution``;
+    commutes exactly with ``thin_pmf`` (a constant offset passes through
+    a convolution)."""
+    if lag < 0:
+        raise ValueError(f"lag must be >= 0, got {lag}")
+    return np.asarray(support) + lag, np.asarray(pmf, np.float64)
+
+
+def thin_pmf(support: np.ndarray, pmf: np.ndarray, thin: float,
+             tail_mass: float = 1e-9) -> Tuple[np.ndarray, np.ndarray]:
+    """Convolve a pmf with an independent ``Geom(thin)`` delay
+    (``P[D = j] = (1 - thin) thin^j``, mean ``thin / (1 - thin)``) — the
+    distribution-level primitive behind ``thinned_aou_distribution``.
+
+    Requires a contiguous integer support starting at ``support[0]`` (the
+    convolution is index-based); the geometric tail is truncated once its
+    remaining mass drops below ``tail_mass`` and the result renormalized.
+    ``thin = 0`` returns the inputs unchanged.
+    """
+    if not 0.0 <= thin < 1.0:
+        raise ValueError(f"thin must be in [0, 1), got {thin}")
+    support = np.asarray(support)
+    pmf = np.asarray(pmf, np.float64)
+    if thin == 0.0:
+        return support, pmf
+    # geometric tail length: (1-p) p^j summed beyond J is p^(J+1)
+    J = max(1, int(np.ceil(np.log(tail_mass) / np.log(thin))))
+    delays = (1.0 - thin) * thin ** np.arange(J + 1)
+    out = np.convolve(pmf, delays)
+    out = np.clip(out, 0.0, None)
+    out /= out.sum()
+    return int(support[0]) + np.arange(len(out)), out
+
+
 def shifted_aou_distribution(chain: FairKChain, lag: int
                              ) -> Tuple[np.ndarray, np.ndarray]:
     """Lemma 1 under async aggregation with a constant delivery lag.
@@ -177,10 +215,7 @@ def shifted_aou_distribution(chain: FairKChain, lag: int
     the synchronous Lemma-1 pmf translated by ``lag``:
     ``P[A = a] = pmf_sync[a - lag]`` on support ``[lag, T + lag]``.
     """
-    if lag < 0:
-        raise ValueError(f"lag must be >= 0, got {lag}")
-    support, pmf = aou_distribution(chain)
-    return support + lag, pmf
+    return shift_pmf(*aou_distribution(chain), lag)
 
 
 def thinned_aou_distribution(chain: FairKChain, thin: float,
@@ -209,18 +244,53 @@ def thinned_aou_distribution(chain: FairKChain, thin: float,
     the synchronous pmf unchanged.  The geometric tail is truncated once
     its remaining mass drops below ``tail_mass`` and renormalized.
     """
-    if not 0.0 <= thin < 1.0:
-        raise ValueError(f"thin must be in [0, 1), got {thin}")
-    support, pmf = aou_distribution(chain)
-    if thin == 0.0:
-        return support, pmf
-    # geometric tail length: (1-p) p^j summed beyond J is p^(J+1)
-    J = max(1, int(np.ceil(np.log(tail_mass) / np.log(thin))))
-    delays = (1.0 - thin) * thin ** np.arange(J + 1)
-    out = np.convolve(pmf, delays)
-    out = np.clip(out, 0.0, None)
-    out /= out.sum()
-    return np.arange(len(out)), out
+    return thin_pmf(*aou_distribution(chain), thin, tail_mass=tail_mass)
+
+
+def population_thin(avail: float, vanish_rate: float, participants: int,
+                    exposure: float = 0.5) -> float:
+    """Effective per-round refresh-blocking probability of a churning
+    population (DESIGN.md §15): mid-round churn erases each symbol block
+    of the aggregate with probability ``exposure * vanish_rate`` (a
+    participant whose chain transitions down mid-round loses a random
+    ~``exposure`` share of its interleaved uplink blocks), and a TOTAL
+    outage of the sampled cohort — all ``participants`` clients down at
+    once — erases the round outright with probability
+    ``(1 - avail)^participants``.  Both channels block a selected
+    coordinate's refresh independently per round, which is exactly the
+    thinning model of ``thinned_aou_distribution``.
+
+    Mirrors ``population.PopulationConfig.thin`` (kept numerically
+    identical so the analysis side needs no jax import).
+    """
+    if not 0.0 < avail <= 1.0:
+        raise ValueError(f"avail must be in (0, 1], got {avail}")
+    if not 0.0 <= vanish_rate <= 1.0:
+        raise ValueError(
+            f"vanish_rate must be in [0, 1], got {vanish_rate}")
+    if participants < 1:
+        raise ValueError(f"participants must be >= 1, got {participants}")
+    if not 0.0 < exposure <= 1.0:
+        raise ValueError(f"exposure must be in (0, 1], got {exposure}")
+    outage = (1.0 - avail) ** participants
+    return min(0.99, exposure * vanish_rate + outage)
+
+
+def population_aou_distribution(chain: FairKChain, avail: float,
+                                vanish_rate: float, participants: int,
+                                exposure: float = 0.5,
+                                tail_mass: float = 1e-9
+                                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Lemma 1 under population churn: the participation-thinned
+    stationary post-update AoU pmf, with the thinning probability derived
+    from the population's stationary availability (``population_thin``).
+    This is the Sec. IV prediction the population validation suite
+    (``tests/test_population.py``) checks the empirical histogram against
+    on the exact and packed backends.
+    """
+    thin = population_thin(avail, vanish_rate, participants,
+                           exposure=exposure)
+    return thinned_aou_distribution(chain, thin, tail_mass=tail_mass)
 
 
 def simulate_aou(chain: FairKChain, rounds: int, seed: int = 0,

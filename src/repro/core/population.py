@@ -1,0 +1,366 @@
+"""Population-scale client simulator (DESIGN.md §15).
+
+``core.faults`` carries one Gilbert–Elliott availability chain per
+*compute* client — fine for the FL sim's handful of vmapped clients,
+useless for the paper's "millions of users" scenario where the server
+samples a small participant cohort per round out of a huge, churning
+population.  This module scales the chain to 1e5–1e6 virtual clients in
+ONE compiled program:
+
+* **packed cohort state** — per-client availability lives in a single
+  ``(n_cohorts, cohort_size)`` int8 array (1 = up, 0 = down, -1 = pad);
+  the chain transition is a vmapped-over-cohorts elementwise state
+  machine, so a million clients advance in one fused op and the whole
+  trajectory scans (``population_scan``) with zero Python loops.
+* **three availability modes** — ``iid`` (memoryless Bernoulli at the
+  stationary rate), ``ge`` (Gilbert–Elliott bursts: mean down-dwell
+  ``burst`` rounds, same algebra as ``faults.ge_probs``), and
+  ``diurnal`` (a sinusoidal availability rate — the day/night wave —
+  whose time-average is pinned at ``avail`` so the stationary staleness
+  prediction still composes).
+* **cohort-layout determinism** — every per-client uniform is drawn as
+  ONE flat counter-based ``(n_clients,)`` vector and then padded +
+  reshaped into the cohort grid, so the same seed produces bit-identical
+  availability traces whatever ``cohort_size`` the host picked.  (A
+  per-cohort ``fold_in`` key would re-shuffle the stream whenever the
+  batch shape changed.)
+* **per-round participation** — the server samples ``participants``
+  clients uniformly (with replacement) from the live population; the
+  round's stats report the realized participation ``n_t`` (feeding
+  ``faults.participation_scale``), the mid-round *churn* fraction
+  (participants whose chain transitions down during the round — their
+  partially-transmitted symbol blocks erase at ``exposure``), the
+  straggler share (a static per-client Knuth-hash propensity — the
+  population-driven replacement for the launch path's fixed
+  coordinate-hash pattern) and the live population size.
+
+Staleness composition (paper Sec. IV-B): a mid-round vanish erases each
+symbol block of the aggregate independently with probability
+``exposure * churn`` (clients interleave their uplink across the round,
+so a client lost halfway takes out a random ~``exposure`` of its
+blocks), and a TOTAL outage of the sampled cohort erases the round
+outright.  Both are per-round-independent refresh blockers, so the
+stationary post-update AoU pmf is the participation-thinned Lemma-1 law
+``markov.thinned_aou_distribution(chain, cfg.thin)`` — exposed as
+``markov.population_aou_distribution`` and validated by
+``tests/test_population.py`` against the empirical histogram on the
+exact AND packed backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+PAD = -1                               # cohort-grid pad sentinel (int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class PopulationConfig:
+    """A virtual client population.  Hashable (jit-static) and all-static:
+    every traced quantity derives from (state, key, round index)."""
+    n_clients: int = 100_000       # virtual population size
+    cohort_size: int = 4096        # clients per packed cohort row
+    participants: int = 8          # M: clients sampled per round (with
+                                   # replacement — at population scale the
+                                   # collision probability is negligible)
+    avail: float = 0.9             # stationary per-client availability
+    mode: str = "iid"              # iid | ge | diurnal
+    burst: float = 8.0             # mean down-state dwell in rounds
+                                   # (mode="ge" only)
+    period: int = 96               # diurnal cycle length in rounds
+    depth: float = 0.1             # diurnal swing: the availability rate
+                                   # oscillates in avail * (1 ± depth);
+                                   # avail * (1 + depth) <= 1 keeps the
+                                   # time-average exactly at ``avail``
+    slow_frac: float = 0.0         # straggler propensity: the static
+                                   # fraction of clients whose uplink
+                                   # lands one aggregation late
+    exposure: float = 0.5          # fraction of a mid-round vanisher's
+                                   # symbol blocks lost (uplink exposure
+                                   # at the expected vanish time)
+    erase_block: int = 64          # coordinates per churn-erasure block
+                                   # (one OFDM symbol group's worth)
+
+    def __post_init__(self):
+        if self.n_clients < 1:
+            raise ValueError(f"n_clients must be >= 1, got {self.n_clients}")
+        if self.cohort_size < 1:
+            raise ValueError(
+                f"cohort_size must be >= 1, got {self.cohort_size}")
+        if not 1 <= self.participants <= self.n_clients:
+            raise ValueError(
+                f"participants must be in [1, n_clients={self.n_clients}], "
+                f"got {self.participants}")
+        if not 0.0 < self.avail <= 1.0:
+            raise ValueError(f"avail must be in (0, 1], got {self.avail}")
+        if self.mode not in ("iid", "ge", "diurnal"):
+            raise ValueError(
+                f"mode must be iid|ge|diurnal, got {self.mode!r}")
+        if self.mode == "ge":
+            if self.burst < 1.0:
+                raise ValueError(
+                    f"burst must be >= 1 round, got {self.burst}")
+            # p_gb = (1 - avail) / (avail * burst) must be a probability:
+            # very unavailable populations need dwells at least as long as
+            # the down/up odds (the mirror of faults.FaultConfig's
+            # feasibility bound)
+            need = (1.0 - self.avail) / self.avail
+            if self.burst < need:
+                raise ValueError(
+                    f"infeasible Gilbert–Elliott chain: avail={self.avail} "
+                    f"needs burst >= (1-avail)/avail = {need:.3f}, got "
+                    f"{self.burst} (the up->down rate would exceed 1)")
+        if self.mode == "diurnal":
+            if self.period < 2:
+                raise ValueError(
+                    f"period must be >= 2 rounds, got {self.period}")
+            if not 0.0 <= self.depth:
+                raise ValueError(f"depth must be >= 0, got {self.depth}")
+            if self.avail * (1.0 + self.depth) > 1.0 + 1e-9:
+                raise ValueError(
+                    f"diurnal peak avail*(1+depth) = "
+                    f"{self.avail * (1.0 + self.depth):.3f} > 1 — the "
+                    "clipped wave would shift the time-average off "
+                    f"avail={self.avail}; lower depth")
+        if not 0.0 <= self.slow_frac < 1.0:
+            raise ValueError(
+                f"slow_frac must be in [0, 1), got {self.slow_frac}")
+        if not 0.0 < self.exposure <= 1.0:
+            raise ValueError(
+                f"exposure must be in (0, 1], got {self.exposure}")
+        if self.erase_block < 1:
+            raise ValueError(
+                f"erase_block must be >= 1, got {self.erase_block}")
+
+    @property
+    def n_cohorts(self) -> int:
+        return -(-self.n_clients // self.cohort_size)
+
+    @property
+    def n_padded(self) -> int:
+        return self.n_cohorts * self.cohort_size
+
+    @property
+    def vanish_rate(self) -> float:
+        """Stationary per-round P(up -> down) of one client's chain — the
+        rate at which a round-start participant churns mid-round.
+
+        iid: 1 - avail (the next state is an independent draw).  ge: the
+        up->down rate (1-avail)/(avail*burst) — bursts make an *up* client
+        stickier, so mid-round churn FALLS as burst grows even though the
+        stationary availability is pinned.  diurnal: time-average of the
+        instantaneous rate 1 - a(t), which the zero-mean sinusoid keeps at
+        1 - avail."""
+        if self.mode == "ge":
+            return (1.0 - self.avail) / (self.avail * self.burst)
+        return 1.0 - self.avail
+
+    @property
+    def thin(self) -> float:
+        """Effective per-round refresh-blocking probability for the
+        participation-thinned Lemma-1 law (``markov.
+        population_aou_distribution``) and the controller setpoint:
+        mid-round churn erasure (``exposure * vanish_rate`` per block)
+        plus the total-outage term (all ``participants`` sampled clients
+        down at once erases the whole round)."""
+        outage = (1.0 - self.avail) ** self.participants
+        return min(0.99, self.exposure * self.vanish_rate + outage)
+
+
+# ---------------------------------------------------------------------------
+# chain algebra
+# ---------------------------------------------------------------------------
+
+def transition_probs(cfg: PopulationConfig) -> Tuple[float, float]:
+    """Static (p_gb, p_bg) for the memory-bearing modes.  iid is the
+    memoryless special case; diurnal rates are time-varying — use
+    ``availability_rate`` instead."""
+    if cfg.mode == "ge":
+        p_bg = 1.0 / cfg.burst
+        return (1.0 - cfg.avail) / cfg.avail * p_bg, p_bg
+    # iid / diurnal-at-mean: next state independent of current state
+    return 1.0 - cfg.avail, cfg.avail
+
+
+def availability_rate(cfg: PopulationConfig, t) -> Array:
+    """Instantaneous availability rate a(t) — constant except in diurnal
+    mode, where it rides a sinusoid of period ``cfg.period`` whose
+    time-average is exactly ``cfg.avail``."""
+    if cfg.mode != "diurnal":
+        return jnp.float32(cfg.avail)
+    phase = 2.0 * jnp.pi * jnp.asarray(t, jnp.float32) / float(cfg.period)
+    return jnp.float32(cfg.avail) * (1.0 + cfg.depth * jnp.sin(phase))
+
+
+def client_jitter(ids: Array) -> Array:
+    """Static per-client propensity in [0, 1) — the same Knuth
+    multiplicative hash the kernels use for coordinate jitter, applied to
+    client ids: reproducible, trace-static, no carried state."""
+    h = ids.astype(jnp.uint32) * jnp.uint32(2654435761)
+    return h.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+
+
+def _flat_uniform(key: Array, cfg: PopulationConfig) -> Array:
+    """(n_cohorts, cohort_size) uniforms whose first ``n_clients`` values
+    (flattened) depend ONLY on ``key`` — never on the cohort layout.  The
+    draw is one flat counter-based ``(n_clients,)`` vector; pads fill
+    with 2.0 (an impossible uniform, and ``>= p`` for every probability,
+    so a pad's "transition" is the no-op branch even before masking)."""
+    u = jax.random.uniform(key, (cfg.n_clients,), jnp.float32)
+    pad = cfg.n_padded - cfg.n_clients
+    if pad:
+        u = jnp.concatenate([u, jnp.full((pad,), 2.0, jnp.float32)])
+    return u.reshape(cfg.n_cohorts, cfg.cohort_size)
+
+
+def _cohort_step(avail_c: Array, u_c: Array, p_gb, p_bg) -> Array:
+    """One chain transition for one cohort row — elementwise where-ops
+    only, vmapped over the cohort axis by ``population_step``."""
+    up = avail_c == 1
+    valid = avail_c >= 0
+    nxt = jnp.where(up, u_c >= p_gb, u_c < p_bg).astype(jnp.int8)
+    return jnp.where(valid, nxt, avail_c)
+
+
+# ---------------------------------------------------------------------------
+# packed population state
+# ---------------------------------------------------------------------------
+
+def init_population_state(key: Array, cfg: PopulationConfig
+                          ) -> Dict[str, Array]:
+    """Stationary-law initial state: ``avail`` is the packed
+    (n_cohorts, cohort_size) int8 grid (1 up / 0 down / -1 pad), ``t``
+    the round counter driving the diurnal phase."""
+    u = _flat_uniform(key, cfg)
+    avail = (u < availability_rate(cfg, 0)).astype(jnp.int8)
+    avail = jnp.where(u > 1.0, jnp.int8(PAD), avail)
+    return {"avail": avail, "t": jnp.int32(0)}
+
+
+def population_step(state: Dict[str, Array], key: Array,
+                    cfg: PopulationConfig) -> Dict[str, Array]:
+    """Advance every chain one round: one flat uniform draw, one vmapped
+    elementwise transition over the cohort axis.  Diurnal mode derives
+    its (traced) rates from the carried round counter."""
+    if cfg.mode == "diurnal":
+        a = availability_rate(cfg, state["t"])
+        p_gb, p_bg = 1.0 - a, a
+    else:
+        p_gb, p_bg = transition_probs(cfg)
+    u = _flat_uniform(key, cfg)
+    avail = jax.vmap(_cohort_step, in_axes=(0, 0, None, None))(
+        state["avail"], u, p_gb, p_bg)
+    return {"avail": avail, "t": state["t"] + 1}
+
+
+def _participation_stats(avail_now: Array, avail_next: Array, key: Array,
+                         cfg: PopulationConfig) -> Dict[str, Array]:
+    """Sample the round's cohort and summarize it.  ``part`` gates the
+    OAC superposition slot-by-slot; ``churn`` is the fraction of the
+    realized participants whose chain transitions down mid-round (their
+    blocks erase at ``exposure``); ``slow_share`` feeds the launch path's
+    ``age_lag`` straggler machinery."""
+    flat_now = avail_now.reshape(-1)
+    flat_next = avail_next.reshape(-1)
+    ids = jax.random.randint(key, (cfg.participants,), 0, cfg.n_clients)
+    part = (flat_now[ids] == 1).astype(jnp.float32)
+    n_t = part.sum()
+    vanish = part * (flat_next[ids] == 0).astype(jnp.float32)
+    slow = part * (client_jitter(ids) < cfg.slow_frac).astype(jnp.float32)
+    denom = jnp.maximum(n_t, 1.0)
+    return {"part": part, "n_t": n_t,
+            "churn": vanish.sum() / denom,
+            "slow": slow, "slow_share": slow.sum() / denom,
+            "n_avail": (flat_now == 1).sum().astype(jnp.float32)}
+
+
+def population_round(state: Dict[str, Array], key: Array,
+                     cfg: PopulationConfig
+                     ) -> Tuple[Dict[str, Array], Dict[str, Array]]:
+    """One full population round: sample participants from the current
+    state, advance every chain, and couple mid-round churn to the actual
+    transitions (a participant "vanishes mid-round" exactly when its
+    chain lands down at the round boundary).  Returns (state', stats)."""
+    key_t, key_p = jax.random.split(key)
+    nxt = population_step(state, key_t, cfg)
+    stats = _participation_stats(state["avail"], nxt["avail"], key_p, cfg)
+    stats["rate"] = availability_rate(cfg, state["t"])
+    return nxt, stats
+
+
+def stateless_round(base_key: Array, t, cfg: PopulationConfig
+                    ) -> Dict[str, Array]:
+    """Memoryless population round for the launch path (iid | diurnal).
+
+    Both modes draw the next state independently of the current one, so
+    no chain state needs to ride the (checkpointed, sharded) server
+    state: round r's availability is a pure counter-based function of
+    ``(base_key, r)``, which makes round t's "next" grid bit-identical
+    to round t+1's "current" grid by construction — the stateless
+    trajectory IS a lawful chain trajectory.  Gilbert–Elliott mode has
+    memory and must carry ``init_population_state``/``population_round``
+    state instead."""
+    if cfg.mode == "ge":
+        raise ValueError(
+            "stateless_round supports the memoryless modes (iid, diurnal); "
+            "Gilbert–Elliott bursts carry chain state — use "
+            "init_population_state / population_round")
+    t = jnp.asarray(t, jnp.int32)
+    key_avail = jax.random.fold_in(base_key, 0xA)
+    key_part = jax.random.fold_in(base_key, 0xB)
+    u_now = jax.random.uniform(jax.random.fold_in(key_avail, t),
+                               (cfg.n_clients,), jnp.float32)
+    u_next = jax.random.uniform(jax.random.fold_in(key_avail, t + 1),
+                                (cfg.n_clients,), jnp.float32)
+    avail_now = (u_now < availability_rate(cfg, t)).astype(jnp.int8)
+    avail_next = (u_next < availability_rate(cfg, t + 1)).astype(jnp.int8)
+    stats = _participation_stats(avail_now, avail_next,
+                                 jax.random.fold_in(key_part, t), cfg)
+    stats["rate"] = availability_rate(cfg, t)
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# round-level effects
+# ---------------------------------------------------------------------------
+
+def churn_erase_mask(key: Array, d: int, churn: Array,
+                     cfg: PopulationConfig) -> Array:
+    """(d,) f32 erasure mask (1.0 = erased) from mid-round churn: each
+    ``erase_block``-coordinate symbol group of the aggregate erases
+    independently with (traced) probability ``exposure * churn`` —
+    clients interleave their uplink across the round, so a vanisher's
+    loss lands on a random ~``exposure`` share of blocks, independent
+    across blocks once averaged over the cohort.  Same block semantics
+    as ``faults.fade_mask`` with a traced rate."""
+    nb = -(-d // cfg.erase_block)
+    p = jnp.clip(jnp.asarray(churn, jnp.float32) * cfg.exposure, 0.0, 1.0)
+    hit = jax.random.uniform(key, (nb,)) < p
+    return jnp.repeat(hit.astype(jnp.float32), cfg.erase_block)[:d]
+
+
+def population_scan(cfg: PopulationConfig, rounds: int, key: Array
+                    ) -> Tuple[Dict[str, Array], Dict[str, Array]]:
+    """Whole-trajectory availability scan in ONE compiled program — the
+    1e5-client smoke and the diurnal-wave diagnostics.  Returns the final
+    state and per-round traces of (n_avail, n_t, churn, slow_share,
+    rate)."""
+    key_init, key_run = jax.random.split(key)
+    state0 = init_population_state(key_init, cfg)
+
+    def body(state, key_r):
+        nxt, ps = population_round(state, key_r, cfg)
+        return nxt, {k: ps[k] for k in ("n_avail", "n_t", "churn",
+                                        "slow_share", "rate")}
+
+    return jax.lax.scan(body, state0, jax.random.split(key_run, rounds))
+
+
+population_scan_jit = jax.jit(population_scan,
+                              static_argnames=("cfg", "rounds"))

@@ -14,13 +14,24 @@ import numpy as np
 
 
 def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
-                        seed: int = 0, min_size: int = 8) -> List[np.ndarray]:
+                        seed: int = 0, min_size: int = 8,
+                        max_retries: int = 100) -> List[np.ndarray]:
     """Partition sample indices across clients with Dirichlet class mixtures.
 
-    Returns a list of index arrays, one per client (sizes vary)."""
-    rng = np.random.default_rng(seed)
+    Returns a list of index arrays, one per client (sizes vary).  Redraws
+    until every client holds at least ``min_size`` samples; an infeasible
+    request (``n_clients * min_size > n_samples``) or a pathological draw
+    streak (small alpha concentrates whole classes on single clients)
+    raises instead of spinning forever."""
+    n_samples = len(labels)
+    if n_clients * min_size > n_samples:
+        raise ValueError(
+            f"infeasible partition: {n_clients} clients x min_size="
+            f"{min_size} needs {n_clients * min_size} samples, got "
+            f"{n_samples}")
     n_classes = int(labels.max()) + 1
-    while True:
+    for attempt in range(max_retries):
+        rng = np.random.default_rng(seed + attempt)
         idx_per_client: List[List[int]] = [[] for _ in range(n_clients)]
         for c in range(n_classes):
             idx_c = np.flatnonzero(labels == c)
@@ -33,8 +44,12 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
         sizes = [len(ix) for ix in idx_per_client]
         if min(sizes) >= min_size:
             break
-        seed += 1
-        rng = np.random.default_rng(seed)
+    else:
+        raise ValueError(
+            f"no Dirichlet draw in {max_retries} attempts gave every "
+            f"client >= {min_size} samples (smallest shard seen: "
+            f"{min(sizes)} of {n_samples} over {n_clients} clients, "
+            f"alpha={alpha}) — lower min_size or raise alpha")
     return [np.asarray(sorted(ix), dtype=np.int64) for ix in idx_per_client]
 
 

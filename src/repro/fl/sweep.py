@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +44,7 @@ import numpy as np
 from repro.core import controller as budget
 from repro.core import faults as fault_mod
 from repro.core import packing
+from repro.core import population as pop_mod
 from repro.core.engine import (AGE_CAP, fair_k_mask_dynamic,  # noqa: F401
                                rank_desc, traced_km)
 from repro.kernels import ref
@@ -98,6 +99,30 @@ class SweepConfig:
                                    # block erasures and NaN corruption on
                                    # the aggregate.  All-zero rates trace
                                    # the historical program bit-exactly
+    population: Optional[pop_mod.PopulationConfig] = None
+                                   # population-scale churn (DESIGN.md §15)
+                                   # shared by every lane: each grid point
+                                   # carries its OWN packed virtual
+                                   # population through the scan (vmapped
+                                   # like the controller state), samples
+                                   # its cohort per round and erases
+                                   # mid-round-churned symbol blocks in
+                                   # rank form.  Composes with fade/
+                                   # nan_rate faults, not with dropout
+
+    def __post_init__(self):
+        if self.population is not None:
+            if self.population.participants != self.n_clients:
+                raise ValueError(
+                    "the sweep's compute clients ARE the sampled cohort: "
+                    f"population.participants="
+                    f"{self.population.participants} must equal "
+                    f"n_clients={self.n_clients}")
+            if self.faults.dropout > 0.0:
+                raise ValueError(
+                    "population availability and FaultConfig.dropout are "
+                    "two availability processes gating the same "
+                    "superposition — run one at a time")
 
     @property
     def k(self) -> int:
@@ -112,8 +137,18 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
     all?): purely static grids trace no histogram/controller work.  The
     per-lane ``adaptive`` flag is data — within a mixed grid every lane
     runs the same program and static lanes gate the controller out."""
-    w, g_prev, age, res, cs, w_stars = carry
-    if cfg.faults.enabled:
+    has_pop = cfg.population is not None
+    if has_pop:
+        w, g_prev, age, res, cs, w_stars, pstate = carry
+    else:
+        w, g_prev, age, res, cs, w_stars = carry
+        pstate = None
+    if has_pop and cfg.faults.enabled:
+        (key_pol, key_h, key_z, key_fd, key_nz, key_pop,
+         key_er) = jax.random.split(key, 7)
+    elif has_pop:
+        key_pol, key_h, key_z, key_pop, key_er = jax.random.split(key, 5)
+    elif cfg.faults.enabled:
         key_pol, key_h, key_z, key_av, key_fd, key_nz = jax.random.split(
             key, 6)
     else:
@@ -136,7 +171,29 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
     # selected coordinates only
     h = jax.random.rayleigh(key_h, cfg.fading_mean / np.sqrt(np.pi / 2.0),
                             shape=(cfg.n_clients,), dtype=jnp.float32)
-    if cfg.faults.enabled:
+    if has_pop:
+        # population lane (DESIGN.md §15): the cohort is sampled from the
+        # lane's own carried virtual population; the realised
+        # participation rescales the superposition and mid-round churn
+        # erases symbol blocks — the same "unsent" rank-form semantics as
+        # the fault path below (stale value kept, age keeps climbing)
+        pstate, ps = pop_mod.population_round(pstate, key_pop,
+                                              cfg.population)
+        n_t = ps["n_t"]
+        agg = fault_mod.participation_scale(
+            jnp.einsum("n,nd->d", h * ps["part"], grads), n_t)
+        if cfg.faults.enabled:
+            agg = fault_mod.corrupt(agg, key_nz, cfg.faults)
+        erase = pop_mod.churn_erase_mask(key_er, cfg.d, ps["churn"],
+                                         cfg.population)
+        if cfg.faults.enabled:
+            erase = jnp.maximum(
+                erase, fault_mod.fade_mask(key_fd, cfg.d, cfg.faults))
+        erase = fault_mod.erase_with_outage(erase, n_t)
+        bad = (erase > 0.0) | jnp.logical_not(jnp.isfinite(agg))
+        agg = jnp.where(bad, 0.0, agg)
+        mask = mask * (1.0 - bad.astype(jnp.float32))
+    elif cfg.faults.enabled:
         # churn in rank form: iid dropout thins the superposition (the
         # aggregate rescales by the realised participation, guarded
         # against the all-out round), deep-fade erasures and non-finite
@@ -186,7 +243,13 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
                "max_age": age_next.max(), "frac_fresh": mask.mean(),
                "res_norm": jnp.abs(res).mean(),
                "km_frac": k_m_eff.astype(jnp.float32) / cfg.k}
-    return (w_next, g_t, age_next, res, cs, w_stars), metrics
+    if has_pop:
+        metrics["n_t"] = n_t
+        metrics["churn"] = ps["churn"]
+        out = (w_next, g_t, age_next, res, cs, w_stars, pstate)
+    else:
+        out = (w_next, g_t, age_next, res, cs, w_stars)
+    return out, metrics
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "any_adaptive"))
@@ -195,10 +258,14 @@ def _run_grid(cfg: SweepConfig, seeds: Array, policy_ids: Array,
               ) -> Dict[str, Array]:
     """All grid points, one compiled program: scan over rounds, vmap over
     the flattened (policy, k_m, seed) grid."""
+    # fault channels and population churn both block refreshes
+    # independently per round, so their thinning rates add
+    thin = min(0.99, (cfg.faults.thin if cfg.faults.enabled else 0.0)
+               + (cfg.population.thin if cfg.population is not None
+                  else 0.0))
     ctrl = budget.BudgetController(cfg.controller, rho=cfg.rho,
                                    age_offset=float(cfg.async_lag),
-                                   thin=(cfg.faults.thin
-                                         if cfg.faults.enabled else 0.0))
+                                   thin=thin)
 
     def one_sim(seed, policy_id, k_m, adaptive):
         key0 = jax.random.PRNGKey(seed)
@@ -216,6 +283,11 @@ def _run_grid(cfg: SweepConfig, seeds: Array, policy_ids: Array,
                  budget.init_controller_state(
                      k_m.astype(jnp.float32) / cfg.k),
                  w_stars)
+        if cfg.population is not None:
+            # every lane carries its own virtual population through the
+            # scan, seeded from the lane key (vmapped like cs)
+            carry = carry + (pop_mod.init_population_state(
+                jax.random.fold_in(key0, 0x404), cfg.population),)
 
         def round_body(c, key):
             return _one_round(cfg, ctrl, any_adaptive, c, key, policy_id,

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 import numpy as np
 
-from repro.core import controller as budget, faults, oac, packing, quantize
+from repro.core import (controller as budget, faults, oac, packing,
+                        population, quantize)
 from repro.core.aou import update_age_by_indices
 from repro.core.engine import (EngineConfig, SelectionEngine,
                                fair_k_masks_dynamic, index_jitter,
@@ -110,6 +111,26 @@ class FLConfig:
                                     # shadow snapshot on a spike and
                                     # tightens k_M for a cooldown window.
                                     # None (default) traces nothing extra
+    population: Optional[population.PopulationConfig] = None
+                                    # population-scale client churn
+                                    # (DESIGN.md §15): the N compute
+                                    # clients are the cohort the server
+                                    # samples each round out of a
+                                    # 1e5-1e6-strong virtual population
+                                    # whose packed availability chains
+                                    # ride the fault-state carry.  The
+                                    # round gates the OAC superposition by
+                                    # the realised participation (rescaled
+                                    # via ``faults.participation_scale``)
+                                    # and erases symbol blocks lost to
+                                    # mid-round churn through the
+                                    # sanitize path.  Requires
+                                    # ``participants == n_clients``;
+                                    # composes with fade/nan_rate faults
+                                    # but not with ``faults.dropout``
+                                    # (one availability process at a
+                                    # time).  None (default) traces the
+                                    # historical program bit-exactly
     seed: int = 0
 
     @property
@@ -174,22 +195,42 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
         raise ValueError(f"async_lag must be >= 0, got {fl.async_lag}")
     chaos = fl.chaos
     wdcfg = fl.watchdog
+    pop = fl.population is not None
     if chaos and fl.one_bit:
         raise ValueError("fault injection on the one-bit FSK-MV uplink is "
                          "not modelled — run chaos with one_bit=False")
-    if chaos and fl.policy not in ("fairk", "topk", "roundrobin",
-                                   "fairk_auto"):
-        raise ValueError("chaos rounds run selection in sanitized "
-                         f"threshold/rank form — policy {fl.policy!r} "
-                         "needs index arithmetic")
+    if (chaos or pop) and fl.policy not in ("fairk", "topk", "roundrobin",
+                                            "fairk_auto"):
+        raise ValueError("chaos/population rounds run selection in "
+                         f"sanitized threshold/rank form — policy "
+                         f"{fl.policy!r} needs index arithmetic")
+    if pop:
+        if fl.population.participants != fl.n_clients:
+            raise ValueError(
+                "the FL sim's compute clients ARE the sampled cohort: "
+                f"population.participants={fl.population.participants} "
+                f"must equal n_clients={fl.n_clients}")
+        if fl.faults.dropout > 0.0:
+            raise ValueError(
+                "population availability and FaultConfig.dropout are two "
+                "availability processes gating the same superposition — "
+                "run one at a time (fade/nan_rate compose fine)")
+        if fl.one_bit:
+            raise ValueError("population churn on the one-bit FSK-MV "
+                             "uplink is not modelled — run population "
+                             "with one_bit=False")
     if wdcfg is not None and fl.policy not in ("fairk", "fairk_auto"):
         raise ValueError("the watchdog tightens the FAIR-k split — policy "
                          f"{fl.policy!r} pins or ignores it")
     age_lag = fl.async_lag or None
+    # controller setpoint thinning: fault channels and population churn
+    # both block refreshes independently per round, so their rates add
+    thin_total = min(0.99, (fl.faults.thin if chaos else 0.0)
+                     + (fl.population.thin if pop else 0.0))
     bctrl = (budget.BudgetController(fl.controller,
                                      rho=fl.compression_ratio,
                                      age_offset=float(fl.async_lag),
-                                     thin=(fl.faults.thin if chaos else 0.0))
+                                     thin=thin_total)
              if adaptive else None)
     # the realised static split (Remark-1 policies pin it: topk -> 1,
     # roundrobin -> 0) — what the km_frac telemetry records
@@ -218,7 +259,7 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                      # one-bit: the channel perturbs the vote energy (inside
                      # sign_mv), not the merged values — engine noise off
                      noise_std=(fl.channel.noise_std
-                                if (fl.backend != "exact" or chaos)
+                                if (fl.backend != "exact" or chaos or pop)
                                 and not fl.one_bit
                                 else 0.0),
                      n_clients=fl.n_clients,
@@ -226,9 +267,10 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                      # routes; on packed this also moves the warm-start
                      # re-estimation onto the carried histograms, making
                      # the fused pass the round's only read of the buffer.
-                     # chaos rounds need them on exact too (the adaptive
-                     # controller consumes them from the unified branch)
-                     fused_stats=(fl.backend != "exact") or chaos,
+                     # chaos/population rounds need them on exact too (the
+                     # adaptive controller consumes them from the unified
+                     # branch)
+                     fused_stats=(fl.backend != "exact") or chaos or pop,
                      warm_start=(fl.backend == "packed")), d,
         layout=layout)
 
@@ -241,9 +283,18 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
     def _round(key: Array, w: Array, g_prev: Array, age: Array,
                sel_count: Array, xs: Array, ys: Array, residual: Array,
                tstate, cstate, fstate):
-        if chaos:
+        # key-split discipline: chaos-only keeps the historical 5-way
+        # split (bit-exact trajectories); population adds two keys (the
+        # population round + the churn-erase mask) on top
+        key_av = key_fd = key_nz = key_pop = key_er = None
+        if pop and chaos:
+            (key_sel, key_ch, key_av, key_fd, key_nz, key_pop,
+             key_er) = jax.random.split(key, 7)
+        elif chaos:
             key_sel, key_ch, key_av, key_fd, key_nz = jax.random.split(key,
                                                                        5)
+        elif pop:
+            key_sel, key_ch, key_pop, key_er = jax.random.split(key, 4)
         else:
             key_sel, key_ch = jax.random.split(key)
         grads = clients(w, xs, ys)                       # (N, d)
@@ -277,7 +328,7 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
             snap = faults.tree_select(healthy, rolled, fstate["snap"])
             return (*rolled, {**fstate, "wd": wd, "snap": snap})
 
-        if fl.backend in ("threshold", "packed") or chaos:
+        if fl.backend in ("threshold", "packed") or chaos or pop:
             ts = tstate if fl.backend == "packed" else None
             if fl.one_bit:
                 # FSK-MV uplink (Sec. V-B): clients transmit sign(ǧ_{n,t})
@@ -326,7 +377,31 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                 # successor comes back from the same pass
                 h = oac.sample_fading(key_sel, fl.n_clients, fl.channel)
                 erase = None
-                if chaos:
+                if pop:
+                    # population churn (DESIGN.md §15): the round samples
+                    # its cohort from the live virtual population; the
+                    # realised participation gates the superposition (the
+                    # same guarded 1/N_t rescale as the chaos path), and
+                    # mid-round vanishers erase symbol blocks of the
+                    # aggregate through the sanitize path — their
+                    # coordinates stay semantically unsent, age climbing,
+                    # exactly the Lemma-1 thinning model the population
+                    # validation suite checks against
+                    pnext, ps = population.population_round(
+                        fstate["pop"], key_pop, fl.population)
+                    fstate = {**fstate, "pop": pnext}
+                    n_t = ps["n_t"]
+                    total = jnp.einsum("n,nd->d", h * ps["part"], grads)
+                    fresh = faults.participation_scale(total, n_t)
+                    if chaos:
+                        fresh = faults.corrupt(fresh, key_nz, fl.faults)
+                    erase = population.churn_erase_mask(
+                        key_er, d, ps["churn"], fl.population)
+                    if chaos:
+                        erase = jnp.maximum(
+                            erase, faults.fade_mask(key_fd, d, fl.faults))
+                    erase = faults.erase_with_outage(erase, n_t)
+                elif chaos:
                     # churn: the Gilbert–Elliott availability chain gates
                     # which clients superpose this round; the aggregate
                     # rescales by the REALISED participation N_t (traced,
@@ -349,7 +424,7 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                     fresh, g_prev, age, key=key_ch, tstate=ts,
                     residual=residual if fl.error_feedback else None,
                     k_m_frac=kmf, age_lag=age_lag, erase=erase,
-                    sanitize=chaos)
+                    sanitize=chaos or pop)
                 sel_mask = (stats["sel_mask"] if age_lag
                             else (age_next == 0.0).astype(jnp.float32))
                 if fl.error_feedback:
@@ -418,9 +493,10 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                                kmf if kmf is not None else frac_static),
                 fstate)
 
-    if chaos or wdcfg is not None:
-        # extended step: the chaos/watchdog carry (``init_fault_state``)
-        # rides as an 11th argument and comes back as a 10th output
+    if chaos or wdcfg is not None or pop:
+        # extended step: the chaos/watchdog/population carry
+        # (``init_fault_state``) rides as an 11th argument and comes back
+        # as a 10th output
         return jax.jit(_round)
 
     @jax.jit
@@ -455,14 +531,18 @@ def init_fault_state(fl: FLConfig, state: ServerState,
     """Initial chaos/watchdog carry for the extended step returned by
     ``make_fl_step`` when ``fl.chaos`` or ``fl.watchdog`` is set:
     ``avail`` is the Gilbert–Elliott availability vector, ``wd`` the
-    watchdog EMA state and ``snap`` the in-graph shadow snapshot the
-    watchdog rolls back to (params + every carried server buffer)."""
+    watchdog EMA state, ``snap`` the in-graph shadow snapshot the
+    watchdog rolls back to (params + every carried server buffer), and
+    ``pop`` the packed virtual-population state (DESIGN.md §15)."""
     fstate: Dict[str, Any] = {}
+    if key is None:
+        key = jax.random.PRNGKey(fl.seed + 0x5EED)
     if fl.chaos:
-        if key is None:
-            key = jax.random.PRNGKey(fl.seed + 0x5EED)
         fstate["avail"] = faults.init_avail_state(key, fl.n_clients,
                                                   fl.faults)
+    if fl.population is not None:
+        fstate["pop"] = population.init_population_state(
+            jax.random.fold_in(key, 0x404), fl.population)
     if fl.watchdog is not None:
         fstate["wd"] = faults.init_watchdog_state()
         fstate["snap"] = (state.w, state.g, state.age, state.sel_count,
@@ -490,7 +570,8 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
     # and its host-side Gini sync are gone
     fl_step = make_fl_step(fl, unravel, loss_fn, d)
     key = jax.random.PRNGKey(fl.seed)
-    has_fstate = fl.chaos or fl.watchdog is not None
+    has_fstate = (fl.chaos or fl.watchdog is not None
+                  or fl.population is not None)
     fstate = init_fault_state(fl, state) if has_fstate else None
 
     history: Dict[str, Any] = {"round": [], "acc": [],

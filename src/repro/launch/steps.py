@@ -43,6 +43,7 @@ from repro.configs.base import InputShape, ModelConfig
 from repro.core import controller as budget
 from repro.core import faults
 from repro.core import packing
+from repro.core import population as pop_mod
 from repro.core.engine import (AGE_CAP, EngineConfig, SelectionEngine,
                                fair_k_masks_dynamic, index_jitter,
                                sampled_thresholds, threshold_mask,
@@ -153,6 +154,24 @@ class OacServerConfig:
                                    # the magnitudes).  Combine with
                                    # error_feedback so the quantization
                                    # error is re-injected (packed only).
+    population: Optional[pop_mod.PopulationConfig] = None
+                                   # population-scale churn for the
+                                   # production trainer (DESIGN.md §15),
+                                   # STATELESS: the memoryless modes (iid,
+                                   # diurnal) recompute the round's
+                                   # availability as a pure counter-based
+                                   # function of (base key, round seed), so
+                                   # no chain state rides the checkpointed
+                                   # server buffers.  A total cohort outage
+                                   # erases the round, mid-round churn
+                                   # erases symbol blocks through the
+                                   # sanitize path, and under ``async_agg``
+                                   # the straggler pattern's threshold
+                                   # becomes the round's TRACED population
+                                   # slow-share instead of the fixed
+                                   # ``straggler_frac``.  Needs packed +
+                                   # sanitize; ``mode="ge"`` carries chain
+                                   # state and is sim-trainer-only.
 
 
 @dataclasses.dataclass
@@ -424,6 +443,24 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         if oac.straggler_lag < 1:
             raise ValueError(f"straggler_lag must be >= 1, got "
                              f"{oac.straggler_lag}")
+    if oac is not None and oac.population is not None:
+        if not (oac.packed and oac.sanitize):
+            raise ValueError("population churn erasures degrade through "
+                             "the fused kernel's sanitize path — set "
+                             "OacServerConfig(packed=True, sanitize=True)")
+        if oac.one_bit:
+            raise ValueError("population churn on the one-bit uplink is "
+                             "not modelled — run population with "
+                             "one_bit=False")
+        if oac.population.mode == "ge":
+            raise ValueError("the launch population is stateless (iid | "
+                             "diurnal — recomputed per round from the "
+                             "seed); Gilbert–Elliott bursts carry chain "
+                             "state and run in the FL sim trainer only")
+        if oac.population.slow_frac > 0.0 and not oac.async_agg:
+            raise ValueError("population stragglers land through the "
+                             "async shadow buffer — slow_frac > 0 needs "
+                             "OacServerConfig(async_agg=True)")
     srv_abs = abstract_server_state(params_abs, mesh=mesh, p_specs=p_specs,
                                     oac=oac)
     srv_specs = shlib.server_pspecs(
@@ -465,7 +502,12 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         bctrl = (budget.BudgetController(
             rho=oac.rho,
             age_offset=(float(oac.straggler_lag) if oac.async_agg
-                        else 0.0))
+                        else 0.0),
+            # population churn thins the refresh stream (DESIGN.md §15):
+            # the controller's Lemma-1 target absorbs the geometric mean
+            # shift thin/(1-thin) as a constant offset
+            thin=(oac.population.thin if oac.population is not None
+                  else 0.0))
             if oac.adaptive_km else None)
 
         def _shard_noise_key(seed):
@@ -513,18 +555,36 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                 cstate = budget.controller_state_from_vec(server["ctrl"])
                 kmf = cstate["k_m_frac"]
             key = _shard_noise_key(seed) if oac.noise_std > 0.0 else None
+            pop_stats = None
+            if oac.population is not None:
+                # stateless population round (DESIGN.md §15): iid/diurnal
+                # chains are memoryless, so the round's availability grid
+                # is a pure counter-based function of (base key, seed) —
+                # no chain state rides the checkpointed server buffers,
+                # and consecutive round seeds walk a lawful trajectory.
+                # Replicated computation: no shard fold-in, so every
+                # shard derives identical round stats (no collective).
+                pop_stats = pop_mod.stateless_round(
+                    jax.random.PRNGKey(0x509), seed, oac.population)
             g_flat = layout.pack(grads)            # the ONLY pack per step
             age_lag = None
             new_shadow = None
             if oac.async_agg:
                 # straggler OAC contributions land one aggregation late: a
-                # trace-static Knuth-hash pattern of coordinates defers its
-                # share of THIS round's uplink into the shadow buffer while
-                # LAST round's shadow joins the merge.  Elementwise mixing
-                # on the packed buffer — not an extra instrumented read of
-                # the persisted gradient state, so G_READS stays 1.
+                # Knuth-hash pattern of coordinates defers its share of
+                # THIS round's uplink into the shadow buffer while LAST
+                # round's shadow joins the merge.  Elementwise mixing on
+                # the packed buffer — not an extra instrumented read of
+                # the persisted gradient state, so G_READS stays 1.  With
+                # a population the threshold is the round's TRACED
+                # straggler share (sampled from the live cohort) instead
+                # of the fixed ``straggler_frac`` — same hash pattern,
+                # data-dependent coverage, still zero recompiles.
+                frac = (pop_stats["slow_share"]
+                        if oac.population is not None
+                        else oac.straggler_frac)
                 strag = (index_jitter(layout.d_packed)
-                         < oac.straggler_frac).astype(jnp.float32)
+                         < frac).astype(jnp.float32)
                 new_shadow = g_flat * strag
                 g_flat = (g_flat * (1.0 - strag)
                           + server["shadow"].astype(jnp.float32))
@@ -565,6 +625,20 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                     layout.d_packed,
                     faults.FaultConfig(fade=oac.fade,
                                        fade_block=oac.fade_block))
+            if oac.population is not None:
+                # mid-round churn erasure (DESIGN.md §15): symbol blocks
+                # lost to participants whose chain dropped mid-round, at
+                # the round's traced churn rate; a TOTAL cohort outage
+                # erases everything.  Per-shard draw (disjoint slices =>
+                # the global mask), decorrelated from the fade stream.
+                churn_er = faults.erase_with_outage(
+                    pop_mod.churn_erase_mask(
+                        jax.random.fold_in(_shard_noise_key(seed), 0x509),
+                        layout.d_packed, pop_stats["churn"],
+                        oac.population),
+                    pop_stats["n_t"])
+                erase = (churn_er if erase is None
+                         else jnp.maximum(erase, churn_er))
             g_t, age_next, stats = eng.select_and_merge(
                 g_flat, server["g"], server["age"], key=key, tstate=tstate,
                 residual=server.get("res"), fresh=fresh, k_m_frac=kmf,
@@ -692,6 +766,9 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         "oac_async": bool(oac.async_agg) if oac is not None else False,
         "oac_sanitize": bool(oac.sanitize) if oac is not None else False,
         "oac_fade": float(oac.fade) if oac is not None else 0.0,
+        "oac_population": (oac.population.n_clients
+                           if oac is not None and oac.population is not None
+                           else 0),
         "optimizer": opt_name or cfg.optimizer, "lr": lr,
         "gather_dtype": gather_dtype,
         "scans": {"microbatch": n_micro, "layers": cfg.n_scan_blocks},

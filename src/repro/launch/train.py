@@ -93,6 +93,31 @@ def main():
     ap.add_argument("--fade-block", type=int, default=128,
                     help="coordinates per deep-fade block (one OFDM "
                          "symbol group's worth)")
+    ap.add_argument("--population", type=int, default=0,
+                    help="virtual client-population size (DESIGN.md §15): "
+                         "per-round availability, cohort participation, "
+                         "mid-round churn erasures and (under --async-agg) "
+                         "the traced straggler share all derive from a "
+                         "stateless population of this many clients "
+                         "(0 = off; needs --sanitize)")
+    ap.add_argument("--cohorts", type=int, default=4096,
+                    help="cohort batch size of the packed population "
+                         "state (clients per packed row)")
+    ap.add_argument("--participants", type=int, default=16,
+                    help="clients the server samples per round from the "
+                         "live population")
+    ap.add_argument("--avail", type=float, default=0.9,
+                    help="stationary per-client availability of the "
+                         "population")
+    ap.add_argument("--diurnal", action="store_true",
+                    help="diurnal availability: the population's rate "
+                         "rides a sinusoid (period --diurnal-period, "
+                         "swing --diurnal-depth) whose time-average stays "
+                         "at --avail")
+    ap.add_argument("--diurnal-period", type=int, default=96,
+                    help="rounds per diurnal cycle")
+    ap.add_argument("--diurnal-depth", type=float, default=0.1,
+                    help="relative swing of the diurnal availability rate")
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="save the packed server state every N steps "
                          "(0 = off; a SIGTERM always lands one final "
@@ -109,6 +134,15 @@ def main():
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((1, n_dev), ("data", "model"))
     shape = InputShape("custom", args.seq, args.batch, "train")
+    population = None
+    if args.population > 0:
+        from repro.core.population import PopulationConfig
+        population = PopulationConfig(
+            n_clients=args.population, cohort_size=args.cohorts,
+            participants=args.participants, avail=args.avail,
+            mode="diurnal" if args.diurnal else "iid",
+            period=args.diurnal_period, depth=args.diurnal_depth,
+            slow_frac=(args.straggler_frac if args.async_agg else 0.0))
     oac = (OacServerConfig(rho=args.rho, packed=not args.per_leaf_server,
                            error_feedback=args.ef, one_bit=args.one_bit,
                            fused_stats=not args.legacy_stats,
@@ -116,7 +150,8 @@ def main():
                            async_agg=args.async_agg,
                            straggler_frac=args.straggler_frac,
                            sanitize=args.sanitize, fade=args.fade,
-                           fade_block=args.fade_block)
+                           fade_block=args.fade_block,
+                           population=population)
            if args.oac else None)
     bundle = make_train_step(cfg, shape, mesh, n_micro=1, oac=oac, lr=1e-3)
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import statutil
 from repro.core import aou, markov, packing
 from repro.core.engine import (AGE_CAP, EngineConfig, SelectionEngine,
                                fair_k_masks_dynamic, make_engine, traced_km)
@@ -197,31 +198,13 @@ def test_empirical_pmf_matches_shifted_lemma1(backend):
         eng = make_engine("fairk", "exact", d=d, k=k, k_m=k_m,
                           fused_stats=True)
         ts = None
-    rng = np.random.default_rng(0)
-    gp = jnp.zeros((d,), jnp.float32)
-    ag = jnp.zeros((d,), jnp.float32)
-    step = jax.jit(functools.partial(eng.select_and_merge, age_lag=lag))
-    acc = np.zeros(packing.STATS_AGE_BINS)
-    for r in range(600):
-        g = jnp.asarray(rng.normal(size=d).astype("f4"))
-        if backend == "packed":
-            g_t, ag, stats = step(g, gp, ag, tstate=ts)
-            ts = stats["tstate"]
-        else:
-            g_t, ag, stats = step(g, gp, ag)
-        gp = g_t
-        if r >= 150:
-            acc += np.asarray(stats["age_hist"])
-    emp = acc / acc.sum()
+    acc = statutil.accumulate_age_hist(eng, d, tstate=ts, age_lag=lag)
     k0 = int(round(k_m * (1 - k_m / d)))
     support, pred = markov.shifted_aou_distribution(
         markov.FairKChain(d=d, k=k, k_m=k_m, k0=k0), lag)
     assert int(support[0]) == lag                     # translated support
-    pred_full = np.zeros(packing.STATS_AGE_BINS)
-    pred_full[support[support < packing.STATS_AGE_BINS]] = \
-        pred[support < packing.STATS_AGE_BINS]
+    emp = statutil.assert_pmf_close(acc, support, pred)
     assert emp[:lag].sum() == 0.0                     # nothing younger than lag
-    assert 0.5 * np.abs(emp - pred_full).sum() < 0.1  # total variation
 
 
 def test_shifted_aou_distribution_validates():

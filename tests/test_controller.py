@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import statutil
 from repro import checkpoint
 from repro.core import controller, markov, packing
 from repro.core.engine import EngineConfig, SelectionEngine
@@ -72,27 +73,12 @@ class TestStalenessPmf:
         eng = SelectionEngine(EngineConfig(policy="fairk", backend="exact",
                                            k=k, k_m=k_m, fused_stats=True),
                               d)
-        rng = np.random.default_rng(0)
-        gp = jnp.zeros((d,), jnp.float32)
-        ag = jnp.zeros((d,), jnp.float32)
-        step = jax.jit(eng.select_and_merge)
-        acc = np.zeros(packing.STATS_AGE_BINS)
-        for r in range(600):
-            g = jnp.asarray(rng.normal(size=d).astype("f4"))
-            g_t, ag, stats = step(g, gp, ag)
-            gp = g_t
-            if r >= 150:
-                acc += np.asarray(stats["age_hist"])
-        emp = acc / acc.sum()
+        acc = statutil.accumulate_age_hist(eng, d)
         k0 = int(round(k_m * (1 - k_m / d)))
         support, pred = markov.aou_distribution(
             markov.FairKChain(d=d, k=k, k_m=k_m, k0=k0))
-        pred_full = np.zeros(packing.STATS_AGE_BINS)
-        pred_full[:len(pred)] = pred[:packing.STATS_AGE_BINS]
-        mean_emp = float((np.arange(len(emp)) * emp).sum())
-        mean_pred = float((support * pred).sum())
-        assert abs(mean_emp - mean_pred) < 0.1 * mean_pred
-        assert 0.5 * np.abs(emp - pred_full).sum() < 0.1
+        emp = statutil.assert_pmf_close(acc, support, pred, mean_rtol=0.1)
+        pred_full = statutil.embed_pmf(support, pred)
         q = controller.pmf_quantile
         assert abs(float(q(jnp.asarray(emp, jnp.float32), 0.9))
                    - float(q(jnp.asarray(pred_full, jnp.float32), 0.9))) < 1.5

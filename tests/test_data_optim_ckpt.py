@@ -37,6 +37,32 @@ class TestData:
         skew_iid = class_skew(partition.iid_partition(len(y), 10, 0))
         assert skew_dir > 3 * skew_iid
 
+    def test_dirichlet_infeasible_min_size_raises(self):
+        """Regression: an unattainable min_size used to spin the redraw
+        loop forever — now it fails fast, naming the infeasible sizes."""
+        y = np.arange(10) % 2                 # 10 samples, 2 classes
+        with pytest.raises(ValueError, match="10 clients x min_size=8"):
+            partition.dirichlet_partition(y, 10, 0.3, seed=0)
+
+    def test_dirichlet_retry_exhaustion_raises(self):
+        """Feasible in principle but so skewed no bounded draw streak
+        delivers it: the loop must give up with a diagnosis instead of
+        running unbounded."""
+        y = np.zeros(40, dtype=np.int64)      # one class, 4 clients
+        with pytest.raises(ValueError, match="attempts"):
+            partition.dirichlet_partition(y, 4, 1e-4, seed=0, min_size=10,
+                                          max_retries=5)
+
+    def test_dirichlet_retry_still_succeeds(self):
+        """The bounded loop keeps the redraw behavior: a tight-but-
+        feasible min_size still resolves within the retry budget."""
+        spec = synthetic.DatasetSpec("t", (8, 8, 1), 10, 2000, 100)
+        (_, y), _ = synthetic.make_dataset(spec, seed=0)
+        parts = partition.dirichlet_partition(y, 10, 0.3, seed=0,
+                                              min_size=40)
+        assert min(len(p) for p in parts) >= 40
+        assert len(np.unique(np.concatenate(parts))) == len(y)
+
     def test_client_batches_shape_and_membership(self):
         spec = synthetic.DatasetSpec("t", (4, 4, 1), 5, 500, 50)
         (x, y), _ = synthetic.make_dataset(spec, seed=1)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import statutil
 from repro.core import faults, markov, packing
 from repro.core.engine import (AGE_CAP, EngineConfig, SelectionEngine,
                                make_engine)
@@ -370,7 +371,7 @@ def test_empirical_pmf_matches_thinned_lemma1(backend):
     """Per-coordinate erasures at rate ``thin`` block refreshes
     geometrically; the stationary post-update AoU pmf must track
     ``markov.thinned_aou_distribution`` within the TV tolerance the
-    sync and async laws already meet."""
+    sync and async laws already meet (seeded run, see tests/statutil.py)."""
     d, k, k_m, thin = 512, 64, 32, 0.1
     if backend == "packed":
         eng = make_engine("fairk", "packed",
@@ -382,30 +383,12 @@ def test_empirical_pmf_matches_thinned_lemma1(backend):
         eng = make_engine("fairk", "exact", d=d, k=k, k_m=k_m,
                           fused_stats=True)
         ts = None
-    rng = np.random.default_rng(0)
-    gp = jnp.zeros((d,), jnp.float32)
-    ag = jnp.zeros((d,), jnp.float32)
-    step = jax.jit(functools.partial(eng.select_and_merge, sanitize=True))
-    acc = np.zeros(packing.STATS_AGE_BINS)
-    for r in range(600):
-        g = jnp.asarray(rng.normal(size=d).astype("f4"))
-        erase = jnp.asarray((rng.random(d) < thin).astype("f4"))
-        if backend == "packed":
-            g_t, ag, stats = step(g, gp, ag, erase=erase, tstate=ts)
-            ts = stats["tstate"]
-        else:
-            g_t, ag, stats = step(g, gp, ag, erase=erase)
-        gp = g_t
-        if r >= 150:
-            acc += np.asarray(stats["age_hist"])
-    emp = acc / acc.sum()
+    acc = statutil.accumulate_age_hist(eng, d, tstate=ts, erase_thin=thin,
+                                       sanitize=True)
     k0 = int(round(k_m * (1 - k_m / d)))
     support, pred = markov.thinned_aou_distribution(
         markov.FairKChain(d=d, k=k, k_m=k_m, k0=k0), thin)
-    pred_full = np.zeros(packing.STATS_AGE_BINS)
-    sel = support < packing.STATS_AGE_BINS
-    pred_full[support[sel]] = pred[sel]
-    assert 0.5 * np.abs(emp - pred_full).sum() < 0.1   # total variation
+    statutil.assert_pmf_close(acc, support, pred)
 
 
 def test_thinned_aou_distribution_validates():

@@ -1,0 +1,176 @@
+"""Property tests for the analytic staleness machinery (satellite).
+
+Runs under the real ``hypothesis`` when installed (CI does); the pinned
+container falls back to ``tests/_hypothesis_compat.py``'s deterministic
+seeded-draw stand-in, so tier-1 stays hermetic either way.
+
+Pins, for ARBITRARY valid parameters (not just the hand-picked operating
+points of the acceptance tests):
+
+* Gilbert–Elliott chains hit their stationary targets exactly — both the
+  fault chain (``pi_bad == dropout``) and the population availability
+  chain (``pi_good == avail``) — whenever the feasibility validators
+  admit the configuration;
+* every pmf ``core/markov.py`` can emit (Lemma 1, lag-shifted, thinned,
+  population-thinned) is nonnegative and sums to one;
+* the shift (translation) and thin (geometric convolution) transforms
+  commute with each other and shift composes additively — the algebra
+  the composed async + churn predictions rely on.
+"""
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.core import faults, markov, population
+
+
+def _chain(d: int, k_frac: float, km_frac: float) -> markov.FairKChain:
+    """Map unconstrained draws onto a valid FairKChain parameterization
+    (0 < k_m < k <= d/2, 0 < k0 < k_m)."""
+    k = max(2, min(d // 2, int(round(k_frac * d / 2))))
+    k_m = max(1, min(k - 1, int(round(km_frac * k))))
+    k0 = max(1, min(k_m - 1, int(round(k_m * (1.0 - k_m / d))))) \
+        if k_m > 1 else None
+    if k0 is None:                       # k_m == 1 leaves no room for k0
+        k_m, k = 2, max(3, k)
+        k = min(k, d // 2)
+        k0 = 1
+    return markov.FairKChain(d=d, k=k, k_m=k_m, k0=k0)
+
+
+# ---------------------------------------------------------------------------
+# Gilbert–Elliott stationarity — fault chain and population chain
+# ---------------------------------------------------------------------------
+
+class TestGEStationarity:
+    @settings(max_examples=25, deadline=None)
+    @given(dropout=st.floats(min_value=0.01, max_value=0.6),
+           burst_scale=st.floats(min_value=1.0, max_value=10.0))
+    def test_fault_chain_hits_stationary_dropout(self, dropout, burst_scale):
+        """For every (dropout, burst) the feasibility validator admits,
+        ``ge_probs`` must deliver pi_bad = p_gb / (p_gb + p_bg) equal to
+        the requested dropout — no silent clamping."""
+        need = dropout / (1.0 - dropout)
+        burst = max(1.0, need * burst_scale)
+        cfg = faults.FaultConfig(dropout=dropout, burst=burst)
+        p_gb, p_bg = faults.ge_probs(cfg)
+        assert 0.0 < p_gb <= 1.0 and 0.0 < p_bg <= 1.0
+        pi_bad = p_gb / (p_gb + p_bg)
+        assert abs(pi_bad - dropout) < 1e-9
+        assert abs(1.0 / p_bg - burst) < 1e-9     # mean bad dwell
+
+    @settings(max_examples=25, deadline=None)
+    @given(dropout=st.floats(min_value=0.01, max_value=0.6))
+    def test_fault_chain_iid_special_case(self, dropout):
+        """burst=None is the memoryless chain: next state independent of
+        the current one, stationary mass still exactly ``dropout``."""
+        p_gb, p_bg = faults.ge_probs(faults.FaultConfig(dropout=dropout))
+        assert abs(p_gb - dropout) < 1e-12
+        assert abs(p_gb + p_bg - 1.0) < 1e-12     # memoryless
+        assert abs(p_gb / (p_gb + p_bg) - dropout) < 1e-9
+
+    @settings(max_examples=25, deadline=None)
+    @given(avail=st.floats(min_value=0.3, max_value=0.99),
+           burst_scale=st.floats(min_value=1.0, max_value=10.0))
+    def test_population_chain_hits_stationary_avail(self, avail, burst_scale):
+        need = (1.0 - avail) / avail
+        burst = max(1.0, need * burst_scale)
+        cfg = population.PopulationConfig(
+            n_clients=1024, cohort_size=256, participants=8,
+            avail=avail, mode="ge", burst=burst)
+        p_gb, p_bg = population.transition_probs(cfg)
+        assert 0.0 < p_gb <= 1.0 and 0.0 < p_bg <= 1.0
+        pi_good = p_bg / (p_gb + p_bg)
+        assert abs(pi_good - avail) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# every markov pmf is a pmf
+# ---------------------------------------------------------------------------
+
+class TestPmfsNormalized:
+    @settings(max_examples=10, deadline=None)
+    @given(d=st.sampled_from([96, 128, 256]),
+           k_frac=st.floats(min_value=0.2, max_value=1.0),
+           km_frac=st.floats(min_value=0.1, max_value=0.9),
+           lag=st.integers(min_value=0, max_value=7),
+           thin=st.floats(min_value=0.0, max_value=0.7))
+    def test_all_distributions(self, d, k_frac, km_frac, lag, thin):
+        chain = _chain(d, k_frac, km_frac)
+        for support, pmf in (
+                markov.aou_distribution(chain),
+                markov.shifted_aou_distribution(chain, lag),
+                markov.thinned_aou_distribution(chain, thin)):
+            assert (np.asarray(pmf) >= 0.0).all()
+            assert abs(float(np.asarray(pmf).sum()) - 1.0) < 1e-6
+            assert len(support) == len(pmf)
+
+    @settings(max_examples=10, deadline=None)
+    @given(d=st.sampled_from([96, 128, 256]),
+           k_frac=st.floats(min_value=0.2, max_value=1.0),
+           km_frac=st.floats(min_value=0.1, max_value=0.9),
+           avail=st.floats(min_value=0.3, max_value=0.99),
+           participants=st.integers(min_value=1, max_value=64))
+    def test_population_distribution(self, d, k_frac, km_frac, avail,
+                                     participants):
+        chain = _chain(d, k_frac, km_frac)
+        support, pmf = markov.population_aou_distribution(
+            chain, avail, 1.0 - avail, participants)
+        assert (np.asarray(pmf) >= 0.0).all()
+        assert abs(float(np.asarray(pmf).sum()) - 1.0) < 1e-6
+        # thinning only delays: population mean >= synchronous mean
+        sync_s, sync_p = markov.aou_distribution(chain)
+        assert float((support * pmf).sum()) >= \
+            float((sync_s * sync_p).sum()) - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# transform algebra: shift and thin compose
+# ---------------------------------------------------------------------------
+
+class TestTransformAlgebra:
+    @settings(max_examples=10, deadline=None)
+    @given(d=st.sampled_from([96, 128]),
+           k_frac=st.floats(min_value=0.3, max_value=1.0),
+           km_frac=st.floats(min_value=0.2, max_value=0.8),
+           lag=st.integers(min_value=0, max_value=9),
+           thin=st.floats(min_value=0.0, max_value=0.7))
+    def test_shift_and_thin_commute(self, d, k_frac, km_frac, lag, thin):
+        """A deterministic lag and an independent geometric delay add —
+        the order of the transforms cannot matter."""
+        base = markov.aou_distribution(_chain(d, k_frac, km_frac))
+        s_a, p_a = markov.thin_pmf(*markov.shift_pmf(*base, lag), thin)
+        s_b, p_b = markov.shift_pmf(*markov.thin_pmf(*base, thin), lag)
+        assert int(s_a[0]) == int(s_b[0])
+        n = min(len(p_a), len(p_b))
+        np.testing.assert_allclose(p_a[:n], p_b[:n], atol=1e-12)
+        assert float(np.abs(p_a[n:]).sum()) < 1e-9
+        assert float(np.abs(p_b[n:]).sum()) < 1e-9
+
+    @settings(max_examples=10, deadline=None)
+    @given(lag1=st.integers(min_value=0, max_value=6),
+           lag2=st.integers(min_value=0, max_value=6))
+    def test_shift_composes_additively(self, lag1, lag2):
+        base = markov.aou_distribution(
+            markov.FairKChain(d=128, k=32, k_m=16, k0=14))
+        s_ab, p_ab = markov.shift_pmf(*markov.shift_pmf(*base, lag1), lag2)
+        s_sum, p_sum = markov.shift_pmf(*base, lag1 + lag2)
+        np.testing.assert_array_equal(s_ab, s_sum)
+        np.testing.assert_allclose(p_ab, p_sum, atol=0.0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(avail=st.floats(min_value=0.3, max_value=0.99),
+           participants=st.integers(min_value=1, max_value=64),
+           exposure=st.floats(min_value=0.05, max_value=1.0))
+    def test_population_thin_matches_config(self, avail, participants,
+                                            exposure):
+        """``markov.population_thin`` (numpy-side prediction) and
+        ``PopulationConfig.thin`` (jax-side simulator) are the SAME
+        number — the validation suite depends on that identity."""
+        cfg = population.PopulationConfig(
+            n_clients=1024, cohort_size=256, participants=participants,
+            avail=avail, exposure=exposure)
+        pred = markov.population_thin(avail, cfg.vanish_rate, participants,
+                                      exposure)
+        assert 0.0 <= pred <= 0.99
+        assert abs(pred - cfg.thin) < 1e-12

@@ -30,6 +30,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ARTIFACT = os.path.join(ROOT, "benchmarks", "artifacts",
                         "packed_bench.json")
 BASELINE = os.path.join(ROOT, "benchmarks", "BENCH_packed.json")
+POPULATION_ARTIFACT = os.path.join(ROOT, "benchmarks", "artifacts",
+                                   "population_bench.json")
 
 # structural counters: exact match required
 STRUCTURAL = {
@@ -62,6 +64,20 @@ STRUCTURAL = {
     "g_reads_chaos": 1,
     "copies_chaos": [1, 1],
     "fused_calls_chaos": 1,
+}
+
+# the population-scale round (DESIGN.md §15): the stateless availability
+# draw, participation rescale and churn-erase blocks all ride the one
+# fused sanitize launch — population churn costs no extra instrumented
+# read of g, no extra tree copies, no extra kernel call.  Checked from
+# benchmarks/artifacts/population_bench.json when present (strict), with
+# a warning when the population bench did not run.  Structural only — no
+# ratio guard: the O(n_clients) availability draw is a simulation cost
+# whose wall-clock share swings with the runner.
+STRUCTURAL_POPULATION = {
+    "g_reads_population": 1,
+    "copies_population": [1, 1],
+    "fused_calls_population": 1,
 }
 
 # speedup ratios guarded against the committed baseline (lower = worse).
@@ -99,6 +115,7 @@ def main() -> int:
                          "ratio vs the baseline (default 0.15)")
     ap.add_argument("--artifact", default=ARTIFACT)
     ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--population-artifact", default=POPULATION_ARTIFACT)
     args = ap.parse_args()
 
     with open(args.artifact) as f:
@@ -115,6 +132,22 @@ def main() -> int:
             ok = got == want
         if not ok:
             failures.append(f"STRUCTURAL {key}: expected {want}, got {got}")
+
+    if os.path.exists(args.population_artifact):
+        with open(args.population_artifact) as f:
+            pop = json.load(f)
+        for key, want in STRUCTURAL_POPULATION.items():
+            got = pop.get(key)
+            ok = (got is not None and list(got) == want
+                  if isinstance(want, list) else got == want)
+            if not ok:
+                failures.append(
+                    f"STRUCTURAL (population) {key}: expected {want}, "
+                    f"got {got}")
+    else:
+        print(f"[bench-regression] WARNING: no population artifact at "
+              f"{args.population_artifact} — population structural "
+              f"counters not checked (run benchmarks.population_bench)")
     for key in GUARDED_RATIOS:
         b, c = base.get(key), cur.get(key)
         if b is None or c is None:
