@@ -221,6 +221,15 @@ def restore_server_state(path: str,
 # into an async run is exact, not an approximation
 ASYNC_FIELDS = ("shadow", "pending")
 
+# the wireless fading chain (launch.steps ``wireless``) is also
+# synthesizable, but VALUE-BEARING: its cold start is the deterministic
+# stationary draw from the fixed channel.FADING_INIT_KEY (a pure function
+# of the buffer size), NOT zeros — zeros would be a dead channel, every
+# block in permanent outage.  Migrating a pre-channel checkpoint into a
+# wireless run therefore reproduces exactly the state a cold start
+# carries.
+CHANNEL_FIELDS = ("fad",)
+
 
 def migrate_server_state(server: Dict[str, np.ndarray],
                          like: Dict[str, Any]) -> Dict[str, np.ndarray]:
@@ -230,7 +239,12 @@ def migrate_server_state(server: Dict[str, np.ndarray],
       cold (zero) double-buffer lanes shaped/typed like the configured
       state.  A synchronous checkpoint resumed under ``--async-agg`` then
       continues exactly (the async buffers start at zero by definition).
-    * any other mismatch — missing non-async fields (different
+    * checkpoint misses only ``CHANNEL_FIELDS`` members → migrate:
+      re-synthesize the deterministic stationary fading draw
+      (``channel.init_block_fading``) shaped like the configured state —
+      a pre-channel checkpoint resumed under ``--channel`` continues
+      exactly as a cold wireless start would.
+    * any other mismatch — missing non-synthesizable fields (different
       --ef/--one-bit/--adaptive-km flags) or extra checkpoint fields the
       config does not expect (async checkpoint resumed without
       --async-agg, where silently dropping the pending merge would lose
@@ -238,22 +252,31 @@ def migrate_server_state(server: Dict[str, np.ndarray],
       and the flags to fix."""
     missing = sorted(set(like) - set(server))
     extra = sorted(set(server) - set(like))
-    migratable = [f for f in missing if f in ASYNC_FIELDS]
-    hard_missing = [f for f in missing if f not in ASYNC_FIELDS]
+    migratable = [f for f in missing
+                  if f in ASYNC_FIELDS or f in CHANNEL_FIELDS]
+    hard_missing = [f for f in missing
+                    if f not in ASYNC_FIELDS and f not in CHANNEL_FIELDS]
     if hard_missing or extra:
         raise ValueError(
             f"checkpoint fields {sorted(server)} do not match the "
             f"configured server state {sorted(like)} "
             f"(missing: {hard_missing or 'none'}, "
             f"unexpected: {extra or 'none'}) — resume with the same "
-            "--ef/--one-bit/--adaptive-km/--async-agg flags (only the "
-            f"async fields {list(ASYNC_FIELDS)} can be synthesized, and "
-            "only in the sync -> async direction)")
+            "--ef/--one-bit/--adaptive-km/--async-agg/--channel flags "
+            f"(only the async fields {list(ASYNC_FIELDS)} and the fading "
+            f"chain {list(CHANNEL_FIELDS)} can be synthesized, and only "
+            "in the off -> on direction)")
     out = dict(server)
     for name in migratable:
         ref = like[name]
-        out[name] = np.zeros(ref.shape, jnp.bfloat16
-                             if ref.dtype == jnp.bfloat16 else ref.dtype)
+        if name in CHANNEL_FIELDS:
+            from repro.core import channel as chan_mod
+            out[name] = np.asarray(
+                chan_mod.init_block_fading(int(ref.shape[0]) // 2))
+        else:
+            out[name] = np.zeros(ref.shape, jnp.bfloat16
+                                 if ref.dtype == jnp.bfloat16
+                                 else ref.dtype)
     return out
 
 

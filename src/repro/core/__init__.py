@@ -1,7 +1,8 @@
 """Core library: the paper's contribution (FAIR-k + OAC aggregation) and its
 analysis toolkit (Markov staleness model, smoothness-constant estimation)."""
 
-from repro.core import aou, engine, lipschitz, markov, oac, quantize, selection
+from repro.core import (aou, channel, engine, lipschitz, markov, oac,
+                        quantize, selection)
 from repro.core.aou import init_age, max_staleness, update_age, update_age_by_indices
 from repro.core.engine import (BACKENDS, EngineConfig, SelectionEngine,
                                make_engine)
@@ -14,7 +15,8 @@ from repro.core.selection import (POLICIES, age_top_k_indices, fair_k_indices,
                                   top_k_indices, top_rand_indices)
 
 __all__ = [
-    "aou", "engine", "lipschitz", "markov", "oac", "quantize", "selection",
+    "aou", "channel", "engine", "lipschitz", "markov", "oac", "quantize",
+    "selection",
     "BACKENDS", "EngineConfig", "SelectionEngine", "make_engine",
     "init_age", "max_staleness", "update_age", "update_age_by_indices",
     "FairKChain", "aou_distribution", "expected_staleness", "simulate_aou",

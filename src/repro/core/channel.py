@@ -1,0 +1,302 @@
+"""Geometric wireless channel: path loss, correlated Rayleigh fading,
+truncated channel inversion and imperfect CSI (DESIGN.md §16).
+
+``core.oac`` implements the paper's idealized Sec. III-A channel — iid
+scalar fading per client per round plus additive Gaussian noise.  Real
+OAC lives on a *geometric* channel (the AirFL signal-processing survey's
+impairment list): clients sit at different distances from the server, so
+their large-scale path gains differ by orders of magnitude; small-scale
+Rayleigh fading is *temporally correlated* (a deep fade lasts several
+rounds); and the transmitters run **truncated channel inversion** power
+control — a client inverts its instantaneous channel so its contribution
+arrives coherently aligned, but when the gain falls below the truncation
+threshold the required power would exceed the budget and the client sits
+the round out.  This module makes all three a TRACED part of the round,
+degrading through the engine's existing ``erase``/``sanitize`` path:
+
+* **static deployment geometry** — per-client large-scale path gains
+  from a log-distance model with optional log-normal shadowing.  Clients
+  sit on a deterministic distance grid in ``[near, 1]`` (normalized cell
+  radius) and shadowing draws from ``numpy.default_rng(geo_seed)``, so
+  the gains are a pure function of the config — the analysis side
+  (``markov.truncation_thin``) and the controller setpoint see exactly
+  the gains the simulation uses, no carried state, no jax import.
+* **Gauss–Markov Rayleigh block fading** — each client's small-scale
+  coefficient is a complex AR(1) chain
+  ``f_t = rho_f f_{t-1} + sqrt(1 - rho_f^2) w_t`` with ``w_t ~ CN(0,1)``,
+  carried in the fault-state / server-state dict exactly like the
+  Gilbert–Elliott availability chains.  The stationary law is
+  ``CN(0, 1)`` for any ``rho_f``, so the gain ``|f|^2`` stays Exp(1) and
+  the stationary outage probability is closed-form; ``rho_f = 0`` is the
+  classical memoryless block-fading special case.
+* **truncated channel inversion** — client ``n`` transmits iff its
+  instantaneous gain ``G_n = L_n |f_n|^2`` clears the effective
+  threshold ``g_eff = max(gmin, 1/pmax)`` (inverting a gain below
+  ``1/pmax`` would need more than the power budget; ``gmin`` is the
+  designed truncation point).  Survivors arrive coherently (coefficient
+  1 after inversion), the aggregate rescales by the realised
+  participation, and a TOTAL outage — every client truncated at once —
+  erases the round through ``faults.erase_with_outage``: truncated
+  coordinates merge stale and age up, semantically "unsent", never
+  NaN-poisoning thresholds.  Per-client outage is
+  ``q_n = 1 - exp(-g_eff / L_n)`` (Exp(1) fading), so the per-round
+  refresh-blocking probability is ``thin = prod_n q_n`` — the Lemma-1
+  thinning rate ``markov.truncation_thin`` mirrors and
+  ``BudgetController(..., thin=...)`` absorbs.
+* **imperfect CSI** — the inversion uses an ESTIMATED channel, so a
+  residual multiplicative misalignment ``1 + sigma_e e_n`` survives on
+  each surviving client (``csi_weights``): structured distortion
+  proportional to the client gradients themselves, not iid additive
+  noise.  The one-bit and EF routes ride it unchanged and the
+  divergence watchdog guards against a blow-up.
+
+The launch path's pre-aggregated gradient has no per-client axis, so it
+carries the *aggregate-equivalent* form: one AR(1) fading chain per
+``block``-coordinate symbol group (``init_block_fading`` persisted in
+the server state, checkpoint-migratable because the cold start is a
+deterministic stationary draw), with the per-block truncation threshold
+calibrated so the marginal erasure probability is exactly ``cfg.thin``
+— same stationary staleness law, temporal correlation preserved, state
+``2 d / block`` floats.  ``block_erase_mask`` is the single
+block-granular erasure primitive; ``faults.fade_mask`` is a thin alias
+over it (bit-exact with the pre-PR-9 ``fold_in(0xFADE)`` traces).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_SQRT_HALF = math.sqrt(0.5)     # CN(0, 1): each real component is N(0, 1/2)
+FADING_INIT_KEY = 0xFAD         # fixed PRNGKey for the launch path's
+                                # stationary cold-start fading draw — the
+                                # checkpoint codec re-synthesizes the
+                                # identical state when migrating a
+                                # pre-channel checkpoint
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """A geometric wireless deployment.  Hashable (jit-static) and
+    all-static: the path gains derive deterministically from the config,
+    every traced quantity derives from (state, key)."""
+    n_clients: int = 16        # clients in the deployment (must match the
+                               # trainer/sweep N — validated at wiring)
+    pmax: float = 10.0         # per-client transmit power budget: inverting
+                               # a gain below 1/pmax is infeasible
+    gmin: float = 0.05         # designed truncation threshold on the
+                               # instantaneous gain G_n = L_n |f_n|^2
+    rho_f: float = 0.0         # Gauss–Markov AR(1) fading correlation in
+                               # [0, 1); 0 = memoryless block fading
+    csi_err: float = 0.0       # sigma_e: residual channel-estimation error
+                               # std — multiplicative misalignment on each
+                               # surviving client's contribution
+    pl_exp: float = 3.0        # log-distance path-loss exponent
+    shadow_db: float = 0.0     # log-normal shadowing std in dB (static
+                               # per run, drawn from geo_seed)
+    near: float = 0.1          # nearest client's normalized distance: the
+                               # deterministic deployment grid spans
+                               # [near, 1] of the cell radius
+    geo_seed: int = 0          # shadowing draw seed (numpy, trace-static)
+    block: int = 128           # coordinates per fading block on the
+                               # launch path's aggregate-equivalent chain
+                               # (one OFDM symbol group's worth)
+
+    def __post_init__(self):
+        if self.n_clients < 1:
+            raise ValueError(
+                f"n_clients must be >= 1, got {self.n_clients}")
+        if not (self.pmax > 0.0 and math.isfinite(self.pmax)):
+            raise ValueError(
+                f"pmax must be a finite positive power budget, got "
+                f"{self.pmax}")
+        if self.gmin < 0.0:
+            raise ValueError(f"gmin must be >= 0, got {self.gmin}")
+        if not 0.0 <= self.rho_f < 1.0:
+            raise ValueError(
+                f"rho_f must be in [0, 1) (rho_f = 1 would freeze the "
+                f"fading chain), got {self.rho_f}")
+        if self.csi_err < 0.0:
+            raise ValueError(f"csi_err must be >= 0, got {self.csi_err}")
+        if self.pl_exp < 0.0:
+            raise ValueError(f"pl_exp must be >= 0, got {self.pl_exp}")
+        if self.shadow_db < 0.0:
+            raise ValueError(
+                f"shadow_db must be >= 0, got {self.shadow_db}")
+        if not 0.0 < self.near <= 1.0:
+            raise ValueError(
+                f"near must be in (0, 1] (normalized cell radius), got "
+                f"{self.near}")
+        if self.block < 1:
+            raise ValueError(f"block must be >= 1, got {self.block}")
+
+    @property
+    def g_eff(self) -> float:
+        """Effective truncation threshold: the designed ``gmin`` or the
+        power-budget floor ``1/pmax``, whichever binds."""
+        return max(self.gmin, 1.0 / self.pmax)
+
+    @property
+    def gains(self) -> np.ndarray:
+        """(n_clients,) float64 static large-scale path gains, normalized
+        to 1 at the cell edge: log-distance loss ``-10 pl_exp log10(r)``
+        dB plus ``shadow_db``-scaled log-normal shadowing.  Deterministic
+        per config — the deployment grid is fixed and the shadowing rng
+        is seeded by ``geo_seed``."""
+        n = self.n_clients
+        dist = self.near + (1.0 - self.near) * (np.arange(n) + 0.5) / n
+        gain_db = -10.0 * self.pl_exp * np.log10(dist)
+        if self.shadow_db > 0.0:
+            rng = np.random.default_rng(self.geo_seed)
+            gain_db = gain_db + self.shadow_db * rng.standard_normal(n)
+        return 10.0 ** (gain_db / 10.0)
+
+    @property
+    def outage(self) -> np.ndarray:
+        """(n_clients,) stationary per-client truncation-outage
+        probability ``q_n = 1 - exp(-g_eff / L_n)`` (Exp(1) Rayleigh
+        power fading scaled by the static path gain)."""
+        return -np.expm1(-self.g_eff / self.gains)
+
+    @property
+    def thin(self) -> float:
+        """Per-round refresh-blocking probability for the Lemma-1
+        thinning law and the controller setpoint: a refresh is blocked
+        exactly when EVERY client is truncated at once (partial outages
+        renormalize over the survivors, total outage erases the round).
+        Mirrors ``markov.truncation_thin`` (kept numerically identical
+        so the analysis side needs no jax import)."""
+        return min(0.99, float(np.prod(self.outage)))
+
+
+# ---------------------------------------------------------------------------
+# block-granular erasure primitive (shared with faults.fade_mask)
+# ---------------------------------------------------------------------------
+
+def expand_block_mask(hit: Array, d: int, block: int) -> Array:
+    """Expand a per-block boolean hit vector into the (d,) f32 erasure
+    mask (1.0 = erased) every sanitize-path consumer expects — the single
+    block→coordinate expansion faults and channel truncation share."""
+    return jnp.repeat(hit.astype(jnp.float32), block)[:d]
+
+
+def block_erase_mask(key: Array, d: int, p, block: int) -> Array:
+    """(d,) f32 erasure mask at ``block``-coordinate granularity: each
+    symbol group erases independently with probability ``p`` (static or
+    traced).  ``faults.fade_mask`` is a thin alias over this draw, so
+    the pre-PR-9 iid deep-fade traces stay bit-exact."""
+    nb = -(-d // block)
+    hit = jax.random.uniform(key, (nb,)) < p
+    return expand_block_mask(hit, d, block)
+
+
+# ---------------------------------------------------------------------------
+# per-client fading chain (trainer / sweep paths)
+# ---------------------------------------------------------------------------
+
+def _stationary_fading(key: Array, shape: Tuple[int, ...]) -> Array:
+    """CN(0, 1) stationary draw stored as a trailing (..., 2) real/imag
+    pair of N(0, 1/2) components — ``|f|^2`` is Exp(1)."""
+    return jnp.float32(_SQRT_HALF) * jax.random.normal(
+        key, shape + (2,), jnp.float32)
+
+
+def fading_step(fad: Array, key: Array, rho_f: float) -> Array:
+    """One Gauss–Markov AR(1) transition of a complex fading array:
+    ``f' = rho_f f + sqrt(1 - rho_f^2) w`` with ``w ~ CN(0, 1)`` —
+    elementwise only, so it vmaps over sweep lanes and scans over rounds
+    without recompiling.  Preserves the CN(0, 1) stationary law."""
+    w = _stationary_fading(key, fad.shape[:-1])
+    return (jnp.float32(rho_f) * fad
+            + jnp.float32(math.sqrt(1.0 - rho_f * rho_f)) * w)
+
+
+def init_channel_state(key: Array, cfg: ChannelConfig) -> Dict[str, Array]:
+    """Stationary-law initial per-client fading state: ``fad`` is the
+    (n_clients, 2) complex AR(1) chain (real/imag components)."""
+    return {"fad": _stationary_fading(key, (cfg.n_clients,))}
+
+
+def channel_round(state: Dict[str, Array], key: Array, cfg: ChannelConfig
+                  ) -> Tuple[Dict[str, Array], Dict[str, Array]]:
+    """Advance every client's fading chain one round and apply truncated
+    channel inversion.  Returns ``(state', stats)`` with ``sent`` the
+    (n_clients,) f32 participation gate (1.0 = transmits: gain cleared
+    ``g_eff``), ``n_sent`` the realised count feeding
+    ``faults.participation_scale``, and ``gain`` the instantaneous
+    ``G_n = L_n |f_n|^2`` for telemetry."""
+    fad = fading_step(state["fad"], key, cfg.rho_f)
+    x = jnp.sum(fad * fad, axis=-1)                      # |f|^2 ~ Exp(1)
+    gain = jnp.asarray(cfg.gains, jnp.float32) * x
+    sent = (gain >= jnp.float32(cfg.g_eff)).astype(jnp.float32)
+    return {"fad": fad}, {"sent": sent, "n_sent": sent.sum(),
+                          "gain": gain}
+
+
+def csi_weights(key: Array, n_clients: int, cfg: ChannelConfig) -> Array:
+    """(n_clients,) multiplicative residual-misalignment factors
+    ``1 + sigma_e e_n``: the inversion used an estimated channel, so each
+    surviving contribution arrives scaled by a client-specific error —
+    structured distortion proportional to the gradients themselves.
+    ``csi_err = 0`` returns exact ones (no trace of the draw)."""
+    if cfg.csi_err <= 0.0:
+        return jnp.ones((n_clients,), jnp.float32)
+    return 1.0 + jnp.float32(cfg.csi_err) * jax.random.normal(
+        key, (n_clients,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# aggregate-equivalent per-block chain (launch path)
+# ---------------------------------------------------------------------------
+
+def n_blocks(d: int, cfg: ChannelConfig) -> int:
+    """Fading blocks covering a (d,) buffer at ``cfg.block`` granularity."""
+    return -(-d // cfg.block)
+
+
+def init_block_fading(nb: int) -> Array:
+    """(2 * nb,) f32 flat stationary per-block fading for the launch
+    path's persisted server state.  The draw uses the FIXED
+    ``FADING_INIT_KEY`` — a pure function of the shape — so checkpoint
+    migration of a pre-channel checkpoint re-synthesizes the exact state
+    a cold start would carry (a lawful stationary start; zeros would be
+    a full-outage state, NOT the stationary fading law)."""
+    return _stationary_fading(jax.random.PRNGKey(FADING_INIT_KEY),
+                              (nb,)).reshape(-1)
+
+
+def block_outage(fad_flat: Array, key: Array, d: int, cfg: ChannelConfig
+                 ) -> Tuple[Array, Array]:
+    """One launch-path channel round on the aggregate: advance the
+    per-block AR(1) chain and erase every block whose Exp(1) gain falls
+    below the threshold calibrated to the composed truncation-outage
+    probability (``P(X < -log(1 - thin)) = thin``), so the marginal
+    erasure rate matches the per-client law exactly while the AR(1)
+    state preserves the temporal outage correlation.  Elementwise math
+    only — never an extra read of the packed gradient buffer.  Returns
+    ``(fad_flat', erase_mask)``."""
+    nb = n_blocks(d, cfg)
+    fad = fading_step(fad_flat.reshape(nb, 2), key, cfg.rho_f)
+    x = jnp.sum(fad * fad, axis=-1)                      # Exp(1) block gain
+    thr = jnp.float32(-math.log1p(-cfg.thin))
+    return fad.reshape(-1), expand_block_mask(x < thr, d, cfg.block)
+
+
+def csi_block_factor(key: Array, d: int, cfg: ChannelConfig) -> Array:
+    """(d,) multiplicative CSI-misalignment factor for the launch path's
+    pre-aggregated gradient: per fading block,
+    ``1 + sigma_e / sqrt(N) eps_b`` — the aggregate of N independent
+    per-client misalignments.  ``csi_err = 0`` returns exact ones."""
+    if cfg.csi_err <= 0.0:
+        return jnp.ones((d,), jnp.float32)
+    nb = n_blocks(d, cfg)
+    eps = jax.random.normal(key, (nb,), jnp.float32)
+    scale = cfg.csi_err / math.sqrt(cfg.n_clients)
+    return jnp.repeat(1.0 + jnp.float32(scale) * eps, cfg.block)[:d]

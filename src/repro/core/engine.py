@@ -923,6 +923,23 @@ class SelectionEngine:
             if mag_hist is not None:
                 mag_hist = jax.lax.pmean(mag_hist, cfg.reduce_axes)
                 age_hist = jax.lax.pmean(age_hist, cfg.reduce_axes)
+        if sanitize and mag_hist is not None and tstate is not None:
+            # graceful degradation under a fully-erased round (total
+            # channel outage, realised participation 0, or an all-corrupt
+            # aggregate): every coordinate is sanitized away, so the
+            # kernel emits EMPTY histograms — re-estimating thresholds
+            # from those would read as "nothing left to select" (θ = 0,
+            # the cold-start convention) and fire a spurious full-refresh
+            # round right after the outage.  Substitute the exact truth
+            # instead: nothing was refreshed, so this round's post-update
+            # age histogram is last round's shifted up one bin, and the
+            # magnitude mass was merely unobserved (carry it).  Partial
+            # erasures keep the kernel's measurement bit-exactly.
+            keep = (age_hist.sum() <= 0.0) & (tstate["init"] > 0.0)
+            mag_hist = jnp.where(keep, tstate["mag_hist"], mag_hist)
+            age_hist = jnp.where(
+                keep, packing.advance_age_hist(tstate["age_hist"]),
+                age_hist)
         if cfg.noise_std > 0.0:
             sel = (age_next == 0.0).astype(jnp.float32)
             g_t = g_t + sel * (cfg.noise_std / cfg.n_clients) * \

@@ -49,6 +49,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import channel as channel_mod
+
 Array = jax.Array
 
 
@@ -170,12 +172,13 @@ def participation_scale(total: Array, n_t: Array) -> Array:
 def fade_mask(key: Array, d: int, cfg: FaultConfig) -> Array:
     """(d,) f32 erasure mask (1.0 = erased) at fade-block granularity: a
     deep fade takes out a whole block of ``fade_block`` consecutive
-    coordinates of the aggregated signal."""
+    coordinates of the aggregated signal.  A thin alias over the channel
+    module's block-erasure primitive, so faults and channel truncation
+    share one erasure code path — same draw (``uniform(nb) < p`` + block
+    repeat), bit-exact with the pre-channel traces."""
     if cfg.fade <= 0.0:
         return jnp.zeros((d,), jnp.float32)
-    nb = -(-d // cfg.fade_block)
-    hit = jax.random.uniform(key, (nb,)) < cfg.fade
-    return jnp.repeat(hit.astype(jnp.float32), cfg.fade_block)[:d]
+    return channel_mod.block_erase_mask(key, d, cfg.fade, cfg.fade_block)
 
 
 def corrupt(g: Array, key: Array, cfg: FaultConfig) -> Array:

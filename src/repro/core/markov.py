@@ -293,6 +293,62 @@ def population_aou_distribution(chain: FairKChain, avail: float,
     return thinned_aou_distribution(chain, thin, tail_mass=tail_mass)
 
 
+def truncation_thin(pmax: float, gmin: float, gains) -> float:
+    """Per-round refresh-blocking probability under truncated channel
+    inversion (DESIGN.md §16): client ``n``'s instantaneous gain is
+    ``G_n = L_n X_n`` with ``X_n ~ Exp(1)`` (Rayleigh power fading) and
+    ``L_n`` its static path gain; the client is truncated out of the
+    superposition when ``G_n`` falls below the effective threshold
+    ``g_eff = max(gmin, 1/pmax)`` (inverting a weaker gain would exceed
+    the power budget), so its stationary outage probability is
+    ``q_n = 1 - exp(-g_eff / L_n)``.  Partial outages renormalize over
+    the survivors (like dropout, they barely thin); only a TOTAL outage
+    — every client truncated at once — blocks a selected coordinate's
+    refresh, so the thinning rate of ``thinned_aou_distribution`` is
+    ``prod_n q_n``.
+
+    Mirrors ``channel.ChannelConfig.thin`` (kept numerically identical
+    so the analysis side needs no jax import).
+    """
+    if not (pmax > 0.0 and np.isfinite(pmax)):
+        raise ValueError(f"pmax must be a finite positive power budget, "
+                         f"got {pmax}")
+    if gmin < 0.0:
+        raise ValueError(f"gmin must be >= 0, got {gmin}")
+    gains = np.asarray(gains, np.float64)
+    if gains.ndim != 1 or gains.size < 1:
+        raise ValueError(f"gains must be a non-empty 1-D path-gain "
+                         f"vector, got shape {gains.shape}")
+    if not np.all(gains > 0.0):
+        raise ValueError("path gains must be strictly positive")
+    g_eff = max(gmin, 1.0 / pmax)
+    outage = -np.expm1(-g_eff / gains)
+    return min(0.99, float(np.prod(outage)))
+
+
+def channel_aou_distribution(chain: FairKChain, pmax: float, gmin: float,
+                             gains, extra_thin: float = 0.0,
+                             tail_mass: float = 1e-9
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+    """Lemma 1 under truncated channel inversion: the stationary
+    post-update AoU pmf thinned at ``truncation_thin(pmax, gmin, gains)``.
+
+    ``extra_thin`` composes an independent second blocking channel —
+    population churn (``population_thin``), deep fades — with the
+    truncation outage: the per-round blocking probability of two
+    independent blockers is ``1 - (1 - t_trunc)(1 - extra_thin)``.  This
+    is the Sec. IV prediction the channel validation suite
+    (``tests/test_channel.py``) checks the empirical histogram against
+    on the exact and packed backends.
+    """
+    if not 0.0 <= extra_thin < 1.0:
+        raise ValueError(
+            f"extra_thin must be in [0, 1), got {extra_thin}")
+    t = truncation_thin(pmax, gmin, gains)
+    thin = min(0.99, 1.0 - (1.0 - t) * (1.0 - extra_thin))
+    return thinned_aou_distribution(chain, thin, tail_mass=tail_mass)
+
+
 def simulate_aou(chain: FairKChain, rounds: int, seed: int = 0,
                  mode: str = "exchange", momentum: float = 0.9,
                  burn_in: int = 200) -> np.ndarray:

@@ -38,6 +38,22 @@ class ChannelConfig:
     std: float = 0.0                  # sigma_c; for rayleigh derived from mean
     noise_std: float = 0.0            # sigma_z   (paper sims use 1.0)
 
+    def __post_init__(self):
+        # unknown modes used to fall through sigma_c2 to 0.0 (silently
+        # treated as a deterministic channel) and only blow up much later
+        # at sample time; a rayleigh std was silently ignored (sigma_c is
+        # derived from the mean) — both are config bugs, reject them here
+        if self.fading not in ("rayleigh", "gaussian", "none"):
+            raise ValueError(
+                f"fading must be rayleigh|gaussian|none, got "
+                f"{self.fading!r}")
+        if self.fading == "rayleigh" and self.std != 0.0:
+            raise ValueError(
+                f"rayleigh fading derives sigma_c from the mean "
+                f"(sigma_c^2 = mean^2 (4 - pi) / pi) — std={self.std} "
+                f"would be silently ignored; leave std=0 or use "
+                f"fading='gaussian'")
+
     @property
     def mu_c(self) -> float:
         return self.mean

@@ -270,6 +270,16 @@ def shift_age_hist(age_hist: Array, lag: int) -> Array:
     return h.at[b].add(h[0]).at[0].set(0.0)
 
 
+def advance_age_hist(age_hist: Array) -> Array:
+    """Shift EVERY bin of an age histogram up by one — the exact
+    post-update histogram of a round on which no coordinate was refreshed
+    (total channel outage / realised participation 0: all valid ages
+    advance together).  Top-bin mass folds onto itself, mirroring the
+    ``age_bin`` clip at ``STATS_AGE_BINS - 1``."""
+    h = jnp.asarray(age_hist, jnp.float32)
+    return jnp.zeros_like(h).at[1:].set(h[:-1]).at[-1].add(h[-1])
+
+
 def _tail_cut(hist: Array, target: Array) -> Tuple[Array, Array]:
     """Where the top-``target`` mass of ``hist`` ends: (bin index int32,
     fraction of that bin taken from its top, in [0, 1])."""

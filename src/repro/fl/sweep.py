@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import channel as chan_mod
 from repro.core import controller as budget
 from repro.core import faults as fault_mod
 from repro.core import packing
@@ -109,8 +110,29 @@ class SweepConfig:
                                    # mid-round-churned symbol blocks in
                                    # rank form.  Composes with fade/
                                    # nan_rate faults, not with dropout
+    wireless: Optional[chan_mod.ChannelConfig] = None
+                                   # geometric wireless channel (DESIGN.md
+                                   # §16) shared by every lane: each grid
+                                   # point carries its OWN per-client
+                                   # AR(1) Rayleigh fading chain through
+                                   # the scan and runs truncated channel
+                                   # inversion per round — survivors
+                                   # superpose coherently inverted (up to
+                                   # the CSI misalignment), a total
+                                   # outage erases the round in rank
+                                   # form.  Replaces the iid scalar
+                                   # Rayleigh draw on its lanes; None
+                                   # traces the historical program
+                                   # bit-exactly
 
     def __post_init__(self):
+        if self.wireless is not None:
+            if self.wireless.n_clients != self.n_clients:
+                raise ValueError(
+                    "the wireless deployment covers the sweep's compute "
+                    f"clients: wireless.n_clients="
+                    f"{self.wireless.n_clients} must equal "
+                    f"n_clients={self.n_clients}")
         if self.population is not None:
             if self.population.participants != self.n_clients:
                 raise ValueError(
@@ -138,19 +160,32 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
     per-lane ``adaptive`` flag is data — within a mixed grid every lane
     runs the same program and static lanes gate the controller out."""
     has_pop = cfg.population is not None
-    if has_pop:
-        w, g_prev, age, res, cs, w_stars, pstate = carry
-    else:
-        w, g_prev, age, res, cs, w_stars = carry
-        pstate = None
-    if has_pop and cfg.faults.enabled:
+    has_wl = cfg.wireless is not None
+    w, g_prev, age, res, cs, w_stars = carry[:6]
+    tail = list(carry[6:])
+    pstate = tail.pop(0) if has_pop else None
+    chstate = tail.pop(0) if has_wl else None
+    # key-split discipline: wireless-off combinations keep their
+    # historical split counts; wireless appends (AR(1) step, CSI draw)
+    if has_pop and cfg.faults.enabled and has_wl:
+        (key_pol, key_h, key_z, key_fd, key_nz, key_pop, key_er,
+         key_fad, key_csi) = jax.random.split(key, 9)
+    elif has_pop and cfg.faults.enabled:
         (key_pol, key_h, key_z, key_fd, key_nz, key_pop,
          key_er) = jax.random.split(key, 7)
+    elif has_pop and has_wl:
+        (key_pol, key_h, key_z, key_pop, key_er, key_fad,
+         key_csi) = jax.random.split(key, 7)
     elif has_pop:
         key_pol, key_h, key_z, key_pop, key_er = jax.random.split(key, 5)
+    elif cfg.faults.enabled and has_wl:
+        (key_pol, key_h, key_z, key_av, key_fd, key_nz, key_fad,
+         key_csi) = jax.random.split(key, 8)
     elif cfg.faults.enabled:
         key_pol, key_h, key_z, key_av, key_fd, key_nz = jax.random.split(
             key, 6)
+    elif has_wl:
+        key_pol, key_h, key_z, key_fad, key_csi = jax.random.split(key, 5)
     else:
         key_pol, key_h, key_z = jax.random.split(key, 3)
     # adaptive lanes re-derive the split from their carried controller
@@ -169,9 +204,47 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
     mask = fair_k_mask_dynamic(score, age, cfg.k, k_m_eff)
     # OAC uplink (Eq. 7): fading superposition + channel noise on the
     # selected coordinates only
-    h = jax.random.rayleigh(key_h, cfg.fading_mean / np.sqrt(np.pi / 2.0),
-                            shape=(cfg.n_clients,), dtype=jnp.float32)
-    if has_pop:
+    if not has_wl:
+        h = jax.random.rayleigh(key_h,
+                                cfg.fading_mean / np.sqrt(np.pi / 2.0),
+                                shape=(cfg.n_clients,), dtype=jnp.float32)
+    if has_wl:
+        # wireless lane (DESIGN.md §16): advance the lane's carried
+        # AR(1) fading chain and run truncated channel inversion — the
+        # survivor gate replaces the iid scalar fading draw (survivors
+        # arrive coherently inverted up to the CSI misalignment).
+        # Availability (population churn or iid dropout) composes
+        # BEFORE the outage; a total outage erases the round in the
+        # same rank form as the fault path
+        chstate, cps = chan_mod.channel_round(chstate, key_fad,
+                                              cfg.wireless)
+        w_csi = chan_mod.csi_weights(key_csi, cfg.n_clients, cfg.wireless)
+        gate = cps["sent"]
+        if has_pop:
+            pstate, ps = pop_mod.population_round(pstate, key_pop,
+                                                  cfg.population)
+            gate = ps["part"] * gate
+        elif cfg.faults.enabled:
+            avail = fault_mod.init_avail_state(key_av, cfg.n_clients,
+                                               cfg.faults)
+            gate = avail * gate
+        n_t = gate.sum()
+        agg = fault_mod.participation_scale(
+            jnp.einsum("n,nd->d", w_csi * gate, grads), n_t)
+        if cfg.faults.enabled:
+            agg = fault_mod.corrupt(agg, key_nz, cfg.faults)
+        erase = jnp.zeros((cfg.d,), jnp.float32)
+        if has_pop:
+            erase = jnp.maximum(erase, pop_mod.churn_erase_mask(
+                key_er, cfg.d, ps["churn"], cfg.population))
+        if cfg.faults.enabled:
+            erase = jnp.maximum(
+                erase, fault_mod.fade_mask(key_fd, cfg.d, cfg.faults))
+        erase = fault_mod.erase_with_outage(erase, n_t)
+        bad = (erase > 0.0) | jnp.logical_not(jnp.isfinite(agg))
+        agg = jnp.where(bad, 0.0, agg)
+        mask = mask * (1.0 - bad.astype(jnp.float32))
+    elif has_pop:
         # population lane (DESIGN.md §15): the cohort is sampled from the
         # lane's own carried virtual population; the realised
         # participation rescales the superposition and mid-round churn
@@ -246,9 +319,11 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
     if has_pop:
         metrics["n_t"] = n_t
         metrics["churn"] = ps["churn"]
-        out = (w_next, g_t, age_next, res, cs, w_stars, pstate)
-    else:
-        out = (w_next, g_t, age_next, res, cs, w_stars)
+    if has_wl:
+        metrics["n_sent"] = cps["n_sent"]
+    out = ((w_next, g_t, age_next, res, cs, w_stars)
+           + ((pstate,) if has_pop else ())
+           + ((chstate,) if has_wl else ()))
     return out, metrics
 
 
@@ -258,11 +333,12 @@ def _run_grid(cfg: SweepConfig, seeds: Array, policy_ids: Array,
               ) -> Dict[str, Array]:
     """All grid points, one compiled program: scan over rounds, vmap over
     the flattened (policy, k_m, seed) grid."""
-    # fault channels and population churn both block refreshes
-    # independently per round, so their thinning rates add
+    # fault channels, population churn and channel-truncation outage all
+    # block refreshes independently per round, so their thinning rates add
     thin = min(0.99, (cfg.faults.thin if cfg.faults.enabled else 0.0)
                + (cfg.population.thin if cfg.population is not None
-                  else 0.0))
+                  else 0.0)
+               + (cfg.wireless.thin if cfg.wireless is not None else 0.0))
     ctrl = budget.BudgetController(cfg.controller, rho=cfg.rho,
                                    age_offset=float(cfg.async_lag),
                                    thin=thin)
@@ -288,6 +364,11 @@ def _run_grid(cfg: SweepConfig, seeds: Array, policy_ids: Array,
             # scan, seeded from the lane key (vmapped like cs)
             carry = carry + (pop_mod.init_population_state(
                 jax.random.fold_in(key0, 0x404), cfg.population),)
+        if cfg.wireless is not None:
+            # per-lane AR(1) fading chain, stationary cold start (zeros
+            # would be a dead channel, not the stationary law)
+            carry = carry + (chan_mod.init_channel_state(
+                jax.random.fold_in(key0, 0xC4A), cfg.wireless),)
 
         def round_body(c, key):
             return _one_round(cfg, ctrl, any_adaptive, c, key, policy_id,

@@ -23,8 +23,8 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 import numpy as np
 
-from repro.core import (controller as budget, faults, oac, packing,
-                        population, quantize)
+from repro.core import (channel as chan, controller as budget, faults, oac,
+                        packing, population, quantize)
 from repro.core.aou import update_age_by_indices
 from repro.core.engine import (EngineConfig, SelectionEngine,
                                fair_k_masks_dynamic, index_jitter,
@@ -131,6 +131,30 @@ class FLConfig:
                                     # (one availability process at a
                                     # time).  None (default) traces the
                                     # historical program bit-exactly
+    wireless: Optional[chan.ChannelConfig] = None
+                                    # geometric wireless channel
+                                    # (DESIGN.md §16): per-client path
+                                    # loss + AR(1) Rayleigh fading with
+                                    # truncated channel inversion — the
+                                    # per-client fading chain rides the
+                                    # fault-state carry like the GE
+                                    # availability chains; clients whose
+                                    # gain misses max(gmin, 1/pmax) sit
+                                    # the round out (survivors arrive
+                                    # coherently inverted), a TOTAL
+                                    # outage erases the round through
+                                    # the sanitize path, and imperfect
+                                    # CSI leaves a multiplicative
+                                    # misalignment on each survivor.
+                                    # Replaces the iid scalar
+                                    # ``channel`` fading (its noise_std
+                                    # still applies — receiver noise
+                                    # survives inversion).  Composes
+                                    # with faults AND population
+                                    # (ordering: availability → channel
+                                    # outage → corrupt → sanitize).
+                                    # None (default) traces the
+                                    # historical program bit-exactly
     seed: int = 0
 
     @property
@@ -196,14 +220,21 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
     chaos = fl.chaos
     wdcfg = fl.watchdog
     pop = fl.population is not None
+    wl = fl.wireless is not None
     if chaos and fl.one_bit:
         raise ValueError("fault injection on the one-bit FSK-MV uplink is "
                          "not modelled — run chaos with one_bit=False")
-    if (chaos or pop) and fl.policy not in ("fairk", "topk", "roundrobin",
-                                            "fairk_auto"):
-        raise ValueError("chaos/population rounds run selection in "
-                         f"sanitized threshold/rank form — policy "
+    if (chaos or pop or wl) and fl.policy not in ("fairk", "topk",
+                                                  "roundrobin",
+                                                  "fairk_auto"):
+        raise ValueError("chaos/population/wireless rounds run selection "
+                         f"in sanitized threshold/rank form — policy "
                          f"{fl.policy!r} needs index arithmetic")
+    if wl and fl.wireless.n_clients != fl.n_clients:
+        raise ValueError(
+            "the wireless deployment covers the compute clients: "
+            f"wireless.n_clients={fl.wireless.n_clients} must equal "
+            f"n_clients={fl.n_clients}")
     if pop:
         if fl.population.participants != fl.n_clients:
             raise ValueError(
@@ -223,10 +254,12 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
         raise ValueError("the watchdog tightens the FAIR-k split — policy "
                          f"{fl.policy!r} pins or ignores it")
     age_lag = fl.async_lag or None
-    # controller setpoint thinning: fault channels and population churn
-    # both block refreshes independently per round, so their rates add
+    # controller setpoint thinning: fault channels, population churn and
+    # channel-truncation outage all block refreshes independently per
+    # round, so their rates add (to first order)
     thin_total = min(0.99, (fl.faults.thin if chaos else 0.0)
-                     + (fl.population.thin if pop else 0.0))
+                     + (fl.population.thin if pop else 0.0)
+                     + (fl.wireless.thin if wl else 0.0))
     bctrl = (budget.BudgetController(fl.controller,
                                      rho=fl.compression_ratio,
                                      age_offset=float(fl.async_lag),
@@ -259,7 +292,8 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                      # one-bit: the channel perturbs the vote energy (inside
                      # sign_mv), not the merged values — engine noise off
                      noise_std=(fl.channel.noise_std
-                                if (fl.backend != "exact" or chaos or pop)
+                                if (fl.backend != "exact" or chaos or pop
+                                    or wl)
                                 and not fl.one_bit
                                 else 0.0),
                      n_clients=fl.n_clients,
@@ -270,7 +304,8 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                      # chaos/population rounds need them on exact too (the
                      # adaptive controller consumes them from the unified
                      # branch)
-                     fused_stats=(fl.backend != "exact") or chaos or pop,
+                     fused_stats=(fl.backend != "exact") or chaos or pop
+                     or wl,
                      warm_start=(fl.backend == "packed")), d,
         layout=layout)
 
@@ -283,18 +318,31 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
     def _round(key: Array, w: Array, g_prev: Array, age: Array,
                sel_count: Array, xs: Array, ys: Array, residual: Array,
                tstate, cstate, fstate):
-        # key-split discipline: chaos-only keeps the historical 5-way
-        # split (bit-exact trajectories); population adds two keys (the
-        # population round + the churn-erase mask) on top
+        # key-split discipline: every wireless-off combination keeps its
+        # historical split count (bit-exact trajectories); the wireless
+        # channel appends two keys (the AR(1) fading step + the CSI
+        # misalignment draw) on top of each combination
         key_av = key_fd = key_nz = key_pop = key_er = None
-        if pop and chaos:
+        key_fad = key_csi = None
+        if pop and chaos and wl:
+            (key_sel, key_ch, key_av, key_fd, key_nz, key_pop, key_er,
+             key_fad, key_csi) = jax.random.split(key, 9)
+        elif pop and chaos:
             (key_sel, key_ch, key_av, key_fd, key_nz, key_pop,
              key_er) = jax.random.split(key, 7)
+        elif chaos and wl:
+            (key_sel, key_ch, key_av, key_fd, key_nz, key_fad,
+             key_csi) = jax.random.split(key, 7)
         elif chaos:
             key_sel, key_ch, key_av, key_fd, key_nz = jax.random.split(key,
                                                                        5)
+        elif pop and wl:
+            (key_sel, key_ch, key_pop, key_er, key_fad,
+             key_csi) = jax.random.split(key, 6)
         elif pop:
             key_sel, key_ch, key_pop, key_er = jax.random.split(key, 4)
+        elif wl:
+            key_sel, key_ch, key_fad, key_csi = jax.random.split(key, 4)
         else:
             key_sel, key_ch = jax.random.split(key)
         grads = clients(w, xs, ys)                       # (N, d)
@@ -328,8 +376,20 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
             snap = faults.tree_select(healthy, rolled, fstate["snap"])
             return (*rolled, {**fstate, "wd": wd, "snap": snap})
 
-        if fl.backend in ("threshold", "packed") or chaos or pop:
+        if fl.backend in ("threshold", "packed") or chaos or pop or wl:
             ts = tstate if fl.backend == "packed" else None
+            if wl:
+                # geometric channel round (DESIGN.md §16): advance the
+                # carried per-client AR(1) Rayleigh fading chain and run
+                # truncated channel inversion — ``sent`` gates which
+                # clients clear ``max(gmin, 1/pmax)`` this round, and
+                # ``w_csi`` is each survivor's residual multiplicative
+                # misalignment from the imperfect channel estimate
+                cnext, cps = chan.channel_round(fstate["chan"], key_fad,
+                                                fl.wireless)
+                fstate = {**fstate, "chan": cnext}
+                w_csi = chan.csi_weights(key_csi, fl.n_clients,
+                                         fl.wireless)
             if fl.one_bit:
                 # FSK-MV uplink (Sec. V-B): clients transmit sign(ǧ_{n,t})
                 # and the server recovers majority-vote signs via the
@@ -340,6 +400,11 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                 grads_eff = (grads + residual[None, :]
                              if fl.error_feedback else grads)
                 votes = quantize.one_bit(grads_eff)      # (N, d) ±1
+                if wl:
+                    # truncated clients cast no vote; survivors' FSK
+                    # energies carry the CSI misalignment — the majority
+                    # vote and its energy statistic both ride it
+                    votes = votes * (cps["sent"] * w_csi)[:, None]
                 noise = (fl.channel.noise_std
                          * jax.random.normal(key_ch, (d,), jnp.float32)
                          if fl.channel.noise_std > 0.0 else None)
@@ -355,9 +420,16 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                 # 2 apart — ordering across levels is preserved; same
                 # Knuth hash the kernels use)
                 score = jnp.abs(energy) + index_jitter(d)
+                # a total truncation outage leaves nothing but noise in
+                # the vote energies — erase the round through the
+                # sanitize path instead of merging noise-driven signs
+                ob_erase = (faults.erase_with_outage(
+                    jnp.zeros((d,), jnp.float32), cps["n_sent"])
+                    if wl else None)
                 g_t, age_next, stats = engine.select_and_merge(
                     score, g_prev, age, fresh=fresh_sign, tstate=ts,
-                    k_m_frac=kmf, age_lag=age_lag)
+                    k_m_frac=kmf, age_lag=age_lag, erase=ob_erase,
+                    sanitize=wl)
                 # async mode shifts the refreshed ages to the lag, so the
                 # engine hands the selection mask back explicitly
                 sel_mask = (stats["sel_mask"] if age_lag
@@ -375,9 +447,51 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                 # point).  EF is server-side: the residual folds into the
                 # score/sent values INSIDE the fused kernel and its
                 # successor comes back from the same pass
-                h = oac.sample_fading(key_sel, fl.n_clients, fl.channel)
+                if not wl:
+                    h = oac.sample_fading(key_sel, fl.n_clients,
+                                          fl.channel)
                 erase = None
-                if pop:
+                if wl:
+                    # truncated channel inversion (DESIGN.md §16): only
+                    # clients whose instantaneous gain clears
+                    # max(gmin, 1/pmax) transmit this round; survivors
+                    # arrive coherently inverted — unit gain up to the
+                    # multiplicative CSI misalignment — so the survivor
+                    # gate REPLACES the iid scalar fading draw.
+                    # Availability (GE chain or population churn)
+                    # composes BEFORE the outage: a client superposes
+                    # only if it is both alive and un-truncated.
+                    gate = cps["sent"]
+                    if pop:
+                        pnext, ps = population.population_round(
+                            fstate["pop"], key_pop, fl.population)
+                        fstate = {**fstate, "pop": pnext}
+                        gate = ps["part"] * gate
+                    elif chaos:
+                        avail = faults.avail_step(fstate["avail"], key_av,
+                                                  fl.faults)
+                        fstate = {**fstate, "avail": avail}
+                        gate = avail * gate
+                    n_t = gate.sum()
+                    total = jnp.einsum("n,nd->d", w_csi * gate, grads)
+                    fresh = faults.participation_scale(total, n_t)
+                    if chaos:
+                        fresh = faults.corrupt(fresh, key_nz, fl.faults)
+                    # erase composition: churn block loss and deep fades
+                    # stack (max — a block lost twice is still lost), and
+                    # a TOTAL truncation outage (n_t == 0: every client
+                    # below threshold and nothing superposed) erases the
+                    # whole round through the same path
+                    erase = jnp.zeros((d,), jnp.float32)
+                    if pop:
+                        erase = jnp.maximum(
+                            erase, population.churn_erase_mask(
+                                key_er, d, ps["churn"], fl.population))
+                    if chaos:
+                        erase = jnp.maximum(
+                            erase, faults.fade_mask(key_fd, d, fl.faults))
+                    erase = faults.erase_with_outage(erase, n_t)
+                elif pop:
                     # population churn (DESIGN.md §15): the round samples
                     # its cohort from the live virtual population; the
                     # realised participation gates the superposition (the
@@ -424,7 +538,7 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                     fresh, g_prev, age, key=key_ch, tstate=ts,
                     residual=residual if fl.error_feedback else None,
                     k_m_frac=kmf, age_lag=age_lag, erase=erase,
-                    sanitize=chaos or pop)
+                    sanitize=chaos or pop or wl)
                 sel_mask = (stats["sel_mask"] if age_lag
                             else (age_next == 0.0).astype(jnp.float32))
                 if fl.error_feedback:
@@ -493,8 +607,8 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                                kmf if kmf is not None else frac_static),
                 fstate)
 
-    if chaos or wdcfg is not None or pop:
-        # extended step: the chaos/watchdog/population carry
+    if chaos or wdcfg is not None or pop or wl:
+        # extended step: the chaos/watchdog/population/wireless carry
         # (``init_fault_state``) rides as an 11th argument and comes back
         # as a 10th output
         return jax.jit(_round)
@@ -532,8 +646,11 @@ def init_fault_state(fl: FLConfig, state: ServerState,
     ``make_fl_step`` when ``fl.chaos`` or ``fl.watchdog`` is set:
     ``avail`` is the Gilbert–Elliott availability vector, ``wd`` the
     watchdog EMA state, ``snap`` the in-graph shadow snapshot the
-    watchdog rolls back to (params + every carried server buffer), and
-    ``pop`` the packed virtual-population state (DESIGN.md §15)."""
+    watchdog rolls back to (params + every carried server buffer),
+    ``pop`` the packed virtual-population state (DESIGN.md §15) and
+    ``chan`` the per-client AR(1) Rayleigh fading chain of the wireless
+    channel (DESIGN.md §16) — a stationary draw, not zeros (zeros would
+    be a dead channel, not the stationary law)."""
     fstate: Dict[str, Any] = {}
     if key is None:
         key = jax.random.PRNGKey(fl.seed + 0x5EED)
@@ -543,6 +660,9 @@ def init_fault_state(fl: FLConfig, state: ServerState,
     if fl.population is not None:
         fstate["pop"] = population.init_population_state(
             jax.random.fold_in(key, 0x404), fl.population)
+    if fl.wireless is not None:
+        fstate["chan"] = chan.init_channel_state(
+            jax.random.fold_in(key, 0xC4A), fl.wireless)
     if fl.watchdog is not None:
         fstate["wd"] = faults.init_watchdog_state()
         fstate["snap"] = (state.w, state.g, state.age, state.sel_count,
@@ -571,7 +691,7 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
     fl_step = make_fl_step(fl, unravel, loss_fn, d)
     key = jax.random.PRNGKey(fl.seed)
     has_fstate = (fl.chaos or fl.watchdog is not None
-                  or fl.population is not None)
+                  or fl.population is not None or fl.wireless is not None)
     fstate = init_fault_state(fl, state) if has_fstate else None
 
     history: Dict[str, Any] = {"round": [], "acc": [],

@@ -133,7 +133,8 @@ def opt_pspecs(opt_state: Any, p_specs: Any) -> Any:
 def server_pspecs(p_specs: Any, mesh=None, packed: bool = False,
                   error_feedback: bool = False,
                   adaptive_km: bool = False,
-                  async_agg: bool = False) -> Any:
+                  async_agg: bool = False,
+                  wireless: bool = False) -> Any:
     """OAC server state specs.
 
     Packed flavour: the persisted lane-aligned flat buffers shard their
@@ -143,7 +144,10 @@ def server_pspecs(p_specs: Any, mesh=None, packed: bool = False,
     the budget-controller state vector — is replicated (pmean-consistent
     across shards).  With ``async_agg`` the double-buffer lane (the
     deferred-straggler ``shadow`` and the one-round-delayed ``pending``
-    merge result) shards like the gradient buffer it mirrors.  Per-leaf
+    merge result) shards like the gradient buffer it mirrors.  With
+    ``wireless`` the per-block AR(1) fading chain (``fad`` — 2 floats
+    per symbol block, DESIGN.md §16) shards across the same axes: each
+    shard owns the chains of its own coordinate slice.  Per-leaf
     flavour: {g, age} mirror parameter sharding."""
     if packed:
         vec = P(tuple(mesh.axis_names))
@@ -155,6 +159,8 @@ def server_pspecs(p_specs: Any, mesh=None, packed: bool = False,
         if async_agg:
             out["shadow"] = vec
             out["pending"] = vec
+        if wireless:
+            out["fad"] = vec
         return out
     return {"g": p_specs, "age": p_specs, "theta": P()}
 

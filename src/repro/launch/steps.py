@@ -40,6 +40,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import InputShape, ModelConfig
+from repro.core import channel as chan
 from repro.core import controller as budget
 from repro.core import faults
 from repro.core import packing
@@ -172,6 +173,28 @@ class OacServerConfig:
                                    # ``straggler_frac``.  Needs packed +
                                    # sanitize; ``mode="ge"`` carries chain
                                    # state and is sim-trainer-only.
+    wireless: Optional[chan.ChannelConfig] = None
+                                   # geometric wireless channel (DESIGN.md
+                                   # §16) in aggregate-equivalent form:
+                                   # the pre-aggregated gradient has no
+                                   # per-client axis, so one AR(1)
+                                   # Rayleigh fading chain per
+                                   # ``wireless.block`` symbol group
+                                   # rides the persisted server state
+                                   # (``fad`` — checkpoint-migratable,
+                                   # the cold start is a deterministic
+                                   # stationary draw) and each round
+                                   # erases the blocks whose gain falls
+                                   # below the threshold calibrated to
+                                   # the truncation-outage rate
+                                   # ``wireless.thin``; imperfect CSI
+                                   # multiplies the fresh aggregate by a
+                                   # per-block misalignment factor.
+                                   # Elementwise only — the fused pass
+                                   # stays the round's single read of
+                                   # the packed gradient buffer.  Needs
+                                   # packed + sanitize; composes with
+                                   # fade / population / async_agg.
 
 
 @dataclasses.dataclass
@@ -355,6 +378,14 @@ def init_server_state(params: Any, mesh=None, cfg: ModelConfig = None,
             # Both start cold (zeros): round 0 applies a zero update.
             state["shadow"] = jnp.zeros((n * lay.d_packed,), jnp.bfloat16)
             state["pending"] = jnp.zeros((n * lay.d_packed,), jnp.bfloat16)
+        if oac.wireless is not None:
+            # per-block AR(1) fading chains (DESIGN.md §16), 2 floats per
+            # symbol block per shard.  The cold start is the DETERMINISTIC
+            # stationary draw (a pure function of the global block count —
+            # see channel.init_block_fading), so migrating a pre-channel
+            # checkpoint re-synthesizes this exact state.
+            state["fad"] = chan.init_block_fading(
+                n * chan.n_blocks(lay.d_packed, oac.wireless))
         return state
     return {
         "g": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
@@ -379,6 +410,10 @@ def abstract_server_state(params_abs: Any, mesh=None, p_specs: Any = None,
         if oac.async_agg:
             state["shadow"] = SDS((d,), jnp.bfloat16)
             state["pending"] = SDS((d,), jnp.bfloat16)
+        if oac.wireless is not None:
+            state["fad"] = SDS(
+                (2 * _mesh_devices(mesh)
+                 * chan.n_blocks(lay.d_packed, oac.wireless),), jnp.float32)
         return state
     return {
         "g": jax.tree.map(lambda p: SDS(p.shape, jnp.bfloat16), params_abs),
@@ -461,6 +496,12 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
             raise ValueError("population stragglers land through the "
                              "async shadow buffer — slow_frac > 0 needs "
                              "OacServerConfig(async_agg=True)")
+    if oac is not None and oac.wireless is not None:
+        if not (oac.packed and oac.sanitize):
+            raise ValueError("wireless truncation outages degrade through "
+                             "the fused kernel's sanitize path on the "
+                             "packed buffers — set "
+                             "OacServerConfig(packed=True, sanitize=True)")
     srv_abs = abstract_server_state(params_abs, mesh=mesh, p_specs=p_specs,
                                     oac=oac)
     srv_specs = shlib.server_pspecs(
@@ -468,7 +509,8 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         packed=(oac is not None and oac.packed),
         error_feedback=(oac is not None and oac.error_feedback),
         adaptive_km=(oac is not None and oac.adaptive_km),
-        async_agg=(oac is not None and oac.async_agg))
+        async_agg=(oac is not None and oac.async_agg),
+        wireless=(oac is not None and oac.wireless is not None))
     b_specs = _batch_pspecs(cfg, mb, mesh, micro=True)
     in_specs_batch = train_input_specs(cfg, shape, n_micro, mb)
 
@@ -491,6 +533,12 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
 
     if oac is not None:
         oac = dataclasses.replace(oac, n_clients=n_shards)
+        if oac.wireless is not None:
+            # the data shards ARE the radio clients: the deployment
+            # geometry (path gains, outage rates, thin) follows the mesh
+            oac = dataclasses.replace(
+                oac, wireless=dataclasses.replace(oac.wireless,
+                                                  n_clients=n_shards))
         mesh_axes = tuple(mesh.axis_names)
         # adaptive split: one controller per step builder — the Lemma-1
         # target table is static data baked at build time.  Under async
@@ -503,11 +551,15 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
             rho=oac.rho,
             age_offset=(float(oac.straggler_lag) if oac.async_agg
                         else 0.0),
-            # population churn thins the refresh stream (DESIGN.md §15):
-            # the controller's Lemma-1 target absorbs the geometric mean
-            # shift thin/(1-thin) as a constant offset
-            thin=(oac.population.thin if oac.population is not None
-                  else 0.0))
+            # population churn and wireless truncation outage both thin
+            # the refresh stream (DESIGN.md §15-§16): the controller's
+            # Lemma-1 target absorbs the geometric mean shift
+            # thin/(1-thin) as a constant offset; independent blockers'
+            # rates add (to first order)
+            thin=min(0.99, (oac.population.thin
+                            if oac.population is not None else 0.0)
+                     + (oac.wireless.thin
+                        if oac.wireless is not None else 0.0)))
             if oac.adaptive_km else None)
 
         def _shard_noise_key(seed):
@@ -567,6 +619,25 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                 pop_stats = pop_mod.stateless_round(
                     jax.random.PRNGKey(0x509), seed, oac.population)
             g_flat = layout.pack(grads)            # the ONLY pack per step
+            new_fad = wl_erase = None
+            if oac.wireless is not None:
+                # aggregate-equivalent wireless round (DESIGN.md §16):
+                # advance this shard's per-block AR(1) fading chains and
+                # mark the blocks whose gain misses the threshold
+                # calibrated to the truncation-outage rate (the erasure
+                # composes into the sanitize path below); imperfect CSI
+                # multiplies the fresh aggregate by the per-block
+                # misalignment factor.  Per-shard draws (disjoint
+                # coordinate slices => the global pattern), decorrelated
+                # from the noise/fade/churn streams by distinct fold-ins;
+                # everything elementwise — G_READS stays 1.
+                new_fad, wl_erase = chan.block_outage(
+                    server["fad"],
+                    jax.random.fold_in(_shard_noise_key(seed), 0xC4A),
+                    layout.d_packed, oac.wireless)
+                g_flat = g_flat * chan.csi_block_factor(
+                    jax.random.fold_in(_shard_noise_key(seed), 0xC51),
+                    layout.d_packed, oac.wireless)
             age_lag = None
             new_shadow = None
             if oac.async_agg:
@@ -639,6 +710,9 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                     pop_stats["n_t"])
                 erase = (churn_er if erase is None
                          else jnp.maximum(erase, churn_er))
+            if wl_erase is not None:
+                erase = (wl_erase if erase is None
+                         else jnp.maximum(erase, wl_erase))
             g_t, age_next, stats = eng.select_and_merge(
                 g_flat, server["g"], server["age"], key=key, tstate=tstate,
                 residual=server.get("res"), fresh=fresh, k_m_frac=kmf,
@@ -650,6 +724,8 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
             }
             if "res" in server:
                 new_server["res"] = stats["residual"]
+            if oac.wireless is not None:
+                new_server["fad"] = new_fad
             if oac.adaptive_km:
                 # in-graph controller step off the (pmean'd) kernel
                 # histograms — the same compiled program at every split
@@ -769,6 +845,8 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         "oac_population": (oac.population.n_clients
                            if oac is not None and oac.population is not None
                            else 0),
+        "oac_wireless": bool(oac.wireless is not None) if oac is not None
+        else False,
         "optimizer": opt_name or cfg.optimizer, "lr": lr,
         "gather_dtype": gather_dtype,
         "scans": {"microbatch": n_micro, "layers": cfg.n_scan_blocks},

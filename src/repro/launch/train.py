@@ -118,6 +118,26 @@ def main():
                     help="rounds per diurnal cycle")
     ap.add_argument("--diurnal-depth", type=float, default=0.1,
                     help="relative swing of the diurnal availability rate")
+    ap.add_argument("--channel", action="store_true",
+                    help="geometric wireless channel (DESIGN.md §16): "
+                         "per-block AR(1) Rayleigh fading with truncated "
+                         "channel inversion — blocks in outage erase "
+                         "through the sanitize path and the persisted "
+                         "fading chain rides the server checkpoints "
+                         "(needs --sanitize)")
+    ap.add_argument("--pmax", type=float, default=10.0,
+                    help="per-client transmit power budget of --channel "
+                         "(inverting a gain below 1/pmax is infeasible)")
+    ap.add_argument("--gmin", type=float, default=0.05,
+                    help="designed truncation threshold of --channel on "
+                         "the instantaneous gain")
+    ap.add_argument("--csi-err", type=float, default=0.0,
+                    help="residual channel-estimation error std of "
+                         "--channel: multiplicative per-block "
+                         "misalignment on the fresh aggregate")
+    ap.add_argument("--fading-corr", type=float, default=0.5,
+                    help="Gauss-Markov AR(1) fading correlation of "
+                         "--channel in [0, 1) (0 = memoryless)")
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="save the packed server state every N steps "
                          "(0 = off; a SIGTERM always lands one final "
@@ -143,6 +163,13 @@ def main():
             mode="diurnal" if args.diurnal else "iid",
             period=args.diurnal_period, depth=args.diurnal_depth,
             slow_frac=(args.straggler_frac if args.async_agg else 0.0))
+    wireless = None
+    if args.channel:
+        from repro.core.channel import ChannelConfig
+        wireless = ChannelConfig(pmax=args.pmax, gmin=args.gmin,
+                                 csi_err=args.csi_err,
+                                 rho_f=args.fading_corr,
+                                 block=args.fade_block)
     oac = (OacServerConfig(rho=args.rho, packed=not args.per_leaf_server,
                            error_feedback=args.ef, one_bit=args.one_bit,
                            fused_stats=not args.legacy_stats,
@@ -151,7 +178,7 @@ def main():
                            straggler_frac=args.straggler_frac,
                            sanitize=args.sanitize, fade=args.fade,
                            fade_block=args.fade_block,
-                           population=population)
+                           population=population, wireless=wireless)
            if args.oac else None)
     bundle = make_train_step(cfg, shape, mesh, n_micro=1, oac=oac, lr=1e-3)
 

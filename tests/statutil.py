@@ -79,6 +79,7 @@ def pmf_mean(pmf: np.ndarray) -> float:
 def accumulate_age_hist(eng, d: int, *, rounds: int = 600,
                         burn_in: int = 150, seed: int = 0, tstate=None,
                         erase_thin: float = 0.0, erase_fn=None,
+                        count_erased: bool = False,
                         **step_kwargs) -> np.ndarray:
     """Drive ``eng.select_and_merge`` with iid re-drawn N(0, 1) scores —
     the well-mixed exchange regime Lemma 1 models — and accumulate the
@@ -91,12 +92,26 @@ def accumulate_age_hist(eng, d: int, *, rounds: int = 600,
     population suite feeds churn-driven block erasures through it; any
     extra ``step_kwargs`` (``sanitize=True``, ``age_lag=...``) are baked
     into the jitted step.  Fully deterministic for a fixed ``seed``.
+
+    ``count_erased=True`` makes the accumulated histogram the
+    UNCONDITIONAL post-update estimator under erasures: the kernel weighs
+    erased coordinates zero (their magnitudes were never observed), but
+    their post-update AGES are exact — erased means merged-stale and aged
+    by one — so the harness bins them from the carried age vector at the
+    kernel's own sample stride.  Without it, heavy round-correlated
+    erasure channels (total wireless outages erase EVERY coordinate at
+    once) leave the histogram conditioned on unblocked rounds, which
+    skews it young by 1/(1 - thin).  Guarded against double counting: the
+    correction only tops up rounds whose emitted histogram misses sampled
+    valid coordinates (the packed engine already substitutes the exact
+    shifted histogram on fully-erased rounds).
     """
     rng = np.random.default_rng(seed)
     gp = jnp.zeros((d,), jnp.float32)
     ag = jnp.zeros((d,), jnp.float32)
     step = jax.jit(functools.partial(eng.select_and_merge, **step_kwargs))
     acc = np.zeros(packing.STATS_AGE_BINS)
+    stride = packing.hist_stride(d)
     for r in range(rounds):
         g = jnp.asarray(rng.normal(size=d).astype("f4"))
         kw = {}
@@ -115,7 +130,17 @@ def accumulate_age_hist(eng, d: int, *, rounds: int = 600,
             g_t, ag, stats = step(g, gp, ag, **kw)
         gp = g_t
         if r >= burn_in:
-            acc += np.asarray(stats["age_hist"])
+            h = np.asarray(stats["age_hist"], np.float64)
+            if count_erased and "erase" in kw:
+                samp = np.asarray(ag)[::stride]
+                erased = np.asarray(kw["erase"])[::stride] > 0.0
+                valid = samp >= 0.0
+                if h.sum() < valid.sum() - 0.5:
+                    bins = np.clip(samp[erased & valid], 0,
+                                   packing.STATS_AGE_BINS - 1).astype(int)
+                    h = h + np.bincount(bins,
+                                        minlength=packing.STATS_AGE_BINS)
+            acc += h
     return acc
 
 

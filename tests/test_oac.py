@@ -23,6 +23,24 @@ class TestFading:
         h = oac.sample_fading(jax.random.PRNGKey(0), 16, cfg)
         np.testing.assert_allclose(np.asarray(h), 1.0)
 
+    @pytest.mark.parametrize("mode", ["rician", "", "RAYLEIGH", "None"])
+    def test_rejects_unknown_fading_mode(self, mode):
+        """Unknown modes used to fall through ``sigma_c2`` to 0.0 (a
+        silently deterministic channel) and only blow up at sample time —
+        they must be rejected at construction."""
+        with pytest.raises(ValueError, match="fading"):
+            ChannelConfig(fading=mode)
+
+    def test_rejects_rayleigh_with_explicit_std(self):
+        """Rayleigh derives sigma_c from the mean; an explicit std used to
+        be silently ignored."""
+        with pytest.raises(ValueError, match="sigma_c"):
+            ChannelConfig(fading="rayleigh", std=0.3)
+        # gaussian owns its std, rayleigh owns std=0 — both construct
+        assert ChannelConfig(fading="gaussian", std=0.3).sigma_c2 \
+            == pytest.approx(0.09)
+        ChannelConfig(fading="rayleigh", std=0.0)
+
 
 class TestAggregation:
     def test_noiseless_equals_fedavg(self):

@@ -18,9 +18,12 @@ points of the acceptance tests):
   the composed async + churn predictions rely on.
 """
 
+import jax
 import numpy as np
 
+import statutil
 from _hypothesis_compat import given, settings, st
+from repro.core import channel as chan
 from repro.core import faults, markov, population
 
 
@@ -174,3 +177,123 @@ class TestTransformAlgebra:
                                       exposure)
         assert 0.0 <= pred <= 0.99
         assert abs(pred - cfg.thin) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# wireless channel: truncation law, composition, AR(1) fading
+# ---------------------------------------------------------------------------
+
+class TestChannelLaw:
+    @settings(max_examples=20, deadline=None)
+    @given(d=st.sampled_from([96, 128]),
+           k_frac=st.floats(min_value=0.3, max_value=1.0),
+           km_frac=st.floats(min_value=0.2, max_value=0.8),
+           pmax=st.floats(min_value=0.5, max_value=100.0),
+           gmin=st.floats(min_value=0.0, max_value=2.0),
+           n=st.integers(min_value=1, max_value=16),
+           pl=st.floats(min_value=0.0, max_value=4.0))
+    def test_channel_pmf_is_pmf(self, d, k_frac, km_frac, pmax, gmin, n,
+                                pl):
+        """For ARBITRARY valid (pmax, gmin, gains) the truncated-inversion
+        law stays a pmf, and its thinning rate stays inside [0, 0.99]."""
+        gains = chan.ChannelConfig(n_clients=n, pmax=pmax, gmin=gmin,
+                                   pl_exp=pl).gains
+        t = markov.truncation_thin(pmax, gmin, gains)
+        assert 0.0 <= t <= 0.99
+        support, pmf = markov.channel_aou_distribution(
+            _chain(d, k_frac, km_frac), pmax, gmin, gains)
+        assert (np.asarray(pmf) >= 0.0).all()
+        assert abs(float(np.asarray(pmf).sum()) - 1.0) < 1e-6
+        assert len(support) == len(pmf)
+
+    @settings(max_examples=20, deadline=None)
+    @given(pmax=st.floats(min_value=1.0, max_value=50.0),
+           gmin=st.floats(min_value=0.3, max_value=1.5),
+           n=st.integers(min_value=1, max_value=8),
+           extra=st.floats(min_value=0.0, max_value=0.7))
+    def test_truncation_and_population_thin_commute(self, pmax, gmin, n,
+                                                    extra):
+        """Independent blocking channels compose symmetrically:
+        1 - (1-t)(1-e) no matter which is folded in as ``extra_thin``."""
+        chain = markov.FairKChain(d=128, k=32, k_m=16, k0=14)
+        gains = chan.ChannelConfig(n_clients=n, pmax=pmax, gmin=gmin).gains
+        t = markov.truncation_thin(pmax, gmin, gains)
+        composed = min(0.99, 1.0 - (1.0 - t) * (1.0 - extra))
+        s_a, p_a = markov.channel_aou_distribution(chain, pmax, gmin,
+                                                   gains, extra_thin=extra)
+        s_b, p_b = markov.thinned_aou_distribution(chain, composed)
+        np.testing.assert_array_equal(s_a, s_b)
+        np.testing.assert_allclose(p_a, p_b, atol=1e-12)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(min_value=2, max_value=32),
+           pmax=st.floats(min_value=1.0, max_value=50.0),
+           gmin=st.floats(min_value=0.0, max_value=1.0),
+           pl=st.floats(min_value=0.0, max_value=4.0),
+           shadow=st.floats(min_value=0.0, max_value=6.0),
+           seed=st.integers(min_value=0, max_value=999))
+    def test_thin_identity_config_vs_markov(self, n, pmax, gmin, pl,
+                                            shadow, seed):
+        """``ChannelConfig.thin`` (simulator setpoint) and
+        ``markov.truncation_thin`` (analysis law) are the SAME number for
+        every deployment geometry — the controller absorbs exactly the
+        rate the prediction assumes."""
+        cfg = chan.ChannelConfig(n_clients=n, pmax=pmax, gmin=gmin,
+                                 pl_exp=pl, shadow_db=shadow,
+                                 geo_seed=seed)
+        assert abs(cfg.thin
+                   - markov.truncation_thin(pmax, gmin, cfg.gains)) < 1e-12
+
+
+class TestFadingChain:
+    @settings(max_examples=5, deadline=None)
+    @given(rho=st.sampled_from([0.0, 0.5, 0.9]),
+           seed=st.integers(min_value=0, max_value=99))
+    def test_ar1_power_is_stationary_exp1(self, rho, seed):
+        """|f|^2 of the complex AR(1) chain stays Exp(1)-distributed for
+        every correlation: the innovation scaling sqrt(1 - rho^2)
+        preserves the stationary Rayleigh marginal exactly.  Binned mass
+        vs the analytic exponential via the statutil TV harness."""
+        import jax.numpy as jnp
+        cfg = chan.ChannelConfig(n_clients=512, rho_f=rho)
+        st_ = chan.init_channel_state(jax.random.PRNGKey(seed), cfg)
+        key = jax.random.PRNGKey(seed + 1)
+        step = jax.jit(chan.fading_step, static_argnums=2)
+        pows = []
+        for r in range(60):
+            key, sub = jax.random.split(key)
+            st_ = {"fad": step(st_["fad"], sub, rho)}
+            if r >= 20:
+                f = np.asarray(st_["fad"])
+                pows.append(f[:, 0] ** 2 + f[:, 1] ** 2)
+        p = np.concatenate(pows)
+        edges = np.linspace(0.0, 4.0, 17)
+        emp_mass, _ = np.histogram(p, bins=edges)
+        emp = np.concatenate([emp_mass / len(p),
+                              [(p >= edges[-1]).mean()]])
+        cdf = 1.0 - np.exp(-edges)
+        pred = np.concatenate([np.diff(cdf), [np.exp(-edges[-1])]])
+        # high rho_f correlates consecutive rounds (effective sample count
+        # shrinks by the ~1/(1 - rho^2) mixing time), hence the tolerance
+        assert statutil.tv_distance(emp, pred) < 0.05
+
+    def test_fading_deterministic_in_state_and_key(self):
+        cfg = chan.ChannelConfig(n_clients=64, rho_f=0.8)
+        st0 = chan.init_channel_state(jax.random.PRNGKey(3), cfg)
+        a = chan.fading_step(st0["fad"], jax.random.PRNGKey(4), cfg.rho_f)
+        b = chan.fading_step(st0["fad"], jax.random.PRNGKey(4), cfg.rho_f)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        c = chan.fading_step(st0["fad"], jax.random.PRNGKey(5), cfg.rho_f)
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+    def test_rho_zero_is_memoryless(self):
+        """At rho_f = 0 the next fading state is a pure function of the
+        key — independent of the carried state."""
+        key = jax.random.PRNGKey(7)
+        s1 = chan.init_channel_state(jax.random.PRNGKey(0),
+                                     chan.ChannelConfig(n_clients=32))
+        s2 = chan.init_channel_state(jax.random.PRNGKey(1),
+                                     chan.ChannelConfig(n_clients=32))
+        a = chan.fading_step(s1["fad"], key, 0.0)
+        b = chan.fading_step(s2["fad"], key, 0.0)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

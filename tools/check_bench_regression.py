@@ -64,6 +64,13 @@ STRUCTURAL = {
     "g_reads_chaos": 1,
     "copies_chaos": [1, 1],
     "fused_calls_chaos": 1,
+    # the wireless fading round (DESIGN.md §16): the carried AR(1) block
+    # chain, the truncation-outage erasure and the CSI multiply all ride
+    # the one fused sanitize launch — the channel layer costs no extra
+    # instrumented read of g, no extra tree copies, no extra kernel call
+    "g_reads_channel": 1,
+    "copies_channel": [1, 1],
+    "fused_calls_channel": 1,
 }
 
 # the population-scale round (DESIGN.md §15): the stateless availability
