@@ -1,0 +1,212 @@
+"""Streaming client-aggregation benchmark: live-buffer bytes + throughput.
+
+Two claims ride this bench (DESIGN.md §17):
+
+* **structural / memory** — the FL trainer's client phase is a
+  ``lax.scan`` over cohort chunks: with ``client_chunk = C < N`` the
+  traced round holds NO (N, d) float32 intermediate, the largest live
+  client-side gradient buffer is O(C * d) (read off the jaxpr's avals,
+  machine-independent), there is exactly ONE streaming accumulation pass
+  per traced round (``trainer.CLIENT_STREAM_PASSES``), and the packed
+  server phase keeps its one instrumented read of the persisted gradient
+  buffer (``packing.G_READS``) with the streaming fold in front of it.
+* **throughput** — clients/sec of the compiled round at N >= 512, per
+  chunk size, so a chunking regression shows up as a number.
+
+The problem is sized so the DATA stays small relative to the gradient
+matrix the dense path materialises: a linear regression with weight
+(8, m) has d = 8 m gradient coordinates but only 8 + m floats per sample,
+so at N = 512, d = 2048 the historical (N, d) buffer dominates every
+other live array and the jaxpr max-bytes metric isolates it cleanly.
+
+Writes benchmarks/artifacts/client_bench.json (``--smoke``:
+client_bench_smoke.json, with the structural counters asserted) — wired
+into CI next to ``packed_bench --smoke`` and guarded by
+tools/check_bench_regression.py.  The committed baseline
+benchmarks/BENCH_clients.json records a full run.
+
+  PYTHONPATH=src python -m benchmarks.client_bench [--smoke]
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import oac, packing
+from repro.fl import trainer as fl_trainer
+from repro.fl.trainer import FLConfig
+
+_CH = oac.ChannelConfig(fading="rayleigh", mean=1.0, noise_std=0.1)
+
+
+def make_problem(n_clients: int, m: int, h: int = 1, b: int = 2,
+                 seed: int = 0):
+    """Linear regression with weight (8, m): d = 8 m gradient coordinates
+    per client, 8 + m floats per sample."""
+    rng = np.random.default_rng(seed)
+    params0 = {"w": jnp.asarray(rng.normal(size=(8, m)).astype("f4"))}
+    xs = jnp.asarray(rng.normal(size=(n_clients, h, b, 8)).astype("f4"))
+    ys = jnp.asarray(rng.normal(size=(n_clients, h, b, m)).astype("f4"))
+
+    def loss_fn(p, x, y):
+        return 0.5 * jnp.mean((x @ p["w"] - y) ** 2)
+
+    return params0, loss_fn, xs, ys
+
+
+def _fl(n_clients: int, chunk, backend: str = "exact") -> FLConfig:
+    return FLConfig(n_clients=n_clients, local_steps=1, batch_size=2,
+                    local_lr=0.05, global_lr=0.05, rounds=1,
+                    compression_ratio=0.1, channel=_CH, backend=backend,
+                    client_chunk=chunk, seed=0)
+
+
+def _build(fl: FLConfig, m: int):
+    params0, loss_fn, xs, ys = make_problem(fl.n_clients, m)
+    state, unravel = fl_trainer.init_server(params0, fl)
+    d = state.w.shape[0]
+    step = fl_trainer.make_fl_step(fl, unravel, loss_fn, d)
+    args = (jax.random.PRNGKey(0), state.w, state.g, state.age,
+            state.sel_count, xs, ys, state.residual, state.theta,
+            state.ctrl)
+    return step, args, d
+
+
+def _walk_avals(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                out.append(aval)
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else (p,)):
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    _walk_avals(inner, out)
+                elif hasattr(sub, "eqns"):
+                    _walk_avals(sub, out)
+    return out
+
+
+def trace_metrics(fl: FLConfig, m: int) -> dict:
+    """One fresh trace of the round: (max live client-matrix bytes,
+    count of (N, d) f32 avals, stream passes, packed-g reads)."""
+    step, args, d = _build(fl, m)
+    passes0 = fl_trainer.CLIENT_STREAM_PASSES
+    reads0 = packing.G_READS
+    closed = jax.make_jaxpr(step)(*args)
+    passes = fl_trainer.CLIENT_STREAM_PASSES - passes0
+    reads = packing.G_READS - reads0
+    avals = _walk_avals(closed.jaxpr, [])
+    mats = [a for a in avals
+            if len(a.shape) == 2 and a.shape[1] == d
+            and a.dtype == jnp.float32]
+    max_bytes = max((int(a.shape[0]) * d * 4 for a in mats), default=0)
+    nd_live = sum(1 for a in mats if a.shape[0] == fl.n_clients)
+    return {"d": d, "max_live_matrix_bytes": max_bytes,
+            "nd_live": nd_live, "stream_passes": passes, "g_reads": reads}
+
+
+def bench_throughput(fl: FLConfig, m: int, rounds: int = 8,
+                     repeats: int = 3) -> float:
+    """Clients/sec of the compiled round (median over repeats)."""
+    step, args, _ = _build(fl, m)
+    jstep = jax.jit(step)
+    jax.block_until_ready(jstep(*args))          # compile
+    ts = []
+    for _ in range(max(repeats, 3)):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            jax.block_until_ready(jstep(*args))
+        ts.append(time.perf_counter() - t0)
+    sec = float(np.median(ts))
+    return fl.n_clients * rounds / sec
+
+
+def run(n_clients: int, m: int, chunks, throughput: bool = True) -> dict:
+    d = 8 * m
+    res = {"n_clients": n_clients, "d": d, "chunks": list(chunks),
+           "live_bytes": {}, "clients_per_s": {}}
+    for c in chunks:
+        tm = trace_metrics(_fl(n_clients, c), m)
+        res["live_bytes"][str(c)] = tm["max_live_matrix_bytes"]
+        if c == chunks[0]:                       # smallest chunk
+            res["client_nd_live"] = tm["nd_live"]
+            res["client_stream_passes"] = tm["stream_passes"]
+        if throughput:
+            res["clients_per_s"][str(c)] = bench_throughput(
+                _fl(n_clients, c), m)
+    dense = trace_metrics(_fl(n_clients, None), m)
+    res["live_bytes"]["dense"] = dense["max_live_matrix_bytes"]
+    # the headline: the chunked round's largest live client matrix scales
+    # with C, not N (the dense fold pays the full (N, d) buffer)
+    res["live_scaling"] = (res["live_bytes"][str(chunks[0])]
+                           / max(res["live_bytes"]["dense"], 1))
+    packed = trace_metrics(_fl(n_clients, chunks[0], backend="packed"), m)
+    res["g_reads_fl_packed"] = packed["g_reads"]
+    return res
+
+
+def check(res: dict, chunks) -> None:
+    n = res["n_clients"]
+    assert res["client_stream_passes"] == 1, res
+    assert res["client_nd_live"] == 0, res
+    assert res["g_reads_fl_packed"] == 1, res
+    c0 = chunks[0]
+    # O(C * d) with one-chunk slack for scan double-buffering
+    assert res["live_bytes"][str(c0)] <= 2 * c0 * res["d"] * 4, res
+    assert res["live_bytes"]["dense"] >= n * res["d"] * 4, res
+    assert res["live_scaling"] <= 2 * c0 / n + 1e-9, res
+
+
+def _write(res: dict, name: str) -> None:
+    out_dir = os.path.join(os.path.dirname(__file__), "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(res, f, indent=1)
+
+
+def smoke() -> dict:
+    """CI gate: one streaming accumulation pass per traced round, no live
+    (N, d) gradient matrix with C < N, the packed server phase keeps its
+    single instrumented read of the persisted gradient buffer, and the
+    largest live client matrix is O(C * d).  Trace-level only — no
+    wall-clock assertions (shared runners)."""
+    chunks = (8,)
+    res = run(n_clients=64, m=32, chunks=chunks, throughput=False)
+    check(res, chunks)
+    _write(res, "client_bench_smoke.json")
+    print(json.dumps(res, indent=1))
+    print(f"[client_bench --smoke] OK: {res['client_stream_passes']} "
+          f"stream pass, {res['client_nd_live']} live (N, d) buffers, "
+          f"g_reads(packed)={res['g_reads_fl_packed']}, live bytes "
+          f"C=8: {res['live_bytes']['8']} vs dense "
+          f"{res['live_bytes']['dense']}")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    chunks = (8, 64, 512)
+    res = run(n_clients=512, m=256, chunks=chunks)
+    check(res, chunks)
+    _write(res, "client_bench.json")
+    for c in chunks:
+        print(f"client/chunk_{c},{res['live_bytes'][str(c)]},"
+              f"clients_per_s={res['clients_per_s'][str(c)]:.3g}")
+    print(json.dumps(res, indent=1))
+
+
+if __name__ == "__main__":
+    main()

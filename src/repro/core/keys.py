@@ -1,0 +1,55 @@
+"""Named per-round PRNG key discipline for the FL round builders.
+
+``fl/trainer.py`` and ``fl/sweep.py`` each grew an 8-branch ladder of
+``jax.random.split(key, n)`` calls — one branch per chaos × population ×
+wireless combination — because every combination must keep its HISTORICAL
+split count (a different count permutes every downstream draw and breaks
+bit-exact trajectories).  This module is that ladder, written once as
+data: a combination maps to an ordered tuple of key NAMES, and
+``split_named`` hands back a name -> key dict from one
+``jax.random.split(key, len(names))``.
+
+The ordering rules both ladders obeyed (verified against every historical
+branch, pinned by the golden-trajectory tests):
+
+* the caller's base keys come first, in caller order (trainer:
+  ``("sel", "ch")``; sweep: ``("pol", "h", "z")``);
+* chaos appends ``av`` (availability chain) — EXCEPT in the sweep, where
+  population lanes replace the iid dropout draw (``av_with_pop=False``)
+  — then ``fd`` (fade mask) and ``nz`` (corruption);
+* population appends ``pop`` (cohort draw) and ``er`` (churn erase);
+* wireless appends ``fad`` (AR(1) fading step) and ``csi`` (CSI draw).
+
+``split(key, 2)`` is the same primitive as the historical bare
+``jax.random.split(key)``, so the no-flags base case is bit-exact too.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+
+Array = jax.Array
+
+
+def round_key_names(*, base: Tuple[str, ...], chaos: bool = False,
+                    pop: bool = False, wl: bool = False,
+                    av_with_pop: bool = True) -> Tuple[str, ...]:
+    """Ordered key names for one round of a chaos/pop/wl combination."""
+    names = list(base)
+    if chaos and (av_with_pop or not pop):
+        names.append("av")
+    if chaos:
+        names += ["fd", "nz"]
+    if pop:
+        names += ["pop", "er"]
+    if wl:
+        names += ["fad", "csi"]
+    return tuple(names)
+
+
+def split_named(key: Array, names: Tuple[str, ...]) -> Dict[str, Array]:
+    """ONE ``jax.random.split(key, len(names))`` -> {name: subkey}."""
+    keys = jax.random.split(key, len(names))
+    return {name: keys[i] for i, name in enumerate(names)}

@@ -99,14 +99,26 @@ def oac_aggregate(key: Array, client_values: Array, cfg: ChannelConfig,
     Returns:
       (k,) aggregated, distorted mean gradient.
     """
-    n, k = client_values.shape
+    n, _ = client_values.shape
     key_h, key_z = jax.random.split(key)
     h = sample_fading(key_h, n, cfg) if fading is None else fading
     superposed = jnp.einsum("n,nk->k", h, client_values)
+    return finish_aggregate(key_z, superposed, n, cfg)
+
+
+def finish_aggregate(key_z: Array, superposed: Array, n_clients: int,
+                     cfg: ChannelConfig) -> Array:
+    """Receiver tail of Eq. (7) for a PRE-SUPERPOSED (k,) row: channel
+    noise + the 1/N normalisation.
+
+    The streaming client aggregation (fl/trainer.py) folds each chunk's
+    faded partial sum ``Σ_{n ∈ chunk} h_n ǧ_n`` into one (k,) accumulator
+    — the (N, k) compacted matrix is never live — and lands here, exactly
+    where ``oac_aggregate`` lands after its dense einsum."""
     if cfg.noise_std > 0.0:
         superposed = superposed + cfg.noise_std * jax.random.normal(
-            key_z, (k,), client_values.dtype)
-    return superposed / n
+            key_z, superposed.shape, superposed.dtype)
+    return superposed / n_clients
 
 
 def reconstruct(g_prev: Array, idx: Array, agg_values: Array) -> Array:

@@ -26,11 +26,20 @@ def one_bit(x: Array) -> Array:
 
 def fsk_majority_vote(key: Array, votes: Array, noise_std: float = 0.0) -> Array:
     """Server-side non-coherent majority vote over (N, k) one-bit votes."""
-    energy = votes.sum(axis=0)
+    return fsk_majority_from_energy(key, votes.sum(axis=0),
+                                    noise_std=noise_std)
+
+
+def fsk_majority_from_energy(key: Array, energy: Array,
+                             noise_std: float = 0.0) -> Array:
+    """Majority vote over a PRE-REDUCED (k,) vote-energy row (the
+    superposed FSK energies Σ_n vote_n).  The streaming client fold
+    accumulates the vote sum chunk by chunk — the (N, k) vote matrix is
+    never live — and finishes here: noise on the energy, then the sign."""
     if noise_std > 0.0:
         energy = energy + noise_std * jax.random.normal(key, energy.shape,
                                                         energy.dtype)
-    return jnp.where(energy >= 0, 1.0, -1.0).astype(votes.dtype)
+    return jnp.where(energy >= 0, 1.0, -1.0).astype(energy.dtype)
 
 
 def one_bit_round(key: Array, g_prev: Array, idx: Array, client_grads: Array,

@@ -44,6 +44,7 @@ import numpy as np
 from repro.core import channel as chan_mod
 from repro.core import controller as budget
 from repro.core import faults as fault_mod
+from repro.core import keys as keys_mod
 from repro.core import packing
 from repro.core import population as pop_mod
 from repro.core.engine import (AGE_CAP, fair_k_mask_dynamic,  # noqa: F401
@@ -124,8 +125,29 @@ class SweepConfig:
                                    # Rayleigh draw on its lanes; None
                                    # traces the historical program
                                    # bit-exactly
+    client_chunk: Optional[int] = None
+                                   # streaming client aggregation
+                                   # (DESIGN.md §17), inherited from the
+                                   # trainer's FLConfig.client_chunk:
+                                   # every lane superposes its clients
+                                   # through a lax.scan over chunks of
+                                   # this static size, so the per-lane
+                                   # (N, d) closed-form gradient matrix
+                                   # is never live — at grid sizes the
+                                   # vmapped lanes multiply that matrix
+                                   # by n_grid, which is where the sweep
+                                   # used to hit peak memory.  Must
+                                   # divide n_clients; None = one chunk
+                                   # of N (bit-exact historical trace)
 
     def __post_init__(self):
+        if self.client_chunk is not None:
+            if (self.client_chunk < 1
+                    or self.n_clients % self.client_chunk):
+                raise ValueError(
+                    f"client_chunk={self.client_chunk} must be in "
+                    f"[1, n_clients] and divide "
+                    f"n_clients={self.n_clients}")
         if self.wireless is not None:
             if self.wireless.n_clients != self.n_clients:
                 raise ValueError(
@@ -165,29 +187,16 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
     tail = list(carry[6:])
     pstate = tail.pop(0) if has_pop else None
     chstate = tail.pop(0) if has_wl else None
-    # key-split discipline: wireless-off combinations keep their
-    # historical split counts; wireless appends (AR(1) step, CSI draw)
-    if has_pop and cfg.faults.enabled and has_wl:
-        (key_pol, key_h, key_z, key_fd, key_nz, key_pop, key_er,
-         key_fad, key_csi) = jax.random.split(key, 9)
-    elif has_pop and cfg.faults.enabled:
-        (key_pol, key_h, key_z, key_fd, key_nz, key_pop,
-         key_er) = jax.random.split(key, 7)
-    elif has_pop and has_wl:
-        (key_pol, key_h, key_z, key_pop, key_er, key_fad,
-         key_csi) = jax.random.split(key, 7)
-    elif has_pop:
-        key_pol, key_h, key_z, key_pop, key_er = jax.random.split(key, 5)
-    elif cfg.faults.enabled and has_wl:
-        (key_pol, key_h, key_z, key_av, key_fd, key_nz, key_fad,
-         key_csi) = jax.random.split(key, 8)
-    elif cfg.faults.enabled:
-        key_pol, key_h, key_z, key_av, key_fd, key_nz = jax.random.split(
-            key, 6)
-    elif has_wl:
-        key_pol, key_h, key_z, key_fad, key_csi = jax.random.split(key, 5)
-    else:
-        key_pol, key_h, key_z = jax.random.split(key, 3)
+    # key-split discipline: every combination keeps its historical split
+    # count (the ladder lives as data in core/keys.py; population lanes
+    # replace the iid dropout draw, hence av_with_pop=False)
+    ks = keys_mod.split_named(key, keys_mod.round_key_names(
+        base=("pol", "h", "z"), chaos=cfg.faults.enabled, pop=has_pop,
+        wl=has_wl, av_with_pop=False))
+    key_pol, key_h, key_z = ks["pol"], ks["h"], ks["z"]
+    key_av, key_fd, key_nz = ks.get("av"), ks.get("fd"), ks.get("nz")
+    key_pop, key_er = ks.get("pop"), ks.get("er")
+    key_fad, key_csi = ks.get("fad"), ks.get("csi")
     # adaptive lanes re-derive the split from their carried controller
     # state; static lanes keep the grid's k_m
     k_m_eff = (jnp.where(adaptive > 0, traced_km(cfg.k, cs["k_m_frac"]),
@@ -196,7 +205,27 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
     # H closed-form local SGD steps on f_n(w) = 0.5 ||w - w*_n||^2:
     #   w_H = w*_n + (1 - eta_l)^H (w - w*_n);  accumulated grad (Eq. 5)
     shrink = (1.0 - (1.0 - cfg.local_lr) ** cfg.local_steps) / cfg.local_lr
-    grads = shrink * (w[None, :] - w_stars)               # (N, d)
+    chunk = (cfg.client_chunk if cfg.client_chunk is not None
+             else cfg.n_clients)
+    n_chunks = cfg.n_clients // chunk
+
+    def superpose(wv):
+        """Streaming Σ_n wv_n g_n (DESIGN.md §17): scan over client
+        chunks, each materialising only its (chunk, d) closed-form
+        gradients and contracting them against its weight slice — the
+        per-lane (N, d) matrix is never live.  One chunk of N
+        (client_chunk=None) is the historical dense einsum bit-exactly."""
+        ws_c = w_stars.reshape((n_chunks, chunk, cfg.d))
+        wv_c = wv.reshape((n_chunks, chunk))
+
+        def body(acc, sliced):
+            ws_chunk, wv_chunk = sliced
+            g = shrink * (w[None, :] - ws_chunk)
+            return acc + jnp.einsum("n,nd->d", wv_chunk, g), None
+
+        acc, _ = jax.lax.scan(body, jnp.zeros((cfg.d,), jnp.float32),
+                              (ws_c, wv_c))
+        return acc
     # selection (Eq. 11) scored on the last reconstructed gradient
     score = jnp.where(policy_id == POLICY_RANDK,
                       jax.random.uniform(key_pol, (cfg.d,)),
@@ -229,8 +258,7 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
                                                cfg.faults)
             gate = avail * gate
         n_t = gate.sum()
-        agg = fault_mod.participation_scale(
-            jnp.einsum("n,nd->d", w_csi * gate, grads), n_t)
+        agg = fault_mod.participation_scale(superpose(w_csi * gate), n_t)
         if cfg.faults.enabled:
             agg = fault_mod.corrupt(agg, key_nz, cfg.faults)
         erase = jnp.zeros((cfg.d,), jnp.float32)
@@ -253,8 +281,7 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
         pstate, ps = pop_mod.population_round(pstate, key_pop,
                                               cfg.population)
         n_t = ps["n_t"]
-        agg = fault_mod.participation_scale(
-            jnp.einsum("n,nd->d", h * ps["part"], grads), n_t)
+        agg = fault_mod.participation_scale(superpose(h * ps["part"]), n_t)
         if cfg.faults.enabled:
             agg = fault_mod.corrupt(agg, key_nz, cfg.faults)
         erase = pop_mod.churn_erase_mask(key_er, cfg.d, ps["churn"],
@@ -276,8 +303,7 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
         avail = fault_mod.init_avail_state(key_av, cfg.n_clients,
                                            cfg.faults)
         n_t = avail.sum()
-        agg = fault_mod.participation_scale(
-            jnp.einsum("n,nd->d", h * avail, grads), n_t)
+        agg = fault_mod.participation_scale(superpose(h * avail), n_t)
         agg = fault_mod.corrupt(agg, key_nz, cfg.faults)
         erase = fault_mod.erase_with_outage(
             fault_mod.fade_mask(key_fd, cfg.d, cfg.faults), n_t)
@@ -285,7 +311,7 @@ def _one_round(cfg: SweepConfig, ctrl: budget.BudgetController,
         agg = jnp.where(bad, 0.0, agg)
         mask = mask * (1.0 - bad.astype(jnp.float32))
     else:
-        agg = jnp.einsum("n,nd->d", h, grads) / cfg.n_clients
+        agg = superpose(h) / cfg.n_clients
     if cfg.error_feedback:
         # server-side EF (the engine's residual stage in vmapped form):
         # the unsent aggregate mass folds back pre-merge, its noise-free

@@ -23,8 +23,9 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 import numpy as np
 
-from repro.core import (channel as chan, controller as budget, faults, oac,
-                        packing, population, quantize)
+from repro.core import (channel as chan, controller as budget, faults,
+                        keys as keys_mod, oac, packing, population,
+                        quantize)
 from repro.core.aou import update_age_by_indices
 from repro.core.engine import (EngineConfig, SelectionEngine,
                                fair_k_masks_dynamic, index_jitter,
@@ -34,6 +35,14 @@ from repro.kernels import ops, ref
 
 Array = jax.Array
 SDS = jax.ShapeDtypeStruct
+
+# trace-time counter: how many streaming client folds a program traces.
+# ``lax.scan`` traces its body ONCE regardless of the chunk count, so a
+# round that streams its clients through one chunk scan traces exactly
+# ONE fold — the client_bench smoke asserts this stays 1 (each client
+# gradient is computed and reduced in a single pass; the retired path
+# re-read the materialised (N, d) matrix through up to three einsums).
+CLIENT_STREAM_PASSES = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +164,26 @@ class FLConfig:
                                     # outage → corrupt → sanitize).
                                     # None (default) traces the
                                     # historical program bit-exactly
+    client_chunk: Optional[int] = None
+                                    # streaming client aggregation
+                                    # (DESIGN.md §17): the client phase
+                                    # runs as a ``lax.scan`` over cohort
+                                    # chunks of this static size — each
+                                    # chunk computes its vmapped H-step
+                                    # local gradients, applies every
+                                    # per-client gate (fading,
+                                    # availability, participation,
+                                    # channel survivorship, CSI, one-bit
+                                    # quantizer) in registers and folds
+                                    # into (d,)/(k,) accumulators, so the
+                                    # (N, d) gradient and vote matrices
+                                    # are never live: peak client-phase
+                                    # memory is O(chunk · d), each
+                                    # gradient is read exactly once.
+                                    # Must divide n_clients.  None = one
+                                    # chunk of N — bit-exact with the
+                                    # historical materialise-then-einsum
+                                    # trace (same program, chunk count 1)
     seed: int = 0
 
     @property
@@ -253,6 +282,13 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
     if wdcfg is not None and fl.policy not in ("fairk", "fairk_auto"):
         raise ValueError("the watchdog tightens the FAIR-k split — policy "
                          f"{fl.policy!r} pins or ignores it")
+    chunk = fl.client_chunk if fl.client_chunk is not None else fl.n_clients
+    if not 1 <= chunk <= fl.n_clients or fl.n_clients % chunk:
+        raise ValueError(
+            f"client_chunk={fl.client_chunk} must be in [1, n_clients] and "
+            f"divide n_clients={fl.n_clients} (the chunk scan needs a "
+            f"static, uniform cohort shape)")
+    n_chunks = fl.n_clients // chunk
     age_lag = fl.async_lag or None
     # controller setpoint thinning: fault channels, population churn and
     # channel-truncation outage all block refreshes independently per
@@ -280,6 +316,36 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
         return (w_flat - w_final) / fl.local_lr   # = sum of local gradients
 
     clients = jax.vmap(client_update, in_axes=(None, 0, 0))
+
+    def _stream(w_flat, xs, ys, rows, init, fold):
+        """Streaming client aggregation (DESIGN.md §17): ``lax.scan`` over
+        ``n_chunks`` client chunks of static size ``chunk``.  Each scan
+        step runs the vmapped H-step local update for ONE chunk, then
+        ``fold(acc, grads_chunk, *row_chunks)`` applies the per-client
+        gates and reduces the (chunk, d) gradients into the (d,)/(k,)
+        accumulator pytree ``init`` — the (N, d) matrix is never live and
+        each client gradient is read exactly once.  ``rows`` are per-client
+        (N,)-leading weight vectors sliced chunk-wise alongside the data.
+
+        One chunk of N (``client_chunk=None``) is the historical
+        materialise-then-reduce trace bit-exactly: the accumulators start
+        at zeros (0 + x == x in f32 up to -0.0 -> +0.0, and every
+        downstream consumer compares with >=/==), and the per-chunk gate +
+        reduction is the identical expression the dense path evaluated."""
+        global CLIENT_STREAM_PASSES
+        CLIENT_STREAM_PASSES += 1
+        xs_c = xs.reshape((n_chunks, chunk) + xs.shape[1:])
+        ys_c = ys.reshape((n_chunks, chunk) + ys.shape[1:])
+        rows_c = tuple(r.reshape((n_chunks, chunk) + r.shape[1:])
+                       for r in rows)
+
+        def body(acc, sliced):
+            xc, yc = sliced[0], sliced[1]
+            return fold(acc, clients(w_flat, xc, yc), *sliced[2:]), None
+
+        acc, _ = jax.lax.scan(body, init, (xs_c, ys_c) + rows_c)
+        return acc
+
     policy_name = "fairk" if fl.policy == "fairk_auto" else fl.policy
     # the flat (d,) server vector is a trivially packed single-leaf layout
     # (lane=1: no pads — ops.fairk_update handles trailing alignment) — the
@@ -315,37 +381,20 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
         return {"mean_aou": age_next.mean(), "max_aou": age_next.max(),
                 "km_frac": jnp.asarray(kmf, jnp.float32)}
 
+    # key-split discipline: every chaos × population × wireless
+    # combination keeps its historical split count (bit-exact
+    # trajectories) — the ladder lives as data in core/keys.py
+    key_names = keys_mod.round_key_names(base=("sel", "ch"), chaos=chaos,
+                                         pop=pop, wl=wl)
+
     def _round(key: Array, w: Array, g_prev: Array, age: Array,
                sel_count: Array, xs: Array, ys: Array, residual: Array,
                tstate, cstate, fstate):
-        # key-split discipline: every wireless-off combination keeps its
-        # historical split count (bit-exact trajectories); the wireless
-        # channel appends two keys (the AR(1) fading step + the CSI
-        # misalignment draw) on top of each combination
-        key_av = key_fd = key_nz = key_pop = key_er = None
-        key_fad = key_csi = None
-        if pop and chaos and wl:
-            (key_sel, key_ch, key_av, key_fd, key_nz, key_pop, key_er,
-             key_fad, key_csi) = jax.random.split(key, 9)
-        elif pop and chaos:
-            (key_sel, key_ch, key_av, key_fd, key_nz, key_pop,
-             key_er) = jax.random.split(key, 7)
-        elif chaos and wl:
-            (key_sel, key_ch, key_av, key_fd, key_nz, key_fad,
-             key_csi) = jax.random.split(key, 7)
-        elif chaos:
-            key_sel, key_ch, key_av, key_fd, key_nz = jax.random.split(key,
-                                                                       5)
-        elif pop and wl:
-            (key_sel, key_ch, key_pop, key_er, key_fad,
-             key_csi) = jax.random.split(key, 6)
-        elif pop:
-            key_sel, key_ch, key_pop, key_er = jax.random.split(key, 4)
-        elif wl:
-            key_sel, key_ch, key_fad, key_csi = jax.random.split(key, 4)
-        else:
-            key_sel, key_ch = jax.random.split(key)
-        grads = clients(w, xs, ys)                       # (N, d)
+        ks = keys_mod.split_named(key, key_names)
+        key_sel, key_ch = ks["sel"], ks["ch"]
+        key_av, key_fd, key_nz = ks.get("av"), ks.get("fd"), ks.get("nz")
+        key_pop, key_er = ks.get("pop"), ks.get("er")
+        key_fad, key_csi = ks.get("fad"), ks.get("csi")
         kmf = cstate["k_m_frac"] if adaptive else None
         if wdcfg is not None:
             # cooldown tightening: for ``cooldown`` rounds after a trip
@@ -392,27 +441,40 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                                          fl.wireless)
             if fl.one_bit:
                 # FSK-MV uplink (Sec. V-B): clients transmit sign(ǧ_{n,t})
-                # and the server recovers majority-vote signs via the
-                # sign_mv kernel; selection scores the superposed vote
-                # ENERGY (consensus strength — the server-observable
-                # magnitude statistic; stale sign vectors are all-|1| and
-                # carry no magnitude information)
-                grads_eff = (grads + residual[None, :]
-                             if fl.error_feedback else grads)
-                votes = quantize.one_bit(grads_eff)      # (N, d) ±1
-                if wl:
-                    # truncated clients cast no vote; survivors' FSK
-                    # energies carry the CSI misalignment — the majority
-                    # vote and its energy statistic both ride it
-                    votes = votes * (cps["sent"] * w_csi)[:, None]
+                # and the server recovers majority-vote signs; selection
+                # scores the superposed vote ENERGY (consensus strength —
+                # the server-observable magnitude statistic; stale sign
+                # vectors are all-|1| and carry no magnitude information).
+                # Each chunk quantizes, gates and reduces its votes in one
+                # ``sign_mv`` launch; the partial energies fold into one
+                # (d,) accumulator (the (N, d) vote matrix is never live)
+                # and ``sign_from_energy`` runs the majority stage on the
+                # total.  The wl vote weight rides the fold as a per-client
+                # row: truncated clients cast a ±0.0 "vote" that sign_mv's
+                # internal re-sign counts as +1 — the historical semantics,
+                # preserved exactly by reducing per chunk through the same
+                # kernel.
+                vote_w = (cps["sent"] * w_csi,) if wl else ()
+
+                def fold_votes(acc, g, *row):
+                    eff = (g + residual[None, :] if fl.error_feedback
+                           else g)
+                    votes = quantize.one_bit(eff)        # (chunk, d) ±1
+                    if wl:
+                        votes = votes * row[0][:, None]
+                    out = (acc[0] + ops.sign_mv(votes)[1],)
+                    if fl.error_feedback:
+                        out += (acc[1] + eff.sum(axis=0),)
+                    return out
+
+                init = ((jnp.zeros((d,), jnp.float32),)
+                        * (2 if fl.error_feedback else 1))
+                accs = _stream(w, xs, ys, vote_w, init, fold_votes)
                 noise = (fl.channel.noise_std
                          * jax.random.normal(key_ch, (d,), jnp.float32)
                          if fl.channel.noise_std > 0.0 else None)
-                # ONE reduction over the (N, d) vote matrix: sign_mv
-                # emits the majority signs AND the superposed energy it
-                # detected them from (the old route re-reduced the votes
-                # a second time just to score the energy)
-                fresh_sign, energy = ops.sign_mv(votes, noise=noise)
+                fresh_sign, energy = ops.sign_from_energy(accs[0],
+                                                          noise=noise)
                 # noiseless energies are heavily TIED (even integers in
                 # [-N, N]): a quantile threshold inside a tie level would
                 # select the whole level and blow the k budget, so break
@@ -438,50 +500,84 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                     # unsent mass of the mean effective gradient — the same
                     # accounting the exact one-bit path keeps (quantization
                     # error on sent coords is NOT tracked: the server only
-                    # ever sees signs)
-                    residual = grads_eff.mean(0) * (1.0 - sel_mask)
+                    # ever sees signs).  The fold accumulated Σ_n eff_n;
+                    # sum/N is the mean the dense path took
+                    residual = (accs[1] / fl.n_clients) * (1.0 - sel_mask)
             else:
-                # production-scale server phase: dense faded aggregate, then
-                # one fused threshold select+merge pass (selection scores
-                # the fresh aggregate — the threshold route's operating
+                # production-scale server phase: faded aggregate, then one
+                # fused threshold select+merge pass (selection scores the
+                # fresh aggregate — the threshold route's operating
                 # point).  EF is server-side: the residual folds into the
                 # score/sent values INSIDE the fused kernel and its
-                # successor comes back from the same pass
+                # successor comes back from the same pass.
+                #
+                # Every per-client gate composes into ONE (N,) weight row
+                # ``wv`` BEFORE any gradient exists:
+                #   wl:    w_csi · sent · (participation | availability) —
+                #          truncated channel inversion (DESIGN.md §16):
+                #          only clients clearing max(gmin, 1/pmax)
+                #          transmit; survivors arrive coherently inverted
+                #          up to the CSI misalignment, so the survivor
+                #          gate REPLACES the iid scalar fading draw, and
+                #          availability (GE chain or population churn)
+                #          composes BEFORE the outage
+                #   pop:   h · participation (DESIGN.md §15 cohort draw)
+                #   chaos: h · availability (Gilbert–Elliott chain)
+                #   plain: h (iid scalar fading)
+                # and the superposition streams: each chunk's vmapped
+                # local gradients contract against their weight slice
+                # (``einsum("n,nd->d")`` on the chunk — the register-level
+                # gate-and-accumulate) into one (d,) accumulator, so the
+                # (N, d) matrix is never live and each gradient is read
+                # exactly once (the retired path materialised it and
+                # re-read it through three gated einsum variants).
                 if not wl:
                     h = oac.sample_fading(key_sel, fl.n_clients,
                                           fl.channel)
                 erase = None
+                n_t = None
+                if pop:
+                    pnext, ps = population.population_round(
+                        fstate["pop"], key_pop, fl.population)
+                    fstate = {**fstate, "pop": pnext}
+                elif chaos:
+                    avail = faults.avail_step(fstate["avail"], key_av,
+                                              fl.faults)
+                    fstate = {**fstate, "avail": avail}
                 if wl:
-                    # truncated channel inversion (DESIGN.md §16): only
-                    # clients whose instantaneous gain clears
-                    # max(gmin, 1/pmax) transmit this round; survivors
-                    # arrive coherently inverted — unit gain up to the
-                    # multiplicative CSI misalignment — so the survivor
-                    # gate REPLACES the iid scalar fading draw.
-                    # Availability (GE chain or population churn)
-                    # composes BEFORE the outage: a client superposes
-                    # only if it is both alive and un-truncated.
                     gate = cps["sent"]
                     if pop:
-                        pnext, ps = population.population_round(
-                            fstate["pop"], key_pop, fl.population)
-                        fstate = {**fstate, "pop": pnext}
                         gate = ps["part"] * gate
                     elif chaos:
-                        avail = faults.avail_step(fstate["avail"], key_av,
-                                                  fl.faults)
-                        fstate = {**fstate, "avail": avail}
                         gate = avail * gate
                     n_t = gate.sum()
-                    total = jnp.einsum("n,nd->d", w_csi * gate, grads)
-                    fresh = faults.participation_scale(total, n_t)
-                    if chaos:
-                        fresh = faults.corrupt(fresh, key_nz, fl.faults)
+                    wv = w_csi * gate
+                elif pop:
+                    n_t = ps["n_t"]
+                    wv = h * ps["part"]
+                elif chaos:
+                    n_t = avail.sum()
+                    wv = h * avail
+                else:
+                    wv = h
+                total = _stream(
+                    w, xs, ys, (wv,), jnp.zeros((d,), jnp.float32),
+                    lambda acc, g, wc: acc + jnp.einsum("n,nd->d", wc, g))
+                # the realised-participation rescale (guarded 1/N_t) on
+                # the gated combinations, the plain 1/N average otherwise;
+                # rare non-finite corruption hits the aggregate itself
+                fresh = (faults.participation_scale(total, n_t)
+                         if n_t is not None else total / fl.n_clients)
+                if chaos:
+                    fresh = faults.corrupt(fresh, key_nz, fl.faults)
+                if wl or pop or chaos:
                     # erase composition: churn block loss and deep fades
                     # stack (max — a block lost twice is still lost), and
-                    # a TOTAL truncation outage (n_t == 0: every client
-                    # below threshold and nothing superposed) erases the
-                    # whole round through the same path
+                    # a TOTAL outage (n_t == 0: nothing superposed this
+                    # round) erases the whole round through the sanitize
+                    # path — coordinates stay semantically unsent, age
+                    # climbing, exactly the Lemma-1 thinning model the
+                    # validation suites check against
                     erase = jnp.zeros((d,), jnp.float32)
                     if pop:
                         erase = jnp.maximum(
@@ -491,49 +587,6 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
                         erase = jnp.maximum(
                             erase, faults.fade_mask(key_fd, d, fl.faults))
                     erase = faults.erase_with_outage(erase, n_t)
-                elif pop:
-                    # population churn (DESIGN.md §15): the round samples
-                    # its cohort from the live virtual population; the
-                    # realised participation gates the superposition (the
-                    # same guarded 1/N_t rescale as the chaos path), and
-                    # mid-round vanishers erase symbol blocks of the
-                    # aggregate through the sanitize path — their
-                    # coordinates stay semantically unsent, age climbing,
-                    # exactly the Lemma-1 thinning model the population
-                    # validation suite checks against
-                    pnext, ps = population.population_round(
-                        fstate["pop"], key_pop, fl.population)
-                    fstate = {**fstate, "pop": pnext}
-                    n_t = ps["n_t"]
-                    total = jnp.einsum("n,nd->d", h * ps["part"], grads)
-                    fresh = faults.participation_scale(total, n_t)
-                    if chaos:
-                        fresh = faults.corrupt(fresh, key_nz, fl.faults)
-                    erase = population.churn_erase_mask(
-                        key_er, d, ps["churn"], fl.population)
-                    if chaos:
-                        erase = jnp.maximum(
-                            erase, faults.fade_mask(key_fd, d, fl.faults))
-                    erase = faults.erase_with_outage(erase, n_t)
-                elif chaos:
-                    # churn: the Gilbert–Elliott availability chain gates
-                    # which clients superpose this round; the aggregate
-                    # rescales by the REALISED participation N_t (traced,
-                    # guarded against N_t == 0), deep fades erase whole
-                    # coordinate blocks (degrading through the engine's
-                    # NaN/sanitize path) and rare non-finite corruption
-                    # hits the aggregate itself
-                    avail = faults.avail_step(fstate["avail"], key_av,
-                                              fl.faults)
-                    fstate = {**fstate, "avail": avail}
-                    n_t = avail.sum()
-                    total = jnp.einsum("n,nd->d", h * avail, grads)
-                    fresh = faults.participation_scale(total, n_t)
-                    fresh = faults.corrupt(fresh, key_nz, fl.faults)
-                    erase = faults.erase_with_outage(
-                        faults.fade_mask(key_fd, d, fl.faults), n_t)
-                else:
-                    fresh = jnp.einsum("n,nd->d", h, grads) / fl.n_clients
                 g_t, age_next, stats = engine.select_and_merge(
                     fresh, g_prev, age, key=key_ch, tstate=ts,
                     residual=residual if fl.error_feedback else None,
@@ -569,17 +622,54 @@ def make_fl_step(fl: FLConfig, unravel: Callable, loss_fn: Callable,
         else:
             idx = engine.select(key_sel, g_prev, age)    # Eq. (11)
         sel_mask = jnp.zeros((d,), jnp.float32).at[idx].set(1.0)
-        if fl.error_feedback:
-            # add back last round's unsent mass; shared mask => the residual
-            # is identical across clients and can live on the server side
-            grads = grads + residual[None, :]
-            sent_mask = jnp.zeros_like(residual).at[idx].set(1.0)
-            residual = grads.mean(0) * (1.0 - sent_mask)
+        # paper-faithful streaming uplink: selection (Eq. 11) scores
+        # (g_prev, age) — independent of this round's gradients — so the
+        # client phase can stream straight into the compacted (k,)
+        # accumulator: each chunk's vmapped local gradients are EF-shifted,
+        # gathered at ``idx`` and reduced (faded contraction on the
+        # coherent route, ±1 vote sum on the one-bit route) before the
+        # next chunk computes.  The (N, d) matrix of the retired path —
+        # and the (N, k) compacted/vote matrix inside oac_round /
+        # one_bit_round — are never live; EF additionally folds Σ_n eff_n
+        # into a (d,) row for the residual update (sum/N is the mean the
+        # dense path took; the shared mask keeps the residual identical
+        # across clients, so it lives server-side)
+        ef = fl.error_feedback
         if fl.one_bit:
-            g_t = quantize.one_bit_round(key_ch, g_prev, idx, grads,
-                                         noise_std=fl.channel.noise_std)
+            def fold_votes(acc, g):
+                eff = g + residual[None, :] if ef else g
+                out = (acc[0] + quantize.one_bit(eff[:, idx]).sum(axis=0),)
+                if ef:
+                    out += (acc[1] + eff.sum(axis=0),)
+                return out
+
+            init = ((jnp.zeros((k,), jnp.float32),)
+                    + ((jnp.zeros((d,), jnp.float32),) if ef else ()))
+            accs = _stream(w, xs, ys, (), init, fold_votes)
+            agg_sign = quantize.fsk_majority_from_energy(
+                key_ch, accs[0], noise_std=fl.channel.noise_std)
+            g_t = oac.reconstruct(g_prev, idx, agg_sign)
         else:
-            g_t, _ = oac.oac_round(key_ch, g_prev, idx, grads, fl.channel)
+            # same key walk as oac.oac_aggregate: fading from the first
+            # subkey, receiver noise from the second
+            key_h, key_z = jax.random.split(key_ch)
+            h = oac.sample_fading(key_h, fl.n_clients, fl.channel)
+
+            def fold_faded(acc, g, hc):
+                eff = g + residual[None, :] if ef else g
+                out = (acc[0] + jnp.einsum("n,nk->k", hc, eff[:, idx]),)
+                if ef:
+                    out += (acc[1] + eff.sum(axis=0),)
+                return out
+
+            init = ((jnp.zeros((k,), jnp.float32),)
+                    + ((jnp.zeros((d,), jnp.float32),) if ef else ()))
+            accs = _stream(w, xs, ys, (h,), init, fold_faded)
+            agg = oac.finish_aggregate(key_z, accs[0], fl.n_clients,
+                                       fl.channel)                # Eq. (7)
+            g_t = oac.reconstruct(g_prev, idx, agg)               # Eq. (8)
+        if ef:
+            residual = (accs[1] / fl.n_clients) * (1.0 - sel_mask)
         w_next = w - fl.global_lr * g_t                  # Eq. (9)
         age_next = update_age_by_indices(age, idx)       # Eq. (10)
         if age_lag:
@@ -746,6 +836,24 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
                        cstate, fstate), (xs, ys))
             return carry, rms
 
+        def _stage_chunk(t0: int, n: int):
+            """Draw the chunk's host batches into ONE preallocated buffer
+            pair and ship each as a single device transfer.  Same
+            ``sample_round`` call order as the historical per-round list
+            (bit-exact data stream); the list-of-arrays + ``np.stack``
+            staging paid an extra full host copy of every chunk and a
+            device transfer per unlucky layout."""
+            bx, by = sample_round(t0)
+            bx, by = np.asarray(bx), np.asarray(by)
+            xs_h = np.empty((n,) + bx.shape, bx.dtype)
+            ys_h = np.empty((n,) + by.shape, by.dtype)
+            xs_h[0], ys_h[0] = bx, by
+            for i in range(1, n):
+                bx, by = sample_round(t0 + i)
+                xs_h[i] = np.asarray(bx)
+                ys_h[i] = np.asarray(by)
+            return jnp.asarray(xs_h), jnp.asarray(ys_h)
+
         t = 0
         while t < fl.rounds:
             stop = fl.rounds
@@ -755,9 +863,7 @@ def train(fl: FLConfig, init_params: Any, loss_fn: Callable,
                         stop = u + 1
                         break
             chunk = min(fl.scan_rounds, stop - t)
-            data = [sample_round(u) for u in range(t, t + chunk)]
-            xs = jnp.asarray(np.stack([b[0] for b in data]))
-            ys = jnp.asarray(np.stack([b[1] for b in data]))
+            xs, ys = _stage_chunk(t, chunk)
             (key, w, g, age, sel_count, residual, tstate, cstate,
              fstate), rms = fl_chunk(key, w, g, age, sel_count, xs, ys,
                                      residual, tstate, cstate, fstate)

@@ -22,7 +22,7 @@ from repro.kernels.fairk_update import (STATS_AGE_OFF, STATS_MAG_OFF,
                                         STATS_N_SEL, STATS_N_SEL_M,
                                         fairk_ef_update_pallas,
                                         fairk_stats_update_pallas)
-from repro.kernels.sign_mv import sign_mv_pallas
+from repro.kernels.sign_mv import sign_from_energy_pallas, sign_mv_pallas
 
 Array = jax.Array
 
@@ -74,6 +74,28 @@ def sign_mv(votes: Array, noise: Optional[Array] = None,
         block = k
     return sign_mv_pallas(votes, noise, block_k=block,
                           interpret=(mode == "interpret"))
+
+
+def sign_from_energy(energy: Array, noise: Optional[Array] = None,
+                     mode: Optional[str] = None) -> Tuple[Array, Array]:
+    """Majority stage of ``sign_mv`` for a PRE-REDUCED (k,) vote-energy
+    row -> ``(signs, energy')``.
+
+    The streaming client aggregation (fl/trainer.py) folds each client
+    chunk's partial vote sum into one (k,) accumulator — the (N, k) vote
+    matrix is never materialised — and finishes here: optional channel
+    noise on the superposed energy, then the non-coherent sign."""
+    mode = mode or ("pallas" if _on_tpu() else "ref")
+    if mode == "ref":
+        return ref.sign_from_energy_ref(energy, noise)
+    k = energy.shape[0]
+    for block in (2048, 1024, 512, 256, 128):
+        if k % block == 0:
+            break
+    else:
+        block = k
+    return sign_from_energy_pallas(energy, noise, block_k=block,
+                                   interpret=(mode == "interpret"))
 
 
 def global_topk_from_candidates(vals: Array, idxs: Array, k: int

@@ -75,9 +75,19 @@ def sign_mv_ref(votes: Array, noise: Optional[Array] = None
     score selection on vote consensus strength without reducing the
     (N, k) vote matrix a second time."""
     s = jnp.where(votes >= 0, 1.0, -1.0).sum(axis=0)
+    return sign_from_energy_ref(s, noise)
+
+
+def sign_from_energy_ref(energy: Array, noise: Optional[Array] = None
+                         ) -> Tuple[Array, Array]:
+    """Majority stage of ``sign_mv_ref`` for a PRE-REDUCED (k,) vote-energy
+    row: the streaming client fold (fl/trainer.py) accumulates each chunk's
+    partial vote sum into one (k,) buffer — the full (N, k) vote matrix is
+    never live — and hands the total here for the noise add + sign."""
+    s = energy
     if noise is not None:
         s = s + noise.astype(s.dtype)
-    return jnp.where(s >= 0, 1.0, -1.0).astype(votes.dtype), s
+    return jnp.where(s >= 0, 1.0, -1.0).astype(energy.dtype), s
 
 
 def fairk_update_ref(g: Array, g_prev: Array, age: Array, theta_m: Array,

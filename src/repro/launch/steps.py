@@ -437,6 +437,7 @@ def _with_expert_axis(cfg: ModelConfig, mesh) -> ModelConfig:
 
 def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                     n_micro: Optional[int] = None,
+                    client_chunk: Optional[int] = None,
                     oac: Optional[OacServerConfig] = OacServerConfig(),
                     opt_name: Optional[str] = None,
                     lr=1e-3,
@@ -444,6 +445,11 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                     gather_dtype: Optional[str] = None) -> StepBundle:
     cfg = _with_expert_axis(cfg, mesh)
     n_micro, mb, n_shards = _batch_parts(cfg, shape, mesh, n_micro)
+    if client_chunk is not None and (
+            client_chunk < 1 or n_micro % client_chunk):
+        raise ValueError(
+            f"client_chunk must divide n_micro ({n_micro}), got "
+            f"{client_chunk}")
     opt = make_optimizer(opt_name or cfg.optimizer, lr)
 
     params_abs = abstract_params(cfg)
@@ -805,15 +811,37 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
         else:
             params_c = params
 
-        def microbatch_body(carry, mbatch):
-            loss_acc, g_acc = carry
-            (loss, _), grads = grad_fn(params_c, mbatch)
-            g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
-                                 g_acc, grads)
-            return (loss_acc + loss, g_acc), None
+        if client_chunk is None:
+            def microbatch_body(carry, mbatch):
+                loss_acc, g_acc = carry
+                (loss, _), grads = grad_fn(params_c, mbatch)
+                g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                     g_acc, grads)
+                return (loss_acc + loss, g_acc), None
 
-        (loss, grads), _ = jax.lax.scan(
-            microbatch_body, (jnp.zeros((), jnp.float32), zeros), batch)
+            (loss, grads), _ = jax.lax.scan(
+                microbatch_body, (jnp.zeros((), jnp.float32), zeros), batch)
+        else:
+            # streaming chunked accumulation (DESIGN.md §17): the scan
+            # walks n_micro / C chunks and each step vmaps the grad over
+            # its C microbatches, folding the chunk's gradient sum into
+            # the same (d,)-per-leaf accumulators the per-microbatch body
+            # carries — memory scales with the chunk, not with n_micro.
+            batch_c = jax.tree.map(
+                lambda x: x.reshape((n_micro // client_chunk, client_chunk)
+                                    + x.shape[1:]), batch)
+
+            def chunk_body(carry, mchunk):
+                loss_acc, g_acc = carry
+                (loss, _), grads = jax.vmap(
+                    lambda mb_: grad_fn(params_c, mb_))(mchunk)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32).sum(axis=0),
+                    g_acc, grads)
+                return (loss_acc + loss.sum(), g_acc), None
+
+            (loss, grads), _ = jax.lax.scan(
+                chunk_body, (jnp.zeros((), jnp.float32), zeros), batch_c)
         loss = loss / n_micro
         grads = jax.tree.map(lambda g, p: (g / n_micro).astype(p.dtype),
                              grads, params)
@@ -830,6 +858,7 @@ def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                    SDS((), jnp.int32))
     meta = {
         "kind": "train", "n_micro": n_micro, "micro_batch": mb,
+        "client_chunk": client_chunk,
         "seq_len": shape.seq_len, "oac": oac is not None,
         "oac_packed": bool(oac.packed) if oac is not None else False,
         "oac_warm_start": bool(oac.warm_start) if oac is not None else False,

@@ -147,6 +147,13 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="restore the latest server checkpoint from "
                          "--ckpt-dir and continue at the next step")
+    ap.add_argument("--client-chunk", type=int, default=0,
+                    help="streaming client aggregation (DESIGN.md §17): "
+                         "split the global batch into this many simulated "
+                         "client microbatches and accumulate their "
+                         "gradients chunk by chunk inside the compiled "
+                         "step — gradient memory scales with the chunk, "
+                         "not the client count (0 = one fused batch)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -180,7 +187,13 @@ def main():
                            fade_block=args.fade_block,
                            population=population, wireless=wireless)
            if args.oac else None)
-    bundle = make_train_step(cfg, shape, mesh, n_micro=1, oac=oac, lr=1e-3)
+    n_micro = args.client_chunk or 1
+    if args.batch % n_micro:
+        raise ValueError(f"--client-chunk {args.client_chunk} must divide "
+                         f"--batch {args.batch}")
+    bundle = make_train_step(cfg, shape, mesh, n_micro=n_micro,
+                             client_chunk=(args.client_chunk or None),
+                             oac=oac, lr=1e-3)
 
     key = jax.random.PRNGKey(args.seed)
     params = tr.init_lm(key, cfg)
@@ -294,15 +307,18 @@ def main():
         for t in range(start, start + args.steps):
             toks, labels = lm_batch(args.seed * 1000 + t, args.batch,
                                     args.seq, cfg.vocab)
-            batch = {"tokens": jnp.asarray(toks)[None],
-                     "labels": jnp.asarray(labels)[None]}
+            mb = args.batch // n_micro
+            batch = {"tokens": jnp.asarray(toks).reshape(
+                         (n_micro, mb, args.seq)),
+                     "labels": jnp.asarray(labels).reshape(
+                         (n_micro, mb, args.seq))}
             if cfg.family == "vlm":
                 batch["embeds"] = jnp.zeros(
-                    (1, args.batch, cfg.n_patches, cfg.d_model),
+                    (n_micro, mb, cfg.n_patches, cfg.d_model),
                     jnp.dtype(cfg.compute_dtype))
             if cfg.family == "audio":
                 batch["frames"] = jnp.zeros(
-                    (1, args.batch, cfg.encoder_seq, cfg.d_model),
+                    (n_micro, mb, cfg.encoder_seq, cfg.d_model),
                     jnp.dtype(cfg.compute_dtype))
             t0 = time.time()
             params, opt_state, server, loss = step_fn(

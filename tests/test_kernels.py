@@ -119,6 +119,34 @@ class TestSignMV:
         np.testing.assert_array_equal(np.asarray(signs), 1.0)
         np.testing.assert_array_equal(np.asarray(energy), 1.0)  # 3 - 2
 
+    @pytest.mark.parametrize("mode", ["ref", "interpret"])
+    @pytest.mark.parametrize("noisy", [False, True])
+    def test_sign_from_energy_matches_sign_mv(self, mode, noisy):
+        """The streaming one-bit fold pre-reduces the votes chunk by chunk
+        and detects on the (k,) energy row: sign_from_energy on the summed
+        votes must match sign_mv on the full matrix bit for bit."""
+        rng = np.random.default_rng(13)
+        votes = jnp.asarray(np.sign(rng.normal(size=(9, 2048)) + 0.05)
+                            .astype("f4"))
+        noise = (jnp.asarray((2.0 * rng.normal(size=2048)).astype("f4"))
+                 if noisy else None)
+        signs_d, energy_d = ops.sign_mv(votes, noise=noise, mode=mode)
+        signs_s, energy_s = ops.sign_from_energy(votes.sum(axis=0),
+                                                 noise=noise, mode=mode)
+        np.testing.assert_array_equal(np.asarray(signs_d),
+                                      np.asarray(signs_s))
+        np.testing.assert_array_equal(np.asarray(energy_d),
+                                      np.asarray(energy_s))
+
+    def test_sign_from_energy_odd_length_falls_back(self):
+        # k with no aligned block divisor exercises the block_k == k path
+        energy = jnp.asarray(np.linspace(-3, 3, 771).astype("f4"))
+        signs, e = ops.sign_from_energy(energy, mode="interpret")
+        signs_r, e_r = ref.sign_from_energy_ref(energy)
+        np.testing.assert_array_equal(np.asarray(signs),
+                                      np.asarray(signs_r))
+        np.testing.assert_array_equal(np.asarray(e), np.asarray(e_r))
+
 
 class TestFairKUpdate:
     @pytest.mark.parametrize("d,block", [(8192, 1024), (65536, 65536),

@@ -27,6 +27,49 @@ def test_majority_vote_robust_to_moderate_noise():
     assert float((out == 1.0).mean()) == 1.0
 
 
+def test_one_bit_preserves_dtype():
+    for dt in (jnp.float32, jnp.bfloat16, jnp.float16):
+        x = jnp.asarray([-1.5, 0.0, 2.0], dt)
+        out = quantize.one_bit(x)
+        assert out.dtype == dt
+        np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                      [-1.0, 1.0, 1.0])
+
+
+def test_one_bit_output_is_fixed_magnitude():
+    """The uplink carries SIGNS only: every output coordinate is exactly
+    +-1 whatever the input scale (the server applies a fixed-magnitude
+    update — no gradient magnitude survives the quantizer)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(scale=[1e-6, 1.0, 1e6], size=(64, 3))
+                    .astype("f4"))
+    out = np.asarray(quantize.one_bit(x))
+    assert set(np.unique(out)) <= {-1.0, 1.0}
+    np.testing.assert_array_equal(out, np.where(np.asarray(x) >= 0,
+                                                1.0, -1.0))
+
+
+def test_majority_from_energy_matches_vote_matrix():
+    """The streaming fold reduces the (N, k) vote matrix to its energy row
+    before detection — same key walk, bit-identical output."""
+    rng = np.random.default_rng(5)
+    votes = jnp.asarray(np.sign(rng.normal(size=(7, 33)) + 0.1)
+                        .astype("f4"))
+    key = jax.random.PRNGKey(11)
+    for ns in (0.0, 0.7):
+        dense = quantize.fsk_majority_vote(key, votes, noise_std=ns)
+        streamed = quantize.fsk_majority_from_energy(
+            key, votes.sum(axis=0), noise_std=ns)
+        np.testing.assert_array_equal(np.asarray(dense),
+                                      np.asarray(streamed))
+
+
+def test_majority_from_energy_tie_is_positive():
+    energy = jnp.asarray([0.0, -0.0, 2.0, -2.0])
+    out = quantize.fsk_majority_from_energy(jax.random.PRNGKey(0), energy)
+    np.testing.assert_array_equal(np.asarray(out), [1.0, 1.0, 1.0, -1.0])
+
+
 def test_one_bit_round_stale_preserved():
     rng = np.random.default_rng(0)
     grads = jnp.asarray(rng.normal(size=(5, 32)).astype("f4"))

@@ -32,6 +32,10 @@ ARTIFACT = os.path.join(ROOT, "benchmarks", "artifacts",
 BASELINE = os.path.join(ROOT, "benchmarks", "BENCH_packed.json")
 POPULATION_ARTIFACT = os.path.join(ROOT, "benchmarks", "artifacts",
                                    "population_bench.json")
+CLIENT_ARTIFACT = os.path.join(ROOT, "benchmarks", "artifacts",
+                               "client_bench.json")
+CLIENT_SMOKE_ARTIFACT = os.path.join(ROOT, "benchmarks", "artifacts",
+                                     "client_bench_smoke.json")
 
 # structural counters: exact match required
 STRUCTURAL = {
@@ -87,6 +91,22 @@ STRUCTURAL_POPULATION = {
     "fused_calls_population": 1,
 }
 
+# the streaming client aggregation (DESIGN.md §17): the FL trainer's
+# client phase is a lax.scan over cohort chunks — exactly ONE streaming
+# accumulation pass per traced round, NO live (N, d) float32 gradient
+# matrix when client_chunk < N, and the packed server phase downstream
+# keeps its single instrumented read of the persisted gradient buffer.
+# Checked from benchmarks/artifacts/client_bench.json (or the --smoke
+# artifact) when present (strict), with a warning when the client bench
+# did not run.  Structural only — the clients/sec throughput and the
+# live-byte scaling live in the artifact / BENCH_clients.json for the
+# record (the byte counts are also asserted inside the bench itself).
+STRUCTURAL_CLIENTS = {
+    "client_stream_passes": 1,
+    "client_nd_live": 0,
+    "g_reads_fl_packed": 1,
+}
+
 # speedup ratios guarded against the committed baseline (lower = worse).
 # Only the fused-round ratios are guarded: they compare near-identical
 # program shapes on the same box, so they travel across runner hardware.
@@ -123,6 +143,7 @@ def main() -> int:
     ap.add_argument("--artifact", default=ARTIFACT)
     ap.add_argument("--baseline", default=BASELINE)
     ap.add_argument("--population-artifact", default=POPULATION_ARTIFACT)
+    ap.add_argument("--client-artifact", default=CLIENT_ARTIFACT)
     args = ap.parse_args()
 
     with open(args.artifact) as f:
@@ -155,6 +176,26 @@ def main() -> int:
         print(f"[bench-regression] WARNING: no population artifact at "
               f"{args.population_artifact} — population structural "
               f"counters not checked (run benchmarks.population_bench)")
+
+    client_path = args.client_artifact
+    if not os.path.exists(client_path) and os.path.exists(
+            CLIENT_SMOKE_ARTIFACT):
+        client_path = CLIENT_SMOKE_ARTIFACT
+    if os.path.exists(client_path):
+        with open(client_path) as f:
+            cli = json.load(f)
+        for key, want in STRUCTURAL_CLIENTS.items():
+            got = cli.get(key)
+            ok = (got is not None and list(got) == want
+                  if isinstance(want, list) else got == want)
+            if not ok:
+                failures.append(
+                    f"STRUCTURAL (clients) {key}: expected {want}, "
+                    f"got {got}")
+    else:
+        print(f"[bench-regression] WARNING: no client artifact at "
+              f"{client_path} — streaming-aggregation structural "
+              f"counters not checked (run benchmarks.client_bench)")
     for key in GUARDED_RATIOS:
         b, c = base.get(key), cur.get(key)
         if b is None or c is None:
